@@ -1,0 +1,59 @@
+"""Paper Figure 4 proxy: BSpMM kernel profile vs the dense/tensor baseline.
+
+Without NSight on this box, we report the structural counters that DRIVE the
+paper's profile deltas: bytes moved per edge, words touched per output, and
+popcount-op counts — plus wall time of the jnp word-level path and the Pallas
+kernel (interpret mode; the kernel is the TPU artifact)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitops, frdc
+from repro.core.binarize import BinTensor
+from repro.core.bspmm import bspmm
+from repro.kernels import bspmm_kernel
+
+from .common import csv_row, time_fn
+
+
+def _pair(n, density, f, seed):
+    rng = np.random.default_rng(seed)
+    a = (rng.random((n, n)) < density).astype(np.float32)
+    act = rng.choice([-1.0, 1.0], size=(n, f)).astype(np.float32)
+    return a, act
+
+
+def run(full: bool = False) -> None:
+    cases = [("matpair_sparse", 512 if not full else 4096, 0.01, 128),
+             ("matpair_denser", 256 if not full else 2048, 0.08, 128)]
+    for name, n, density, f in cases:
+        a, act = _pair(n, density, f, seed=1)
+        adj = frdc.from_dense(a)
+        st = frdc.stats(adj)
+        xp = bitops.pack_bits(act > 0)
+        xt = BinTensor(packed=xp, scale=jnp.ones((n, 1)), n=f)
+        ad = jnp.asarray(a)
+        xd = jnp.asarray(act)
+
+        t_dense = time_fn(jax.jit(lambda X: ad @ X), xd, repeats=3)
+        # BinTensor/FRDCMatrix carry static int fields: close over them
+        # rather than passing as jit args.
+        t_words = time_fn(jax.jit(lambda p: bspmm(
+            adj, BinTensor(packed=p, scale=xt.scale, n=f), "BBF")),
+            xt.packed, repeats=3)
+        t_kernel = time_fn(
+            lambda x: bspmm_kernel.bspmm_bits(adj, x, f, binarize=False),
+            xp, repeats=1, warmup=1)
+
+        fp_bytes_per_edge = 8.0                       # CSR value+index
+        bit_bytes_per_edge = st["frdc_bytes"] / max(st["nnz"], 1)
+        csv_row(f"fig4/{name}/dense_fp32", t_dense * 1e6,
+                f"bytes_per_edge={fp_bytes_per_edge:.2f}")
+        csv_row(f"fig4/{name}/bspmm_words", t_words * 1e6,
+                f"bytes_per_edge={bit_bytes_per_edge:.2f};"
+                f"pad_frac={st['pad_fraction']:.2f}")
+        csv_row(f"fig4/{name}/bspmm_pallas_interp", t_kernel * 1e6,
+                f"groups={st['n_groups']};"
+                f"popc_per_out_word=2")

@@ -1,0 +1,166 @@
+"""Paper Tables 3/4/5: end-to-end GNN inference latency + memory across the
+five execution backends (FP32 scatter / FP32 tensor / Bi-GCN / Ours(full) /
+Ours(bin)) on stat-matched synthetic graphs.
+
+CPU caveat (recorded in EXPERIMENTS.md): this box has no GPU/TPU, so wall
+times show CPU ratios, not the paper's GPU ratios; the MEMORY columns are
+exact (bit-representation sizes are hardware-independent) and the kernels'
+bit-manipulation structure is identical to the TPU target.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitops, frdc
+from repro.core.binarize import BinTensor
+from repro.graphs.datasets import make_dataset
+from repro.models import gnn
+
+from .common import csv_row, time_fn, tree_bytes
+
+
+def _memory_bytes(d, model_params, mode: str) -> int:
+    """Peak-memory proxy: graph + features + weights (paper's Peak Mem)."""
+    n, f = d.x.shape
+    w_bytes = tree_bytes(model_params)
+    if mode == "fp32":
+        adj = d.n_edges * 8 + (n + 1) * 4           # CSR fp32
+        feat = n * f * 4
+        return adj + feat + w_bytes
+    m = frdc.from_coo(d.edges[0], d.edges[1], n, n)
+    adj = m.nbytes()
+    if mode == "full":                               # bin weights, fp agg
+        feat = n * f * 4
+        return adj + feat + w_bytes // 32 + n * 4
+    feat = n * ((f + 31) // 32) * 4                  # packed activations
+    return adj + feat + w_bytes // 32 + n * 4
+
+
+def bench_gcn(dataset: str, scale: float, hidden: int = 64) -> None:
+    d = make_dataset(dataset, seed=0, scale=scale)
+    x = jnp.asarray(d.x)
+    adj = frdc.gcn_normalized(d.edges[0], d.edges[1], d.n_nodes)
+    adj_bin = frdc.from_coo(d.edges[0], d.edges[1], d.n_nodes, d.n_nodes)
+    adj_dense = frdc.to_dense(adj)
+    edges = jnp.asarray(np.concatenate(
+        [d.edges, np.stack([np.arange(d.n_nodes)] * 2)], axis=1))
+    params = gnn.init_gcn(jax.random.PRNGKey(0), d.x.shape[1], hidden,
+                          d.n_classes)
+    q = gnn.quantize_gcn(params)
+
+    norm = 1.0 / jnp.sqrt(jnp.bincount(edges[0], length=d.n_nodes) + 1.0)
+
+    @jax.jit
+    def fp32_scatter(x):
+        p = params
+        h = x @ p.w1
+        h = gnn.aggregate_scatter(edges, h * norm[:, None], d.n_nodes) \
+            * norm[:, None]
+        h = jax.nn.relu(h)
+        h2 = h @ p.w2
+        return gnn.aggregate_scatter(edges, h2 * norm[:, None], d.n_nodes) \
+            * norm[:, None]
+
+    @jax.jit
+    def fp32_tensor(x):
+        return gnn.gcn_forward_fp(params, x, adj_dense)
+
+    @jax.jit
+    def bigcn(x):
+        return gnn.gcn_forward_bigcn(params, x, adj_dense)
+
+    @jax.jit
+    def ours_full(x):
+        return gnn.gcn_forward_bitgnn(q, x, adj, adj_bin, scheme="full")
+
+    @jax.jit
+    def ours_bin(x):
+        return gnn.gcn_forward_bitgnn(q, x, adj, adj_bin, scheme="bin")
+
+    rows = [
+        ("FP32(S)", fp32_scatter, "fp32"),
+        ("FP32(T)", fp32_tensor, "fp32"),
+        ("Bi-GCN", bigcn, "fp32"),
+        ("Ours(full)", ours_full, "full"),
+        ("Ours(bin)", ours_bin, "bin"),
+    ]
+    base = None
+    for name, fn, mode in rows:
+        t = time_fn(fn, x, repeats=3, warmup=1)
+        base = base or t
+        mem = _memory_bytes(d, params, mode)
+        csv_row(f"table3/gcn/{dataset}/{name}", t * 1e6,
+                f"mem_mb={mem/1e6:.2f};speedup={base/t:.2f}x")
+
+
+def bench_sage(dataset: str, scale: float, hidden: int = 64) -> None:
+    d = make_dataset(dataset, seed=0, scale=scale)
+    x = jnp.asarray(d.x)
+    adj_mean = frdc.mean_normalized(d.edges[0], d.edges[1], d.n_nodes)
+    adj_mean_dense = frdc.to_dense(adj_mean)
+    params = gnn.init_sage(jax.random.PRNGKey(1), d.x.shape[1], hidden,
+                           d.n_classes)
+    q = gnn.quantize_sage(params)
+
+    @jax.jit
+    def fp32_tensor(x):
+        return gnn.sage_forward_fp(params, x, adj_mean_dense)
+
+    @jax.jit
+    def bigcn(x):
+        return gnn.sage_forward_bigcn(params, x, adj_mean_dense)
+
+    @jax.jit
+    def ours(x):
+        return gnn.sage_forward_bitgnn(q, x, adj_mean)
+
+    rows = [("FP32(T)", fp32_tensor, "fp32"),
+            ("Bi-GCN", bigcn, "fp32"),
+            ("Ours(bin)", ours, "bin")]
+    base = None
+    for name, fn, mode in rows:
+        t = time_fn(fn, x, repeats=3, warmup=1)
+        base = base or t
+        mem = _memory_bytes(d, params, mode)
+        csv_row(f"table4/sage/{dataset}/{name}", t * 1e6,
+                f"mem_mb={mem/1e6:.2f};speedup={base/t:.2f}x")
+
+
+def bench_saint(dataset: str, scale: float, hidden: int = 64) -> None:
+    d = make_dataset(dataset, seed=0, scale=scale)
+    x = jnp.asarray(d.x)
+    adj_sum = frdc.from_coo(d.edges[0], d.edges[1], d.n_nodes, d.n_nodes)
+    adj_dense = frdc.to_dense(adj_sum)
+    params = gnn.init_saint(jax.random.PRNGKey(2), d.x.shape[1], hidden,
+                            d.n_classes)
+    q = gnn.quantize_saint(params)
+
+    @jax.jit
+    def fp32_tensor(x):
+        return gnn.saint_forward_fp(params, x, adj_dense)
+
+    @jax.jit
+    def ours(x):
+        return gnn.saint_forward_bitgnn(q, x, adj_sum)
+
+    rows = [("FP32(T)", fp32_tensor, "fp32"),
+            ("Ours(bin)", ours, "bin")]
+    base = None
+    for name, fn, mode in rows:
+        t = time_fn(fn, x, repeats=3, warmup=1)
+        base = base or t
+        mem = _memory_bytes(d, params, mode)
+        csv_row(f"table5/saint/{dataset}/{name}", t * 1e6,
+                f"mem_mb={mem/1e6:.2f};speedup={base/t:.2f}x")
+
+
+def run(full: bool = False) -> None:
+    bench_gcn("cora", 1.0 if full else 0.5)
+    bench_gcn("pubmed", 1.0 if full else 0.15)
+    bench_gcn("citeseer", 1.0 if full else 0.5)
+    bench_sage("flickr", 1.0 if full else 0.02)
+    bench_saint("flickr", 1.0 if full else 0.02)

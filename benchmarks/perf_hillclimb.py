@@ -1,0 +1,144 @@
+"""§Perf hillclimbing driver: re-runs a dry-run cell with an optimization
+variant and reports the three roofline terms vs the recorded baseline.
+
+    PYTHONPATH=src python -m benchmarks.perf_hillclimb --cell A1
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+# hypothesis -> change catalogue; each entry re-runs one cell with overrides.
+VARIANTS = {
+    # --- Cell A: qwen2-moe train_4k (most collective-bound) ---------------
+    "A-base": dict(arch="qwen2-moe-a2.7b", shape="train_4k", cfg={}),
+    "A1-grouped-dispatch": dict(
+        arch="qwen2-moe-a2.7b", shape="train_4k",
+        cfg=dict(moe_groups=16),
+        hypothesis="global dispatch all-gathers the (1M, d) token buffer per "
+                   "MoE layer; per-dp-shard dispatch keeps routing local so "
+                   "collective bytes drop ~dp x on the dispatch path"),
+    "A2-grouped-no-seqshard": dict(
+        arch="qwen2-moe-a2.7b", shape="train_4k",
+        cfg=dict(moe_groups=16), opts=dict(seq_shard=False),
+        hypothesis="after A1, the per-layer boundary reshard (seq-parallel "
+                   "all-gather + reduce-scatter) remains; d=2048 activations "
+                   "fit per-device WITHOUT sequence sharding (268MB/boundary "
+                   "x24 under remat) -> drop it, removing 2 collectives/"
+                   "layer/pass at slightly higher activation memory"),
+    "A3-shardmap-moe": dict(
+        arch="qwen2-moe-a2.7b", shape="train_4k",
+        cfg=dict(moe_groups=-1),
+        hypothesis="A1 REFUTED: XLA cannot prove the grouped scatter is "
+                   "shard-local and gathers the dispatch buffers anyway "
+                   "(all-gather 55->219GB). Make locality EXPLICIT with "
+                   "shard_map: local routing + local experts + one (nl,d) "
+                   "psum/layer. Napkin: 268MB x2 x24 layers x3 passes "
+                   "~ 38GB/dev ~ 0.8s collective (vs 208s baseline)"),
+    # --- Cell B: llava-34b decode_32k (memory-bound, worst-ish fraction) --
+    "B-base": dict(arch="llava-next-34b", shape="decode_32k", cfg={}),
+    "B1-int8-kv": dict(
+        arch="llava-next-34b", shape="decode_32k",
+        cfg=dict(kv_cache_quant="int8"),
+        hypothesis="decode reads the whole KV cache per token; int8+scales "
+                   "halves cache bytes -> memory term ~2x down"),
+    "B2-gqa-norepeat": dict(
+        arch="llava-next-34b", shape="decode_32k",
+        cfg={}, gqa_no_repeat=True,
+        hypothesis="jnp.repeat expands KV 4x (64 q / 16 kv-compute heads) "
+                   "before the dots; grouped einsum reads the cache once -> "
+                   "attention bytes ~4x down on the cache-read path"),
+    "B3-int8-norepeat": dict(
+        arch="llava-next-34b", shape="decode_32k",
+        cfg=dict(kv_cache_quant="int8"), gqa_no_repeat=True,
+        hypothesis="compose B1+B2: int8 halves stored-cache bytes, grouped "
+                   "einsum removes the 4x read amplification — predict "
+                   "memory term ~0.26s -> <0.1s"),
+    # --- Cell C: rwkv6 long_500k (paper technique: binary weights) --------
+    "C-base": dict(arch="rwkv6-3b", shape="long_500k", cfg={}),
+    "C1-bitgnn": dict(
+        arch="rwkv6-3b", shape="long_500k", quant="bitgnn",
+        hypothesis="attention-free decode at B=1 is weight-read-bound; "
+                   "BitGNN packed projections cut the dominant memory "
+                   "term toward 16x (uint32 bits + unpack temp traffic)"),
+    # --- transfer check: does A3 generalize to the other MoE arch? --------
+    "A4-llama4-shardmap": dict(
+        arch="llama4-scout-17b-a16e", shape="train_4k",
+        cfg=dict(moe_groups=-1),
+        hypothesis="A3's explicit-SPMD dispatch is arch-independent; "
+                   "llama4-scout (16e top-1, 5120d) baseline coll=279.0s "
+                   "should drop by a similar ~25x factor"),
+    "C2-bitgnn-replicated": dict(
+        arch="rwkv6-3b", shape="long_500k", quant="bitgnn",
+        quant_replicate=True,
+        hypothesis="C1 was REFUTED: word-sharded packed weights force an "
+                   "all-gather to reassemble the contraction dim, and the "
+                   "in-graph unpack writes the full bf16 temp anyway. "
+                   "Packed weights are 32x smaller -> REPLICATE them "
+                   "(22MB/chip): the collective regression disappears; the "
+                   "unpack temp remains (kernel-level fusion — our Pallas "
+                   "bmm_xnor — is the real fix on TPU, which XLA-CPU "
+                   "accounting cannot show)"),
+}
+
+
+def run_variant(name: str) -> dict:
+    from repro.launch.dryrun import run_cell
+    from repro.models import layers
+    from repro.distributed import sharding as shd
+    v = VARIANTS[name]
+    overrides = dict(v.get("opts", {}))
+    layers.GQA_NO_REPEAT = bool(v.get("gqa_no_repeat", False))
+    shd.QUANT_REPLICATE = bool(v.get("quant_replicate", False))
+    result = run_cell(v["arch"], v["shape"], "single",
+                      quant=v.get("quant", "none"),
+                      probe=True,
+                      opt_overrides=overrides or None,
+                      cfg_overrides=v.get("cfg") or None)
+    layers.GQA_NO_REPEAT = False
+    shd.QUANT_REPLICATE = False
+    result["variant"] = name
+    result["hypothesis"] = v.get("hypothesis", "(baseline)")
+    out = RESULTS / "perf" / f"{name}.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(result, indent=2))
+    return result
+
+
+def summarize(names):
+    from .roofline import analyze
+    rows = []
+    for n in names:
+        p = RESULTS / "perf" / f"{n}.json"
+        if not p.exists():
+            continue
+        r = json.loads(p.read_text())
+        a = analyze(r)
+        rows.append((n, a))
+    print(f"{'variant':26s} {'compute':>9s} {'memory':>9s} {'coll':>9s} "
+          f"{'dominant':>10s} {'frac':>7s}")
+    for n, a in rows:
+        t = a["terms"]
+        print(f"{n:26s} {t['compute']:9.4f} {t['memory']:9.4f} "
+              f"{t['collective']:9.4f} {a['dominant']:>10s} "
+              f"{a['roofline_fraction']:7.4f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True,
+                    help="variant name or prefix (A/B/C runs all of a cell)")
+    args = ap.parse_args()
+    names = [n for n in VARIANTS if n.startswith(args.cell)]
+    for n in names:
+        if not (RESULTS / "perf" / f"{n}.json").exists():
+            print(f"[run] {n}: {VARIANTS[n].get('hypothesis', 'baseline')}")
+            run_variant(n)
+    summarize(names)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape) from the
+dry-run's compiled artifacts.
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs        (197 TFLOP/s bf16)
+    memory     = HLO_bytes_per_device / HBM_bw            (819 GB/s)
+    collective = wire_bytes_per_device / ICI_bw           (50 GB/s/link x 2
+                 links usable per torus axis on v5e; we charge 1 link —
+                 conservative)
+
+plus MODEL_FLOPS (6ND train / 2ND inference, N_active for MoE) and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs_total.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def model_flops_per_step(rec: dict) -> float:
+    """Analytic MODEL_FLOPS for the whole step, all devices."""
+    from repro.configs import SHAPES, get_config
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    n_active = rec["model"]["active_params"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch * 1          # one new token per request
+    return 2.0 * n_active * tokens
+
+
+def analyze(rec: dict) -> dict:
+    n_dev = rec["n_devices"]
+    t_compute = rec["flops_per_device"] / PEAK_FLOPS
+    t_memory = rec["bytes_per_device"] / HBM_BW
+    t_coll = rec["collective_bytes_per_device"] / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_step(rec)
+    hlo_total = rec["flops_per_device"] * n_dev
+    useful = mf / hlo_total if hlo_total else float("nan")
+    bound = max(terms.values())
+    # roofline fraction: useful model flops per second at the bound time,
+    # relative to the cluster's peak.
+    frac = (mf / bound) / (n_dev * PEAK_FLOPS) if bound else float("nan")
+    return dict(rec=rec, terms=terms, dominant=dominant,
+                model_flops=mf, useful_ratio=useful,
+                step_time_bound_s=bound, roofline_fraction=frac)
+
+
+def load_all(mesh: str = "single"):
+    out = []
+    for p in sorted(RESULTS.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("mesh") == mesh:
+            out.append(analyze(rec))
+    return out
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| useful ratio | roofline frac | HBM/dev GB |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        rec = r["rec"]
+        mem_gb = rec["memory"]["per_device_hbm_bytes"] / 1e9
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} "
+            f"| {r['terms']['compute']:.4f} | {r['terms']['memory']:.4f} "
+            f"| {r['terms']['collective']:.4f} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.3f} | {r['roofline_fraction']:.3f} "
+            f"| {mem_gb:.2f} |")
+    return hdr + "\n".join(lines)
+
+
+def main() -> None:
+    rows = load_all("single")
+    print(markdown_table(rows))
+    print()
+    multi = load_all("multi")
+    print(f"multi-pod cells compiled: {len(multi)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: BitGNN-on-TPU — multi-pod JAX framework (see README.md)."""
+__version__ = "1.0.0"

@@ -1,0 +1,15 @@
+"""BitGNN core: the paper's contribution as composable JAX modules."""
+from . import abstraction, binarize, bitops, bmm, bspmm, frdc, tuner
+from .abstraction import MMSpMM, MMAdd, check_chain, op, precision_of
+from .binarize import BinTensor, binarize_matrix, dequantize, straight_through_sign
+from .bmm import bmm as bmm_apply, quantize_act, quantize_weight
+from .bspmm import bspmm as bspmm_apply
+from .frdc import FRDCMatrix, from_coo, from_dense, gcn_normalized, mean_normalized
+
+__all__ = [
+    "abstraction", "binarize", "bitops", "bmm", "bspmm", "frdc", "tuner",
+    "MMSpMM", "MMAdd", "check_chain", "op", "precision_of",
+    "BinTensor", "binarize_matrix", "dequantize", "straight_through_sign",
+    "bmm_apply", "quantize_act", "quantize_weight", "bspmm_apply",
+    "FRDCMatrix", "from_coo", "from_dense", "gcn_normalized", "mean_normalized",
+]

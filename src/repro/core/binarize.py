@@ -1,0 +1,124 @@
+"""Binarization ops: BIN / SCL / BN and the redundant-SCL elision (paper §3.1.2).
+
+Bi-GCN-style binarization factorizes a full-precision matrix ``X`` as
+``diag(alpha) @ sign(X)`` (row-wise) or ``sign(X) @ diag(beta)`` (column-wise),
+where the scale vectors are L1 means — always positive. BitGNN's insight: when
+a BIN immediately follows an SCL, the SCL cannot flip any sign, so it is
+removed; the high-level ops below carry an ``elide_scale`` flag that the
+abstraction layer sets when composing chains.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import bitops
+
+
+class BinTensor(NamedTuple):
+    """A binarized matrix: packed sign bits + positive scale factors.
+
+    ``packed``: (..., rows, words) uint32, bits packed along the last logical
+    axis (columns). ``scale``: broadcastable positive factors (row-wise
+    (rows, 1) or column-wise (1, cols)) recovering magnitude; ``n``: logical
+    column count (pre-padding).
+    """
+    packed: jax.Array
+    scale: jax.Array
+    n: int
+
+    @property
+    def shape(self):
+        return (*self.packed.shape[:-1], self.n)
+
+
+def bin_op(x: jax.Array, axis: int = -1) -> jax.Array:
+    """BIN: sign-binarize-and-pack along ``axis`` (bit=1 iff x>=0)."""
+    return bitops.sign_bits(x, axis=axis)
+
+
+def row_l1_scale(x: jax.Array) -> jax.Array:
+    """Bi-GCN row-wise scale: mean |x| per row (positive)."""
+    return jnp.mean(jnp.abs(x), axis=-1, keepdims=True)
+
+
+def col_l1_scale(x: jax.Array) -> jax.Array:
+    """Bi-GCN column-wise scale: mean |x| per column (positive)."""
+    return jnp.mean(jnp.abs(x), axis=-2, keepdims=True)
+
+
+def binarize_matrix(x: jax.Array, scale: str = "row") -> BinTensor:
+    """Factorize ``x ~= scale * sign(x)`` and pack the signs."""
+    if scale == "row":
+        s = row_l1_scale(x)
+    elif scale == "col":
+        s = col_l1_scale(x)
+    elif scale == "none":
+        s = jnp.ones((*x.shape[:-2], 1, 1), x.dtype)
+    else:
+        raise ValueError(scale)
+    return BinTensor(packed=bin_op(x, axis=-1), scale=s, n=x.shape[-1])
+
+
+def dequantize(t: BinTensor, dtype=jnp.float32) -> jax.Array:
+    """Recover the (approximate) full-precision matrix for oracles/tests."""
+    pm1 = bitops.unpack_pm1(t.packed, t.n, axis=-1, dtype=dtype)
+    return pm1 * t.scale
+
+
+def scl_op(x: jax.Array, scale: jax.Array, elide: bool = False) -> jax.Array:
+    """SCL: multiply by (positive) scale factors; no-op when elided.
+
+    ``elide=True`` is set by the abstraction layer when the consumer is a BIN:
+    positive scaling never changes sign(x) (paper §3.1.2).
+    """
+    if elide:
+        return x
+    return x * scale
+
+
+class BNParams(NamedTuple):
+    gamma: jax.Array
+    beta: jax.Array
+    mean: jax.Array
+    var: jax.Array
+    eps: float = 1e-5
+
+
+def bn_op(x: jax.Array, p: BNParams) -> jax.Array:
+    """Inference-time batch norm (affine with running stats)."""
+    inv = p.gamma * jax.lax.rsqrt(p.var + p.eps)
+    return x * inv + (p.beta - p.mean * inv)
+
+
+def bn_bin_threshold(p: BNParams) -> jax.Array:
+    """Fold BN into the following BIN: sign(BN(x)) == (x >= t) when gamma>0.
+
+    Returns the threshold ``t = mean - beta*sqrt(var+eps)/gamma``. The fused
+    form removes the affine entirely from the binarized path (beyond the
+    paper's SCL elision, same spirit: affine ops feeding a sign are folded).
+    Only valid where gamma > 0; callers fall back to bn_op+bin_op otherwise.
+    """
+    return p.mean - p.beta * jnp.sqrt(p.var + p.eps) / p.gamma
+
+
+def straight_through_sign(x: jax.Array) -> jax.Array:
+    """sign(x) in {-1,+1} with a straight-through (clipped identity) gradient.
+
+    Used to TRAIN binary GNN/LM weights so accuracy-parity experiments can be
+    run end-to-end (Bi-GCN's training recipe, §5 related work).
+    """
+    @jax.custom_vjp
+    def _sign(v):
+        return jnp.where(v >= 0, 1.0, -1.0).astype(v.dtype)
+
+    def _fwd(v):
+        return _sign(v), v
+
+    def _bwd(v, g):
+        return (g * (jnp.abs(v) <= 1.0).astype(g.dtype),)
+
+    _sign.defvjp(_fwd, _bwd)
+    return _sign(x)

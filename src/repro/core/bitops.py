@@ -1,0 +1,175 @@
+"""Bit-level primitives for BitGNN on TPU.
+
+Conventions
+-----------
+* Bits are packed along a chosen axis into ``uint32`` words, LSB-first:
+  bit ``j`` of word ``w`` holds element ``w*32 + j``.
+* Binary activations/weights use the BNN convention: stored bit ``1`` means
+  value ``+1``, stored bit ``0`` means value ``-1`` (paper §2.2).
+* Binary adjacency uses the graph convention: bit ``1`` means an edge, ``0``
+  means no edge (paper §3.2.2).
+* Padding bits (introduced to round lengths up to multiples of 32) are ``0``
+  in both operands; every dot-product below is pad-safe given that invariant.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+WORD = 32
+_U32 = jnp.uint32
+
+popcount = jax.lax.population_count
+
+
+def _bit_weights() -> jax.Array:
+    return jnp.left_shift(jnp.uint32(1), jnp.arange(WORD, dtype=_U32))
+
+
+def padded_words(n: int) -> int:
+    """Number of uint32 words needed to hold ``n`` bits."""
+    return (n + WORD - 1) // WORD
+
+
+def pack_bits(bits: jax.Array, axis: int = -1) -> jax.Array:
+    """Pack a {0,1}/bool array along ``axis`` into uint32 words (LSB-first).
+
+    ``bits.shape[axis]`` need not be a multiple of 32; missing bits pad as 0.
+    """
+    bits = jnp.asarray(bits)
+    axis = axis % bits.ndim
+    n = bits.shape[axis]
+    pad = (-n) % WORD
+    if pad:
+        widths = [(0, 0)] * bits.ndim
+        widths[axis] = (0, pad)
+        bits = jnp.pad(bits, widths)
+    bits = jnp.moveaxis(bits, axis, -1)
+    grouped = bits.reshape(*bits.shape[:-1], (n + pad) // WORD, WORD).astype(_U32)
+    packed = jnp.sum(grouped * _bit_weights(), axis=-1, dtype=_U32)
+    return jnp.moveaxis(packed, -1, axis)
+
+
+def unpack_bits(packed: jax.Array, n: int, axis: int = -1) -> jax.Array:
+    """Inverse of :func:`pack_bits`; returns int32 {0,1} with length ``n``."""
+    packed = jnp.asarray(packed, _U32)
+    axis = axis % packed.ndim
+    words = jnp.moveaxis(packed, axis, -1)
+    bits = (words[..., :, None] >> jnp.arange(WORD, dtype=_U32)) & jnp.uint32(1)
+    bits = bits.reshape(*words.shape[:-1], words.shape[-1] * WORD)[..., :n]
+    return jnp.moveaxis(bits.astype(jnp.int32), -1, axis)
+
+
+def sign_bits(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Binarize-and-pack: bit=1 iff x >= 0 (the BNN ``sign`` of paper §2.2)."""
+    return pack_bits(x >= 0, axis=axis)
+
+
+def unpack_pm1(packed: jax.Array, n: int, axis: int = -1,
+               dtype=jnp.float32) -> jax.Array:
+    """Unpack BNN-convention bits to ±1 values of ``dtype``."""
+    bits = unpack_bits(packed, n, axis=axis)
+    return (2 * bits - 1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Word-level dot products (the paper's §2.2 / §3.2.2 identities).
+# All reduce over the LAST axis (the packed-word axis) of their operands.
+# ---------------------------------------------------------------------------
+
+def xnor_dot(a: jax.Array, b: jax.Array, n_bits) -> jax.Array:
+    """±1·±1 dot product: ``n - 2*popc(a XOR b)`` (paper §2.2).
+
+    Pad-safe: pads are 0 in both, XOR of pads is 0, contributes nothing.
+    """
+    return jnp.asarray(n_bits, jnp.int32) - 2 * jnp.sum(
+        popcount(a ^ b), axis=-1, dtype=jnp.int32)
+
+
+def and_dot(a: jax.Array, b: jax.Array) -> jax.Array:
+    """0/1·0/1 dot product: ``popc(a AND b)`` (paper §2.2)."""
+    return jnp.sum(popcount(a & b), axis=-1, dtype=jnp.int32)
+
+
+def trinary_dot_s2(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Adjacency(0/1)·activation(±1): ``popc(a&b) - popc(a&~b)`` (§3.2.2 S2)."""
+    return jnp.sum(popcount(a & b).astype(jnp.int32)
+                   - popcount(a & ~b).astype(jnp.int32), axis=-1)
+
+
+def trinary_dot_s3(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Adjacency(0/1)·activation(±1): ``2*popc(a&b) - popc(a)`` (§3.2.2 S3)."""
+    return jnp.sum(2 * popcount(a & b).astype(jnp.int32)
+                   - popcount(a).astype(jnp.int32), axis=-1)
+
+
+def trinary_dot_s1(a_bits: jax.Array, b_pm1: jax.Array) -> jax.Array:
+    """§3.2.2 S1 — if/else on a's nonzeros, for UNPACKED operands.
+
+    ``a_bits`` is {0,1}, ``b_pm1`` is ±1 (or full-precision). Reduces last axis.
+    On TPU the if/else becomes a lane ``select`` — used by the F-activation
+    variants where b never exists in packed form.
+    """
+    return jnp.sum(jnp.where(a_bits != 0, b_pm1, 0), axis=-1)
+
+
+TRINARY_MODES = ("s1_select", "s2_and_andnot", "s3_two_popc")
+
+
+def trinary_dot(a: jax.Array, b: jax.Array, mode: str = "s3_two_popc"):
+    if mode == "s2_and_andnot":
+        return trinary_dot_s2(a, b)
+    if mode == "s3_two_popc":
+        return trinary_dot_s3(a, b)
+    raise ValueError(f"packed trinary mode must be s2/s3, got {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# 32x32 bit-matrix transpose (TPU replacement for ballot+brev, paper §3.3 ④).
+# ---------------------------------------------------------------------------
+
+def bit_transpose_32(words: jax.Array) -> jax.Array:
+    """Transpose a 32x32 bit block.
+
+    ``words``: (..., 32) uint32 where row k's bit f is element (k, f).
+    Returns (..., 32) uint32 where row f's bit k is element (k, f).
+
+    The GPU version uses ``__ballot_sync``+``__brev`` across a warp; on TPU we
+    do a vectorized shift/mask gather — 32x32 bools staged through VREGs.
+    """
+    words = jnp.asarray(words, _U32)
+    # bits[..., k, f] = bit f of word k
+    bits = (words[..., :, None] >> jnp.arange(WORD, dtype=_U32)) & jnp.uint32(1)
+    # out word f collects bit k at position k
+    out = jnp.sum(bits.astype(_U32) * (jnp.uint32(1) << jnp.arange(
+        WORD, dtype=_U32))[..., :, None], axis=-2, dtype=_U32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Reference (unpacked) matmul helpers used widely by oracles/tests.
+# ---------------------------------------------------------------------------
+
+def bmm_xnor_words(a_packed: jax.Array, b_packed: jax.Array,
+                   n_bits) -> jax.Array:
+    """(M, W) x (N, W) packed ±1 matmul -> (M, N) int32 via XNOR-popc."""
+    return xnor_dot(a_packed[:, None, :], b_packed[None, :, :], n_bits)
+
+
+def spmm_trinary_words(adj_packed: jax.Array, act_packed: jax.Array,
+                       mode: str = "s3_two_popc") -> jax.Array:
+    """(M, W) 0/1-adjacency x (N->bits over N) ±1 activations -> (M, F).
+
+    ``adj_packed``: (M, W) bits over neighbor index.
+    ``act_packed``: (F, W) bits over neighbor index (i.e. activations
+    TRANSPOSED and packed along the node axis — the paper's Step ④ layout).
+    """
+    return trinary_dot(adj_packed[:, None, :], act_packed[None, :, :], mode)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits",))
+def packed_memory_bytes(packed: jax.Array, n_bits: int) -> jax.Array:  # pragma: no cover
+    del n_bits
+    return jnp.asarray(packed.size * packed.dtype.itemsize)

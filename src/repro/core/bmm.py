@@ -1,0 +1,110 @@
+"""BMM — dense binary matmul variants (paper §3.1.2, low-level group 1).
+
+Seven variants, named ``BMM.<X><W><O>`` where X = input-activation precision,
+W = weight precision, O = output precision; F = full (fp32/bf16), B = binary.
+
+    FBF, FBB, BBF, BBB, BFF, BFB, FFB
+
+Weight storage for the ``?B?`` variants: ``BinTensor`` of ``W.T`` — packed
+along the contraction axis K with a per-output-column positive scale
+(Bi-GCN's L1 factorization). Binary activations are ``BinTensor`` packed along
+their feature axis (== K) with per-row scale.
+
+Auxiliary BIN/SCL are FUSED into these functions (the paper keeps them inside
+BMM "to avoid invocation overhead"); the SCL-before-BIN elision of §3.1.2 is
+applied automatically whenever the output is binary.
+
+These are the reference (pure-jnp) semantics; ``repro.kernels.ops`` routes the
+hot variants to Pallas kernels on TPU and falls back here on CPU.
+"""
+from __future__ import annotations
+
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+
+from . import bitops
+from .binarize import BinTensor, binarize_matrix, dequantize
+
+BMM_VARIANTS = ("FBF", "FBB", "BBF", "BBB", "BFF", "BFB", "FFB")
+
+
+def quantize_weight(w: jax.Array) -> BinTensor:
+    """Offline weight binarization: BinTensor of W.T with col scales."""
+    return binarize_matrix(w.T, scale="row")
+
+
+def quantize_act(x: jax.Array) -> BinTensor:
+    """Activation binarization with per-row L1 scale (Bi-GCN)."""
+    return binarize_matrix(x, scale="row")
+
+
+def _xnor_matmul(xa: BinTensor, wt: BinTensor) -> jax.Array:
+    """sign(X) @ sign(W) via XNOR-popc on packed words -> (M, N) int32."""
+    assert xa.n == wt.n, (xa.n, wt.n)
+    return bitops.bmm_xnor_words(xa.packed, wt.packed, xa.n)
+
+
+def bmm(x: Union[jax.Array, BinTensor], wt: Union[jax.Array, BinTensor],
+        variant: str, out_scale: bool = True):
+    """Dispatch a BMM variant.
+
+    ``x``: (M, K) fp array for ``F??`` or BinTensor (packed along K) for ``B??``.
+    ``wt``: BinTensor of W.T for ``?B?`` or (K, N) fp array for ``?F?``.
+    Returns (M, N) fp for ``??F`` or BinTensor for ``??B``.
+    ``out_scale``: compute the output BinTensor's row scale (skipped when the
+    caller knows the consumer elides it — e.g. feeding BSpMM.BBB).
+    """
+    if variant not in BMM_VARIANTS:
+        raise ValueError(f"unknown BMM variant {variant!r}")
+    xa, wp, op = variant
+
+    if xa == "F":
+        assert isinstance(x, jax.Array) or not isinstance(x, BinTensor)
+        if wp == "B":
+            w_eff = dequantize(wt).T        # (K, N) = ±1 * col-scale
+            full = x @ w_eff
+        else:  # FFB
+            full = x @ wt
+    else:  # binary activation
+        assert isinstance(x, BinTensor)
+        if wp == "B":
+            acc = _xnor_matmul(x, wt).astype(jnp.float32)
+            if op == "B":
+                # row scale (x.scale) and col scale (wt.scale) are positive:
+                # both elided under the output BIN (§3.1.2 insight).
+                full = acc
+            else:
+                full = acc * x.scale * wt.scale.reshape(1, -1)
+        else:  # BF?: ±1 activation times fp weight
+            xp = bitops.unpack_pm1(x.packed, x.n)      # reference unpack
+            full = (xp @ wt)
+            if op == "F":
+                full = full * x.scale
+
+    if op == "F":
+        return full
+    scale = jnp.mean(jnp.abs(full), axis=-1, keepdims=True) if out_scale \
+        else jnp.ones((full.shape[0], 1), full.dtype)
+    return BinTensor(packed=bitops.sign_bits(full, axis=-1), scale=scale,
+                     n=full.shape[-1])
+
+
+def bmm_reference_fp(x: jax.Array, w: jax.Array, variant: str) -> jax.Array:
+    """Full-precision oracle of what each variant APPROXIMATES.
+
+    Used by accuracy tests: binarizes operands per the variant letters with
+    sign+L1 scaling, then does exact fp math. The packed `bmm` above must
+    agree with this to fp tolerance.
+    """
+    xa, wp, op = variant
+    if xa == "B":
+        xs = jnp.mean(jnp.abs(x), axis=-1, keepdims=True)
+        x = jnp.where(x >= 0, 1.0, -1.0) * xs
+    if wp == "B":
+        ws = jnp.mean(jnp.abs(w), axis=0, keepdims=True)
+        w = jnp.where(w >= 0, 1.0, -1.0) * ws
+    out = x @ w
+    del op  # output binarization handled by the caller
+    return out

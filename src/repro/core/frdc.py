@@ -1,0 +1,231 @@
+"""FRDC — Fine-Representing Dynamic-Coarsening bit-sparse format (paper §3.2.1).
+
+Storage (fine, host-built with numpy):
+    * the adjacency is cut into 4x4 bit-tiles; only non-empty tiles are kept;
+    * tiles of one tile-row (4 matrix rows) are grouped into TILE-GROUPS of 8
+      (zero-padded), so one group covers 32 gathered columns = one machine word;
+    * arrays — ``tiles`` (G, 8) uint16, ``col_idx`` (G, 8) int32,
+      ``group_row`` (G,) int32, ``group_first`` (G,) int32, plus
+      ``row_ptr``/``grp_ptr`` CSR pointers in tile/group units.
+
+Compute (coarse, on device): :func:`coarsen_groups` stitches a group's eight
+4x4 tiles into four 32-bit words (one per matrix row in the tile-row) — the
+TPU analogue of the paper's ``__shfl_sync`` bit-concatenation (Step ③).
+
+Weighted graphs: a normalized adjacency ``D^-1/2 (A+I) D^-1/2`` (GCN) or
+``D^-1 A`` (mean aggregation) factorizes EXACTLY as ``diag(r) @ A_bin @
+diag(c)`` with ``A_bin`` binary — FRDC stores the optional positive ``row_scale``
+/ ``col_scale`` vectors next to the bits (paper §3.1.2 "factorization vector").
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bitops
+
+TILE = 4                # fine tile side (paper's 4x4 choice)
+GROUP = 8               # tiles per group: 8 * 4 = 32 columns = one word
+GROUP_COLS = TILE * GROUP  # 32
+
+
+class FRDCMatrix(NamedTuple):
+    """Device-resident FRDC sparse bit-matrix."""
+    tiles: jax.Array        # (G, GROUP) uint16 — 4x4 bit-tiles, LSB = (r0,c0)
+    col_idx: jax.Array      # (G, GROUP) int32 — tile-column index (pad: 0)
+    group_row: jax.Array    # (G,) int32 — tile-row of each group
+    group_first: jax.Array  # (G,) int32 — 1 iff first group of its tile-row
+    grp_ptr: jax.Array      # (R+1,) int32 — group extents per tile-row
+    n_rows: int
+    n_cols: int
+    nnz: int                # true number of edges (pre-padding)
+    row_scale: Optional[jax.Array] = None  # (n_rows,) positive or None
+    col_scale: Optional[jax.Array] = None  # (n_cols,) positive or None
+
+    @property
+    def n_tile_rows(self) -> int:
+        return -(-self.n_rows // TILE)
+
+    @property
+    def n_groups(self) -> int:
+        return int(self.tiles.shape[0])
+
+    def nbytes(self) -> int:
+        """Device bytes of the bit representation (paper's Peak-Mem metric)."""
+        total = self.tiles.size * 2 + self.col_idx.size * 4
+        total += self.group_row.size * 4 + self.group_first.size * 4
+        total += self.grp_ptr.size * 4
+        for s in (self.row_scale, self.col_scale):
+            if s is not None:
+                total += s.size * s.dtype.itemsize
+        return int(total)
+
+
+def from_coo(rows: np.ndarray, cols: np.ndarray, n_rows: int, n_cols: int,
+             row_scale: Optional[np.ndarray] = None,
+             col_scale: Optional[np.ndarray] = None) -> FRDCMatrix:
+    """Build FRDC from an edge list (host-side, numpy)."""
+    rows = np.asarray(rows, np.int64)
+    cols = np.asarray(cols, np.int64)
+    if rows.size:
+        assert rows.max() < n_rows and cols.max() < n_cols
+    n_tr = -(-n_rows // TILE)
+    n_tc = -(-n_cols // TILE)
+
+    tile_r, in_r = np.divmod(rows, TILE)
+    tile_c, in_c = np.divmod(cols, TILE)
+    tile_id = tile_r * n_tc + tile_c
+    uniq, inv = np.unique(tile_id, return_inverse=True)
+    bits = np.zeros(uniq.shape[0], np.uint16)
+    np.bitwise_or.at(bits, inv, (np.uint16(1) << (in_r * TILE + in_c).astype(np.uint16)))
+    utile_r = (uniq // n_tc).astype(np.int64)
+    utile_c = (uniq % n_tc).astype(np.int64)
+    # np.unique sorts tile_id == (tile_r, tile_c) lexicographically: CSR order.
+    row_counts = np.bincount(utile_r, minlength=n_tr)
+    grp_counts = -(-row_counts // GROUP)
+    grp_counts = np.maximum(grp_counts, 0)
+    G = int(grp_counts.sum())
+    G = max(G, 1)  # keep shapes non-empty for degenerate graphs
+
+    tiles = np.zeros((G, GROUP), np.uint16)
+    col_idx = np.zeros((G, GROUP), np.int32)
+    group_row = np.zeros((G,), np.int32)
+    group_first = np.zeros((G,), np.int32)
+    grp_ptr = np.zeros(n_tr + 1, np.int32)
+
+    row_ptr = np.zeros(n_tr + 1, np.int64)
+    np.cumsum(row_counts, out=row_ptr[1:])
+    g = 0
+    for r in range(n_tr):
+        grp_ptr[r] = g
+        lo, hi = row_ptr[r], row_ptr[r + 1]
+        nt = hi - lo
+        if nt == 0:
+            continue
+        ng = -(-nt // GROUP)
+        row_tiles = np.zeros(ng * GROUP, np.uint16)
+        row_cols = np.zeros(ng * GROUP, np.int32)
+        row_tiles[:nt] = bits[lo:hi]
+        row_cols[:nt] = utile_c[lo:hi]
+        tiles[g:g + ng] = row_tiles.reshape(ng, GROUP)
+        col_idx[g:g + ng] = row_cols.reshape(ng, GROUP)
+        group_row[g:g + ng] = r
+        group_first[g] = 1
+        g += ng
+    grp_ptr[n_tr] = g
+    if g == 0:  # degenerate: single zero group mapped to row 0
+        group_first[0] = 1
+
+    return FRDCMatrix(
+        tiles=jnp.asarray(tiles), col_idx=jnp.asarray(col_idx),
+        group_row=jnp.asarray(group_row), group_first=jnp.asarray(group_first),
+        grp_ptr=jnp.asarray(grp_ptr), n_rows=int(n_rows), n_cols=int(n_cols),
+        nnz=int(rows.size),
+        row_scale=None if row_scale is None else jnp.asarray(row_scale, jnp.float32),
+        col_scale=None if col_scale is None else jnp.asarray(col_scale, jnp.float32),
+    )
+
+
+def from_dense(a: np.ndarray, **kw) -> FRDCMatrix:
+    r, c = np.nonzero(np.asarray(a) != 0)
+    return from_coo(r, c, a.shape[0], a.shape[1], **kw)
+
+
+def gcn_normalized(rows: np.ndarray, cols: np.ndarray, n: int,
+                   add_self_loops: bool = True) -> FRDCMatrix:
+    """FRDC of ``D^-1/2 (A+I) D^-1/2`` — exact binary factorization (GCN)."""
+    rows = np.asarray(rows, np.int64)
+    cols = np.asarray(cols, np.int64)
+    if add_self_loops:
+        loop = np.arange(n, dtype=np.int64)
+        rows = np.concatenate([rows, loop])
+        cols = np.concatenate([cols, loop])
+    deg = np.bincount(rows, minlength=n).astype(np.float64)
+    dinv = 1.0 / np.sqrt(np.maximum(deg, 1.0))
+    return from_coo(rows, cols, n, n, row_scale=dinv, col_scale=dinv)
+
+
+def mean_normalized(rows: np.ndarray, cols: np.ndarray, n: int) -> FRDCMatrix:
+    """FRDC of ``D^-1 A`` — mean aggregator (SAGEConv)."""
+    rows = np.asarray(rows, np.int64)
+    cols = np.asarray(cols, np.int64)
+    deg = np.bincount(rows, minlength=n).astype(np.float64)
+    dinv = 1.0 / np.maximum(deg, 1.0)
+    return from_coo(rows, cols, n, n, row_scale=dinv, col_scale=None)
+
+
+# ---------------------------------------------------------------------------
+# Dynamic coarsening (device-side)
+# ---------------------------------------------------------------------------
+
+def coarsen_groups(tiles: jax.Array) -> jax.Array:
+    """Stitch (..., GROUP) uint16 4x4 tiles into (..., TILE) uint32 words.
+
+    Word ``i`` (one per matrix row in the tile-row) has bit ``t*4+j`` set iff
+    tile ``t`` has bit ``i*4+j`` set — i.e. 8 tiles concatenated horizontally.
+    TPU analogue of the paper's Step ③ shfl-based bit-concatenate.
+    """
+    t32 = tiles.astype(jnp.uint32)
+    j = jnp.arange(TILE, dtype=jnp.uint32)                  # in-tile column
+    i = jnp.arange(TILE, dtype=jnp.uint32)                  # in-tile row
+    tpos = jnp.arange(GROUP, dtype=jnp.uint32)              # tile slot
+    # bit (i*4 + j) of tile t  ->  bit (t*4 + j) of word i
+    bits = (t32[..., None, :, None] >> (i[:, None, None] * TILE + j)) & 1
+    words = jnp.sum(bits << (tpos[:, None] * TILE + j), axis=(-2, -1),
+                    dtype=jnp.uint32)
+    return words  # (..., TILE)
+
+
+def group_neighbor_ids(col_idx: jax.Array) -> jax.Array:
+    """(..., GROUP) tile-columns -> (..., GROUP_COLS) gathered column ids."""
+    offs = jnp.arange(TILE, dtype=col_idx.dtype)
+    return (col_idx[..., :, None] * TILE + offs).reshape(
+        *col_idx.shape[:-1], GROUP_COLS)
+
+
+def to_dense(m: FRDCMatrix, dtype=jnp.float32, apply_scales: bool = True):
+    """Decode to a dense matrix — the oracle used by every BSpMM test."""
+    tiles = np.asarray(m.tiles)
+    col_idx = np.asarray(m.col_idx)
+    group_row = np.asarray(m.group_row)
+    out = np.zeros((m.n_tile_rows * TILE, -(-m.n_cols // TILE) * TILE), dtype=np.float32)
+    for g in range(tiles.shape[0]):
+        r0 = group_row[g] * TILE
+        for t in range(GROUP):
+            bits = int(tiles[g, t])
+            if not bits:
+                continue
+            c0 = int(col_idx[g, t]) * TILE
+            for i in range(TILE):
+                for j in range(TILE):
+                    if bits >> (i * TILE + j) & 1:
+                        out[r0 + i, c0 + j] = 1.0
+    out = out[:m.n_rows, :m.n_cols]
+    if apply_scales:
+        if m.row_scale is not None:
+            out = out * np.asarray(m.row_scale)[:, None]
+        if m.col_scale is not None:
+            out = out * np.asarray(m.col_scale)[None, :]
+    return jnp.asarray(out, dtype)
+
+
+def stats(m: FRDCMatrix) -> dict:
+    """Space accounting vs. fp32-CSR and dense-bit (paper Tables 3-5)."""
+    tiles = np.asarray(m.tiles)
+    nz_tiles = int((tiles != 0).sum())
+    slots = tiles.size
+    bit_slots = nz_tiles * TILE * TILE
+    csr_fp32 = m.nnz * 8 + (m.n_rows + 1) * 4           # val+col + ptr
+    dense_bits = m.n_rows * (-(-m.n_cols // 32)) * 4
+    return dict(
+        n_rows=m.n_rows, n_cols=m.n_cols, nnz=m.nnz,
+        n_tiles=nz_tiles, n_groups=m.n_groups,
+        pad_fraction=1.0 - nz_tiles / max(slots, 1),
+        bits_per_edge=bit_slots / max(m.nnz, 1),
+        frdc_bytes=m.nbytes(), csr_fp32_bytes=int(csr_fp32),
+        dense_bit_bytes=int(dense_bits),
+        vs_csr=csr_fp32 / max(m.nbytes(), 1),
+    )

@@ -1,0 +1,98 @@
+"""Tuning utilities (paper §3.4).
+
+Auto-tunes (a) the precision-variant assignment of the high-level blocks in a
+binary GNN and (b) the trinary-dot-product reconciliation mode (§3.2.2), by
+timing candidate configurations on the actual graph. Type-correctness of
+candidates is guaranteed by ``abstraction.check_chain``; accuracy deltas are
+measured against a reference forward so the user can pick a point on the
+accuracy/speed curve.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Callable, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .abstraction import MMSPMM_PAIRINGS, MMSpMM, check_chain
+from .bspmm import TRINARY_DEFAULT
+
+
+@dataclasses.dataclass
+class Candidate:
+    layer_variants: Sequence[tuple[str, str]]   # (mm, spmm) per layer
+    trinary_mode: str = TRINARY_DEFAULT
+
+    def name(self) -> str:
+        layers = ";".join(f"{m}+{s}" for m, s in self.layer_variants)
+        return f"[{layers}|{self.trinary_mode}]"
+
+
+@dataclasses.dataclass
+class TuneResult:
+    candidate: Candidate
+    latency_s: float
+    output_delta: float
+
+
+def legal_two_layer_candidates(first_in: str = "F",
+                               last_out: str = "F") -> Sequence[Candidate]:
+    """Enumerate type-correct 2-layer GCN variant assignments (§3.1.2)."""
+    out = []
+    for (m1, s1), (m2, s2) in itertools.product(MMSPMM_PAIRINGS, repeat=2):
+        if m1.split(".")[1][0] != first_in:
+            continue
+        if s2.split(".")[1][-1] != last_out:
+            continue
+        # inter-layer precision: spmm1 out == mm2 in
+        if s1.split(".")[1][-1] != m2.split(".")[1][0]:
+            continue
+        for mode in ("s2_and_andnot", "s3_two_popc"):
+            out.append(Candidate(((m1, s1), (m2, s2)), mode))
+    return tuple(out)
+
+
+def _time_call(fn: Callable, *args, repeats: int = 3) -> float:
+    fn(*args)  # compile / warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def tune(build_forward: Callable[[Candidate], Callable],
+         args: tuple,
+         candidates: Sequence[Candidate],
+         reference: Optional[jax.Array] = None,
+         repeats: int = 3) -> Sequence[TuneResult]:
+    """Time every candidate forward; rank by latency.
+
+    ``build_forward(candidate)`` returns a jittable callable; ``reference``
+    (optional) is a fp32 forward output for accuracy-delta reporting.
+    """
+    results = []
+    for cand in candidates:
+        fwd = jax.jit(build_forward(cand))
+        latency = _time_call(fwd, *args, repeats=repeats)
+        delta = float("nan")
+        if reference is not None:
+            out = fwd(*args)
+            out = out if isinstance(out, jax.Array) else out[0]
+            delta = float(jnp.mean(jnp.abs(out - reference)))
+        results.append(TuneResult(cand, latency, delta))
+    return sorted(results, key=lambda r: r.latency_s)
+
+
+def best(results: Sequence[TuneResult],
+         max_delta: Optional[float] = None) -> TuneResult:
+    ok = [r for r in results
+          if max_delta is None or r.output_delta <= max_delta]
+    if not ok:
+        raise ValueError("no candidate satisfies the accuracy bound")
+    return ok[0]

@@ -1,0 +1,82 @@
+"""Collective-byte accounting from compiled HLO text (DESIGN.md §7).
+
+``cost_analysis()`` has no collective numbers, so we parse the (per-device,
+SPMD-partitioned) HLO: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction's result shape gives the payload.
+Wire-byte conventions (ring algorithms, per device):
+    all-gather         output_bytes          (each device receives V_out-V_in)
+    all-reduce         2 x operand_bytes     (reduce-scatter + all-gather)
+    reduce-scatter     operand_bytes
+    all-to-all         operand_bytes
+    collective-permute operand_bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s/#*]+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.MULTILINE)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, int]
+    count_by_op: Dict[str, int]
+
+    @property
+    def wire_bytes(self) -> int:
+        """Per-device wire bytes with the ring conventions above."""
+        total = 0
+        for op, b in self.bytes_by_op.items():
+            total += 2 * b if op == "all-reduce" else b
+        return total
+
+    @property
+    def raw_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+
+def analyze_collectives(hlo_text: str) -> CollectiveStats:
+    bytes_by_op: Dict[str, int] = defaultdict(int)
+    count_by_op: Dict[str, int] = defaultdict(int)
+    seen_done = set()
+    for m in _COLL_RE.finditer(hlo_text):
+        type_str, op = m.group(1), m.group(2)
+        # async pairs appear as -start/-done; count each logical op once
+        line = m.group(0)
+        if "-done(" in line:
+            continue
+        bytes_by_op[op] += _shape_bytes(type_str)
+        count_by_op[op] += 1
+    return CollectiveStats(dict(bytes_by_op), dict(count_by_op))
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

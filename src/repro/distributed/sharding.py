@@ -1,0 +1,183 @@
+"""Logical-axis sharding rules -> NamedShardings (DESIGN.md §6).
+
+Megatron-style tensor parallelism on the "model" axis (column-parallel into
+attention/FFN, row-parallel out, vocab-sharded embedding), optional FSDP on
+the "data" axis for weights (training shapes: optimizer state must fit),
+batch over ("pod","data").
+
+Rules are keyed on the LAST path component of each parameter — the single
+source of truth shared by train, serve, and the dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _key_of(path) -> str:
+    last = path[-1]
+    return last.key if hasattr(last, "key") else str(getattr(last, "idx", last))
+
+
+def _parent_key(path) -> str:
+    for entry in reversed(path[:-1]):
+        if hasattr(entry, "key"):
+            return entry.key
+    return ""
+
+
+# fp rule table: key -> (spec builder). d=fsdp axis or None, m="model".
+def _fp_spec(key: str, parent: str, ndim: int, d, m) -> P:
+    col = {  # column-parallel: (in, out_model)
+        "wq", "wk", "wv", "wi", "wz", "wx", "wdt", "wr", "wg",
+        "shared_wi", "cm_wk",
+    }
+    row = {  # row-parallel: (in_model, out)
+        "wo", "shared_wo", "cm_wv",
+    }
+    model_vec = {"A_log", "dt_bias", "D", "w0", "u", "ln_scale", "norm_scale"}
+    if key == "table":
+        return P(m, d)                       # vocab-sharded embedding
+    if ndim == 3 and key == "wi":            # MoE experts: EP over model —
+        return P(m, d, None)                 # MUST precede the 2-D col rule
+    if ndim == 3 and key == "wo":
+        return P(m, None, d)
+    if key in col:
+        return P(d, m) if ndim == 2 else P(None)
+    if key in row:
+        return P(m, d) if ndim == 2 else P(None)
+    if key == "cm_wr":
+        return P(d, None)
+    if key in ("wB", "wC"):                  # mamba B/C proj: small state dim
+        return P(d, None)
+    if key == "conv_w":
+        return P(None, m)
+    if key in model_vec:
+        return P(m) if ndim == 1 else P(None, m)
+    if key == "router":
+        return P(None, None)
+    if parent == "moe" or key in ("wi", "wo") and ndim == 3:
+        pass
+    if ndim == 3 and key == "wi":
+        return P(m, d, None)                 # experts over model (EP)
+    if ndim == 3 and key == "wo":
+        return P(m, None, d)
+    if key in ("w1", "w2") and parent == "projector":
+        return P(None, None)
+    if key == "frontend_proj":
+        return P(None, None)
+    if key == "wA":
+        return P(d, None)
+    if key == "wB" and ndim == 2:
+        return P(None, m)
+    return P(*([None] * min(ndim, 0) or []))  # replicate
+
+
+QUANT_REPLICATE = False  # §Perf C2: replicate (tiny) packed weights
+
+
+def param_pspec(path, leaf, fsdp: bool) -> P:
+    key = _key_of(path)
+    parent = _parent_key(path)
+    d = "data" if fsdp else None
+    ndim = getattr(leaf, "ndim", 0)
+    if key in ("packed", "scale") and QUANT_REPLICATE:
+        return P(*([None] * ndim))
+    if key in ("packed", "scale"):
+        # bit-packed projections: packed is (out, in/32) = TRANSPOSE of the
+        # fp weight, so swap the fp rule's two axes.
+        fp_key = parent
+        base = _fp_spec(fp_key, _parent_key(path[:-1]), 2, d, "model")
+        a, b = (list(base) + [None, None])[:2]
+        if key == "scale":
+            return P(b)
+        return P(b, a)
+    spec = _fp_spec(key, parent, ndim, d, "model")
+    # pad the spec rank to the leaf rank
+    entries = list(spec)
+    if len(entries) < ndim:
+        entries += [None] * (ndim - len(entries))
+    return P(*entries[:ndim]) if ndim else P()
+
+
+def param_shardings(abstract_params: Any, mesh: Mesh,
+                    fsdp: bool = False) -> Any:
+    def one(path, leaf):
+        return NamedSharding(mesh, param_pspec(path, leaf, fsdp))
+    return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+
+def batch_pspec(mesh: Mesh) -> P:
+    dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    return P(dp)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    size = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        size *= mesh.shape["pod"]
+    return size
+
+
+def _dp0(mesh: Mesh):
+    dp = batch_pspec(mesh)
+    return dp[0] if len(dp) == 1 else tuple(dp)
+
+
+def data_shardings(abstract_batch: Any, mesh: Mesh) -> Any:
+    dp0, dsz = _dp0(mesh), _dp_size(mesh)
+
+    def one(leaf):
+        nd = getattr(leaf, "ndim", 0)
+        if nd and leaf.shape[0] % dsz == 0:
+            return NamedSharding(mesh, P(dp0, *([None] * (nd - 1))))
+        return NamedSharding(mesh, P(*([None] * nd)))
+    return jax.tree.map(one, abstract_batch)
+
+
+def cache_shardings(abstract_cache: Any, mesh: Mesh) -> Any:
+    """Decode caches: batch over dp, heads over model.
+
+    k/v (B,S,H,hd) -> P(dp,None,"model",None); SSM states (B,H,...) ->
+    P(dp,"model",...); tails (B,d) -> P(dp,None); enc memory (B,T,d) ->
+    P(dp,None,None). When B doesn't divide dp (long_500k, B=1) the KV-cache
+    SEQUENCE axis takes the dp shards instead (sequence-parallel decode) and
+    per-batch states replicate across dp."""
+    dp0, dsz = _dp0(mesh), _dp_size(mesh)
+
+    def one(path, leaf):
+        nd = leaf.ndim
+        key = _key_of(path)
+        b_ok = nd >= 1 and leaf.shape[0] % dsz == 0
+        bax = dp0 if b_ok else None
+        if key in ("k", "v", "k_scale", "v_scale") and nd == 4:
+            seq_ax = None if b_ok else (
+                dp0 if leaf.shape[1] % dsz == 0 else None)
+            spec = P(bax, seq_ax, "model", None)
+        elif key == "S" and nd >= 3:
+            spec = P(bax, "model", *([None] * (nd - 2)))
+        elif key == "conv" and nd == 3:
+            spec = P(bax, None, "model")
+        elif key == "enc_memory" and nd == 3:
+            spec = P(bax, None, None)
+        elif nd >= 1:
+            spec = P(bax, *([None] * (nd - 1)))
+        else:
+            spec = P()
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, abstract_cache)
+
+
+def logits_sharding(mesh: Mesh, batch: int = 0) -> NamedSharding:
+    dp0, dsz = _dp0(mesh), _dp_size(mesh)
+    if batch and batch % dsz != 0:
+        return NamedSharding(mesh, P(None, None, "model"))
+    return NamedSharding(mesh, P(dp0, None, "model"))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,2 @@
+"""Graph substrate: synthetic datasets, samplers, distributed partitioning."""
+from . import datasets, partition, sampling

@@ -1,0 +1,83 @@
+"""1-D block-row graph partitioning for distributed BSpMM.
+
+Distribution scheme (DESIGN.md §6): tile-rows are split into contiguous
+shards over the ``data`` mesh axis; every shard holds its FRDC slice locally
+and all-gathers the (bit-packed!) activation matrix per layer. Packing makes
+the gathered payload 32x smaller than fp — the paper's memory saving becomes
+a collective saving at scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from repro.core import frdc
+from repro.core.frdc import FRDCMatrix, TILE
+
+
+@dataclasses.dataclass
+class RowShard:
+    adj: FRDCMatrix          # local block-rows, col space = FULL graph
+    row_start: int           # first (node) row owned
+    row_end: int             # one past last node row owned
+
+
+def partition_rows(rows: np.ndarray, cols: np.ndarray, n: int,
+                   n_shards: int, kind: str = "gcn") -> List[RowShard]:
+    """Split an edge list into ``n_shards`` contiguous tile-row shards.
+
+    Shard boundaries are tile-row aligned (multiples of TILE) and balanced by
+    EDGE count (not node count) to mitigate power-law row skew — the same
+    reasoning as the paper's warp-balance concern (§3.3.1), applied at the
+    inter-chip level.
+    """
+    rows = np.asarray(rows, np.int64)
+    cols = np.asarray(cols, np.int64)
+    order = np.argsort(rows, kind="stable")
+    rows_s, cols_s = rows[order], cols[order]
+    # cumulative edges per tile-row boundary
+    n_tr = -(-n // TILE)
+    edge_tile_row = rows_s // TILE
+    counts = np.bincount(edge_tile_row, minlength=n_tr)
+    cum = np.concatenate([[0], np.cumsum(counts)])
+    total = cum[-1]
+    shards = []
+    prev_tr = 0
+    for s in range(n_shards):
+        target = total * (s + 1) / n_shards
+        tr_end = int(np.searchsorted(cum, target)) if s < n_shards - 1 else n_tr
+        tr_end = max(tr_end, prev_tr)  # allow empty shards on tiny graphs
+        lo, hi = cum[prev_tr], cum[tr_end]
+        r_lo, r_hi = prev_tr * TILE, min(tr_end * TILE, n)
+        sel = slice(lo, hi)
+        local_rows = rows_s[sel] - r_lo
+        local_cols = cols_s[sel]
+        scales = {}
+        if kind == "gcn":
+            # global degrees for exact normalization
+            deg = np.bincount(rows, minlength=n) + 1.0
+            dinv = 1.0 / np.sqrt(deg)
+            loop = np.arange(r_lo, r_hi, dtype=np.int64)
+            local_rows = np.concatenate([local_rows, loop - r_lo])
+            local_cols = np.concatenate([local_cols, loop])
+            scales = dict(row_scale=dinv[r_lo:r_hi], col_scale=dinv)
+        elif kind == "mean":
+            deg = np.bincount(rows, minlength=n)
+            scales = dict(row_scale=1.0 / np.maximum(deg[r_lo:r_hi], 1))
+        adj = frdc.from_coo(local_rows, local_cols, max(r_hi - r_lo, TILE), n,
+                            **scales)
+        shards.append(RowShard(adj=adj, row_start=r_lo, row_end=r_hi))
+        prev_tr = tr_end
+    return shards
+
+
+def shard_stats(shards: List[RowShard]) -> dict:
+    edges = np.array([s.adj.nnz for s in shards], np.float64)
+    return dict(
+        n_shards=len(shards),
+        edges_mean=float(edges.mean()),
+        edges_max=float(edges.max()),
+        imbalance=float(edges.max() / max(edges.mean(), 1.0)),
+    )

@@ -1,0 +1,75 @@
+"""Inductive-learning samplers: GraphSAGE neighbor sampling and GraphSAINT
+node-budget subgraph sampling (paper §2.1 / §4.1 inductive GNNs)."""
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+import numpy as np
+
+from repro.core import frdc
+from .datasets import GraphData
+
+
+def _build_csr(edges: np.ndarray, n: int):
+    order = np.argsort(edges[0], kind="stable")
+    dst_sorted = edges[1][order]
+    counts = np.bincount(edges[0], minlength=n)
+    indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return indptr, dst_sorted
+
+
+def sage_sample(data: GraphData, batch_nodes: np.ndarray, fanouts=(10, 10),
+                seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """GraphSAGE fixed-fanout neighbor expansion.
+
+    Returns (subgraph node ids, (2, E_sub) edge list reindexed into the
+    subgraph). Layers expand from the batch outward with the given fanouts.
+    """
+    rng = np.random.default_rng(seed)
+    indptr, indices = _build_csr(data.edges, data.n_nodes)
+    frontier = np.unique(batch_nodes)
+    nodes = [frontier]
+    for fan in fanouts:
+        nxt = []
+        for u in frontier:
+            nbrs = indices[indptr[u]:indptr[u + 1]]
+            if nbrs.size > fan:
+                nbrs = rng.choice(nbrs, size=fan, replace=False)
+            nxt.append(nbrs)
+        frontier = np.unique(np.concatenate(nxt)) if nxt else np.array([], np.int64)
+        nodes.append(frontier)
+    sub_nodes = np.unique(np.concatenate(nodes))
+    remap = -np.ones(data.n_nodes, np.int64)
+    remap[sub_nodes] = np.arange(sub_nodes.size)
+    src, dst = data.edges
+    keep = (remap[src] >= 0) & (remap[dst] >= 0)
+    sub_edges = np.stack([remap[src[keep]], remap[dst[keep]]])
+    return sub_nodes, sub_edges
+
+
+def saint_node_sampler(data: GraphData, budget: int,
+                       seed: int = 0) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    """GraphSAINT node sampler: degree-proportional node budget subgraphs."""
+    rng = np.random.default_rng(seed)
+    deg = np.bincount(data.edges[0], minlength=data.n_nodes) + 1.0
+    p = deg / deg.sum()
+    remapped = -np.ones(data.n_nodes, np.int64)
+    while True:
+        sub_nodes = np.unique(rng.choice(data.n_nodes, size=budget, p=p))
+        remapped[:] = -1
+        remapped[sub_nodes] = np.arange(sub_nodes.size)
+        src, dst = data.edges
+        keep = (remapped[src] >= 0) & (remapped[dst] >= 0)
+        yield sub_nodes, np.stack([remapped[src[keep]], remapped[dst[keep]]])
+
+
+def subgraph_adjacency(sub_nodes: np.ndarray, sub_edges: np.ndarray,
+                       kind: str = "gcn") -> frdc.FRDCMatrix:
+    n = sub_nodes.size
+    r, c = sub_edges
+    if kind == "gcn":
+        return frdc.gcn_normalized(r, c, n)
+    if kind == "mean":
+        return frdc.mean_normalized(r, c, n)
+    return frdc.from_coo(r, c, n, n)

@@ -1,0 +1,247 @@
+"""Pallas TPU kernel: FRDC binary sparse x dense matmul (paper Algorithm 1).
+
+TPU mapping of the paper's warp algorithm (§3.3.2):
+
+  GPU (per warp)                      TPU (per grid step = one tile-GROUP)
+  ------------------------------      ------------------------------------
+  ① warp <- one 4x4-tile row          grid iterates the flattened group list
+  ② 32 thr load 8 tiles + B rows      8 async DMAs gather neighbor rows
+                                      HBM->VMEM scratch (scalar-prefetched
+                                      col_idx drives the dynamic offsets)
+  ③ shfl bit-concatenate              coarsen: shift/OR eight 4x4 tiles into
+                                      four 32-bit adjacency words (VPU)
+  ④ ballot+brev bit-transpose         vectorized 32x32 bit transpose of the
+                                      gathered activation words
+  ⑤ popc trinary dot                  popcount AND/ANDNOT on (Wf,32) lanes
+  ⑥ ballot+brev binarized store       compare>=0, shift/OR pack, masked store
+                                      on the LAST group of each tile-row
+
+The grid walks groups in CSR order; groups of one tile-row are consecutive so
+the (4, F) accumulator lives in VMEM scratch across steps (group_first resets
+it, group_last flushes it). Output rows never revisit after their flush.
+
+Two kernels:
+  * ``bspmm_bits``  — packed ±1 activations (BSpMM.BB?; Algorithm 1 proper);
+  * ``bspmm_fp``    — fp activations (BSpMM.FB?): the gathered (32, F) rows
+    hit the MXU via a (4, 32) mask matmul instead of Step ④/⑤.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.frdc import FRDCMatrix, GROUP, TILE
+
+WORD = 32
+
+
+def _coarsen_one(tiles_i32: jax.Array) -> jax.Array:
+    """(1, GROUP) int32 4x4-tiles -> (TILE,) uint32 adjacency words (Step ③)."""
+    t32 = tiles_i32.astype(jnp.uint32).reshape(GROUP)
+    j = jnp.arange(TILE, dtype=jnp.uint32)
+    i = jnp.arange(TILE, dtype=jnp.uint32)
+    tpos = jnp.arange(GROUP, dtype=jnp.uint32)
+    bits = (t32[None, :, None] >> (i[:, None, None] * TILE + j)) & 1
+    return jnp.sum(bits << (tpos[:, None] * TILE + j), axis=(1, 2),
+                   dtype=jnp.uint32)
+
+
+def _bit_transpose(bg: jax.Array) -> jax.Array:
+    """(32, Wf) words-over-features -> (Wf, 32) words-over-neighbors (Step ④)."""
+    k = jnp.arange(WORD, dtype=jnp.uint32)
+    # bits[n, w, f] = bit f of word (n, w)
+    bits = (bg[:, :, None] >> k) & jnp.uint32(1)
+    # out[w, f] collects neighbor n at bit n
+    return jnp.sum(bits << k[:, None, None], axis=0, dtype=jnp.uint32)
+
+
+def _bits_kernel(col_idx_ref, first_ref, last_ref, row_ref, tiles_ref,
+                 x_hbm, prefill_ref, out_ref, acc_ref, xg_ref, copy_sems, *,
+                 trinary_s2: bool, binarize: bool, n_feat: int):
+    del prefill_ref  # aliased to out; only read through the alias
+    g = pl.program_id(0)
+
+    # -- Step ②: gather 8 neighbor 4-row slabs of packed activations ---------
+    for t in range(GROUP):
+        row4 = col_idx_ref[g, t] * TILE
+        pltpu.make_async_copy(
+            x_hbm.at[pl.ds(row4, TILE)], xg_ref.at[pl.ds(t * TILE, TILE)],
+            copy_sems.at[t]).start()
+    for t in range(GROUP):
+        pltpu.make_async_copy(
+            x_hbm.at[pl.ds(0, TILE)], xg_ref.at[pl.ds(t * TILE, TILE)],
+            copy_sems.at[t]).wait()
+
+    # -- Step ③: dynamic coarsening ------------------------------------------
+    a_words = _coarsen_one(tiles_ref[...])                 # (TILE,) uint32
+
+    # -- Step ④: bit-transpose the gathered activations ----------------------
+    bt = _bit_transpose(xg_ref[...])                       # (Wf, 32)
+
+    # -- Step ⑤: trinary popc dot-product ------------------------------------
+    @pl.when(first_ref[g] == 1)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    for i in range(TILE):
+        a = a_words[i]
+        if trinary_s2:
+            c = (jax.lax.population_count(a & bt).astype(jnp.int32)
+                 - jax.lax.population_count(a & ~bt).astype(jnp.int32))
+        else:
+            c = (2 * jax.lax.population_count(a & bt).astype(jnp.int32)
+                 - jax.lax.population_count(a).astype(jnp.int32))
+        acc_ref[i, :] += c.reshape(-1)                     # (Wf*32,) == (F,)
+
+    # -- Step ⑥: binarize + pack + store on the row's last group -------------
+    @pl.when(last_ref[g] == 1)
+    def _():
+        if binarize:
+            signs = (acc_ref[...] >= 0)
+            wf = signs.shape[1] // WORD
+            grouped = signs.reshape(TILE, wf, WORD).astype(jnp.uint32)
+            w = jnp.left_shift(jnp.uint32(1),
+                               jnp.arange(WORD, dtype=jnp.uint32))
+            packed = jnp.sum(grouped * w, axis=-1, dtype=jnp.uint32)
+            if n_feat % WORD:
+                mask = jnp.uint32((1 << (n_feat % WORD)) - 1)
+                packed = packed.at[:, -1].set(packed[:, -1] & mask)
+            out_ref[...] = packed
+        else:
+            out_ref[...] = acc_ref[...]
+
+
+def _fp_kernel(col_idx_ref, first_ref, last_ref, row_ref, tiles_ref,
+               x_hbm, prefill_ref, out_ref, acc_ref, xg_ref, copy_sems):
+    del prefill_ref
+    g = pl.program_id(0)
+    for t in range(GROUP):
+        row4 = col_idx_ref[g, t] * TILE
+        pltpu.make_async_copy(
+            x_hbm.at[pl.ds(row4, TILE)], xg_ref.at[pl.ds(t * TILE, TILE)],
+            copy_sems.at[t]).start()
+    for t in range(GROUP):
+        pltpu.make_async_copy(
+            x_hbm.at[pl.ds(0, TILE)], xg_ref.at[pl.ds(t * TILE, TILE)],
+            copy_sems.at[t]).wait()
+
+    a_words = _coarsen_one(tiles_ref[...])                 # (TILE,)
+    k = jnp.arange(GROUP * TILE, dtype=jnp.uint32)
+    mask = ((a_words[:, None] >> k) & 1).astype(xg_ref.dtype)  # (4, 32)
+
+    @pl.when(first_ref[g] == 1)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot(mask, xg_ref[...],
+                                preferred_element_type=acc_ref.dtype)
+
+    @pl.when(last_ref[g] == 1)
+    def _():
+        out_ref[...] = acc_ref[...]
+
+
+def _group_last(adj: FRDCMatrix) -> jax.Array:
+    """1 iff the group is the last of its tile-row."""
+    nxt = jnp.concatenate([adj.group_row[1:],
+                           jnp.full((1,), -1, adj.group_row.dtype)])
+    return (adj.group_row != nxt).astype(jnp.int32)
+
+
+def bspmm_bits(adj: FRDCMatrix, x_packed: jax.Array, n_feat: int | None = None,
+               binarize: bool = True, trinary_mode: str = "s3_two_popc",
+               interpret: bool = True) -> jax.Array:
+    """FRDC trinary aggregation of packed ±1 activations (Algorithm 1).
+
+    ``x_packed``: (N, Wf) uint32. Returns (R4, Wf) uint32 bits when
+    ``binarize`` else (R4, F) int32 counts, R4 = n_tile_rows*4 (crop to
+    n_rows at the caller). Rows with no groups keep the prefill value
+    (0 counts / all-ones bits == sign(0)).
+    """
+    n, wf = x_packed.shape
+    f = wf * WORD if n_feat is None else int(n_feat)
+    pad_rows = (-n) % TILE
+    x_p = jnp.pad(x_packed, ((0, pad_rows), (0, 0)))
+    r4 = adj.n_tile_rows * TILE
+    g = adj.n_groups
+
+    if binarize:
+        out_shape = jax.ShapeDtypeStruct((r4, wf), jnp.uint32)
+        out_spec = pl.BlockSpec((TILE, wf), lambda g_, ci, fi, la, ro: (ro[g_], 0))
+        tailmask = jnp.uint32((1 << (f % WORD)) - 1) if f % WORD else jnp.uint32(0xFFFFFFFF)
+        prefill = jnp.full((r4, wf), tailmask, jnp.uint32)
+        prefill = prefill.at[:, :-1].set(jnp.uint32(0xFFFFFFFF)) if wf > 1 else prefill
+    else:
+        out_shape = jax.ShapeDtypeStruct((r4, wf * WORD), jnp.int32)
+        out_spec = pl.BlockSpec((TILE, wf * WORD), lambda g_, ci, fi, la, ro: (ro[g_], 0))
+        prefill = jnp.zeros((r4, wf * WORD), jnp.int32)
+
+    kernel = functools.partial(
+        _bits_kernel, trinary_s2=(trinary_mode == "s2_and_andnot"),
+        binarize=binarize, n_feat=f)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=(g,),
+            in_specs=[
+                pl.BlockSpec((1, GROUP), lambda g_, ci, fi, la, ro: (g_, 0)),
+                pl.BlockSpec(memory_space=pl.ANY),         # activations in HBM
+                pl.BlockSpec(memory_space=pl.ANY),         # prefill (aliased)
+            ],
+            out_specs=out_spec,
+            scratch_shapes=[
+                pltpu.VMEM((TILE, wf * WORD), jnp.int32),   # trinary acc
+                pltpu.VMEM((GROUP * TILE, wf), jnp.uint32),  # gathered rows
+                pltpu.SemaphoreType.DMA((GROUP,)),
+            ],
+        ),
+        out_shape=out_shape,
+        input_output_aliases={6: 0},
+        interpret=interpret,
+    )(adj.col_idx, adj.group_first, _group_last(adj), adj.group_row,
+      adj.tiles.astype(jnp.int32), x_p, prefill)
+    return out
+
+
+def bspmm_fp(adj: FRDCMatrix, x: jax.Array, interpret: bool = True) -> jax.Array:
+    """FRDC aggregation of fp activations via MXU mask-matmul (BSpMM.FB?).
+
+    ``x``: (N, F) float. Returns (R4, F) float; caller applies row/col scales
+    and crops to n_rows. Col scales must already be folded into ``x``.
+    """
+    n, f = x.shape
+    pad_rows = (-n) % TILE
+    x_p = jnp.pad(x, ((0, pad_rows), (0, 0)))
+    r4 = adj.n_tile_rows * TILE
+    g = adj.n_groups
+    prefill = jnp.zeros((r4, f), x.dtype)
+
+    out = pl.pallas_call(
+        _fp_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=(g,),
+            in_specs=[
+                pl.BlockSpec((1, GROUP), lambda g_, ci, fi, la, ro: (g_, 0)),
+                pl.BlockSpec(memory_space=pl.ANY),
+                pl.BlockSpec(memory_space=pl.ANY),         # prefill (aliased)
+            ],
+            out_specs=pl.BlockSpec((TILE, f), lambda g_, ci, fi, la, ro: (ro[g_], 0)),
+            scratch_shapes=[
+                pltpu.VMEM((TILE, f), x.dtype),
+                pltpu.VMEM((GROUP * TILE, f), x.dtype),
+                pltpu.SemaphoreType.DMA((GROUP,)),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((r4, f), x.dtype),
+        input_output_aliases={6: 0},
+        interpret=interpret,
+    )(adj.col_idx, adj.group_first, _group_last(adj), adj.group_row,
+      adj.tiles.astype(jnp.int32), x_p, prefill)
+    return out

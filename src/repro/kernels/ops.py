@@ -1,0 +1,88 @@
+"""Jitted dispatch layer over the Pallas kernels.
+
+On TPU the kernels compile natively (``interpret=False``); on CPU they run in
+interpret mode for correctness, but the pure-jnp ``repro.core`` paths are much
+faster there — so dispatch prefers jnp off-TPU unless ``force_kernels`` is on
+(tests set it to exercise the kernels).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitops, bspmm as bspmm_core
+from repro.core.binarize import BinTensor
+from repro.core.frdc import FRDCMatrix, TILE
+
+from . import bmm_kernel, bspmm_kernel, pack_kernel
+
+_FORCE_KERNELS = False
+
+
+def force_kernels(on: bool = True) -> None:
+    global _FORCE_KERNELS
+    _FORCE_KERNELS = on
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _use_kernels() -> bool:
+    return _FORCE_KERNELS or _on_tpu()
+
+
+def _interpret() -> bool:
+    return not _on_tpu()
+
+
+def bmm_xnor(a_packed: jax.Array, b_packed: jax.Array, n_bits: int,
+             binarize: bool = False) -> jax.Array:
+    """Packed ±1 matmul; kernel on TPU, word-level jnp elsewhere."""
+    if _use_kernels():
+        return bmm_kernel.bmm_xnor(a_packed, b_packed, n_bits,
+                                   binarize=binarize, interpret=_interpret())
+    out = bitops.bmm_xnor_words(a_packed, b_packed, n_bits)
+    if binarize:
+        return bitops.pack_bits(out >= 0, axis=-1)
+    return out
+
+
+def binarize_pack(x: jax.Array) -> jax.Array:
+    if _use_kernels():
+        return pack_kernel.binarize_pack(x, interpret=_interpret())
+    return bitops.sign_bits(x, axis=-1)
+
+
+def bspmm_bits(adj: FRDCMatrix, x_packed: jax.Array, n_feat: int,
+               binarize: bool = True,
+               trinary_mode: str = "s3_two_popc") -> jax.Array:
+    """FRDC trinary aggregation; returns (n_rows, ...) cropped."""
+    if _use_kernels():
+        out = bspmm_kernel.bspmm_bits(adj, x_packed, n_feat,
+                                      binarize=binarize,
+                                      trinary_mode=trinary_mode,
+                                      interpret=_interpret())
+        return out[: adj.n_rows]
+    xt = BinTensor(packed=x_packed, scale=jnp.ones((x_packed.shape[0], 1)),
+                   n=n_feat)
+    res = bspmm_core.bspmm(adj, xt, "BBB" if binarize else "BBF",
+                           trinary_mode=trinary_mode)
+    return res.packed if binarize else res
+
+
+def bspmm_fp(adj: FRDCMatrix, x: jax.Array) -> jax.Array:
+    """FRDC fp aggregation (scales applied here, kernel does raw counts)."""
+    if _use_kernels():
+        xin = x
+        if adj.col_scale is not None:
+            xin = xin * adj.col_scale[:, None].astype(x.dtype)
+        out = bspmm_kernel.bspmm_fp(adj, xin, interpret=_interpret())
+        out = out[: adj.n_rows]
+        if adj.row_scale is not None:
+            out = out * adj.row_scale[:, None].astype(out.dtype)
+        return out
+    return bspmm_core.bspmm(adj, x, "FBF")

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These re-derive each kernel's math from first principles with dense jnp ops —
+no shared code with the kernels beyond the bit-packing convention — so a test
+failure localizes to the kernel, not the oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitops
+from repro.core.frdc import FRDCMatrix, to_dense
+
+WORD = 32
+
+
+def bmm_xnor_ref(a_packed: jax.Array, b_packed: jax.Array,
+                 n_bits: int) -> jax.Array:
+    """Dense oracle: unpack to ±1 and matmul in int32."""
+    a = np.asarray(bitops.unpack_pm1(a_packed, n_bits, dtype=jnp.int32))
+    b = np.asarray(bitops.unpack_pm1(b_packed, n_bits, dtype=jnp.int32))
+    return jnp.asarray(a @ b.T)
+
+
+def bmm_xnor_bin_ref(a_packed: jax.Array, b_packed: jax.Array,
+                     n_bits: int) -> jax.Array:
+    out = bmm_xnor_ref(a_packed, b_packed, n_bits)
+    return bitops.pack_bits(out >= 0, axis=-1)
+
+
+def binarize_pack_ref(x: jax.Array) -> jax.Array:
+    return bitops.pack_bits(np.asarray(x) >= 0, axis=-1)
+
+
+def bspmm_bits_ref(adj: FRDCMatrix, x_packed: jax.Array, n_feat: int,
+                   binarize: bool = True) -> jax.Array:
+    """Dense oracle: decode FRDC to dense, unpack ±1 activations, matmul."""
+    a = np.asarray(to_dense(adj, apply_scales=False))
+    n = a.shape[1]
+    act = np.asarray(bitops.unpack_pm1(x_packed, n_feat, dtype=jnp.int32))[:n]
+    counts = (a.astype(np.int64) @ act.astype(np.int64)).astype(np.int32)
+    r4 = adj.n_tile_rows * 4
+    full = np.zeros((r4, n_feat), np.int32)
+    full[:counts.shape[0]] = counts
+    if not binarize:
+        return jnp.asarray(full)
+    return bitops.pack_bits(full >= 0, axis=-1)
+
+
+def bspmm_fp_ref(adj: FRDCMatrix, x: jax.Array) -> jax.Array:
+    """Dense oracle for the fp kernel (scales excluded, as in the kernel)."""
+    a = np.asarray(to_dense(adj, apply_scales=False))
+    out = a @ np.asarray(x)[: a.shape[1]]
+    r4 = adj.n_tile_rows * 4
+    full = np.zeros((r4, out.shape[1]), out.dtype)
+    full[: out.shape[0]] = out
+    return jnp.asarray(full)

@@ -1,0 +1,359 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run (deliverable e): ``.lower().compile()`` every
+(architecture x input-shape x mesh) cell on 512 placeholder devices.
+
+Compile strategy (DESIGN.md §7): the PRODUCTION program — layers scanned for
+train/prefill, fully unrolled for one-token decode — is what must lower and
+compile per cell; its ``memory_analysis`` is the fit proof. Because XLA's
+``cost_analysis`` counts a ``lax.scan`` body ONCE (verified), per-layer FLOP/
+byte/collective numbers for scanned programs come from two small UNROLLED
+probe compiles (1 and 2 pattern-periods) whose delta is extrapolated to the
+full depth — exact for homogeneous stacks, period-aware for the zamba2
+hybrid, validated against a fully-unrolled smollm reference cell.
+
+Run one cell:   python -m repro.launch.dryrun --arch smollm-135m \
+                    --shape train_4k --mesh single
+Run everything: python -m repro.launch.dryrun --all   (a subprocess per cell)
+"""
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _opts(cfg, shape):
+    return dict(
+        remat=shape.kind == "train",
+        seq_shard=shape.kind in ("train", "prefill"),
+        q_chunk=2048 if shape.seq_len >= 8192 else 0,
+        donate_cache=shape.kind == "decode",
+    )
+
+
+def _lower_cell(cfg, shape, mesh, opts, unroll: bool):
+    """Build + lower the cell's program; returns (lowered, aux)."""
+    from repro.distributed import sharding
+    from repro.models import transformer
+    from repro.optim.optimizer import AdamW
+    from repro.quant.binary_linear import quantize_params
+    from repro.train import train_step as ts
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    boundary = NamedSharding(mesh, P(dp, "model", None)) \
+        if opts["seq_shard"] else None
+    logits_sh = sharding.logits_sharding(mesh, shape.global_batch)
+
+    abstract_params = jax.eval_shape(
+        lambda: transformer.init_params(jax.random.PRNGKey(0), cfg))
+    if cfg.quant == "bitgnn":
+        abstract_params = jax.eval_shape(quantize_params, abstract_params)
+    p_shardings = sharding.param_shardings(abstract_params, mesh,
+                                           fsdp=(shape.kind == "train"))
+    batch = ts.input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt = AdamW(lr=1e-4, weight_decay=0.1, clip_norm=1.0)
+        abstract_opt = jax.eval_shape(opt.init, abstract_params)
+        o_shardings = _opt_shardings(abstract_opt, p_shardings, mesh)
+        step = ts.make_train_step(cfg, opt, unroll=unroll,
+                                  q_chunk=opts["q_chunk"],
+                                  remat=opts["remat"],
+                                  boundary_sharding=boundary,
+                                  logits_sharding=logits_sh)
+        b_shardings = sharding.data_shardings(batch, mesh)
+        jitted = jax.jit(step,
+                         in_shardings=(p_shardings, o_shardings, b_shardings),
+                         out_shardings=(p_shardings, o_shardings,
+                                        sharding.replicated(mesh)),
+                         donate_argnums=(0, 1))
+        return jitted.lower(abstract_params, abstract_opt, batch)
+    if shape.kind == "prefill":
+        from repro.models import transformer as tr
+
+        def prefill(params, b):
+            kw = {k: b[k] for k in ("image_embeds", "frames") if k in b}
+            return tr.forward(params, cfg, b["tokens"], unroll=unroll,
+                              q_chunk=opts["q_chunk"],
+                              boundary_sharding=boundary,
+                              logits_sharding=logits_sh, **kw)
+        b_shardings = sharding.data_shardings(batch, mesh)
+        jitted = jax.jit(prefill, in_shardings=(p_shardings, b_shardings),
+                         out_shardings=logits_sh)
+        return jitted.lower(abstract_params, batch)
+    # decode (always exact / unrolled)
+    step = ts.make_serve_step(cfg)
+    c_shardings = sharding.cache_shardings(batch["cache"], mesh)
+    tok_sh = sharding.data_shardings(batch["tokens"], mesh)
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_shardings, c_shardings, tok_sh,
+                      sharding.replicated(mesh)),
+        out_shardings=(sharding.logits_sharding(mesh, shape.global_batch),
+                       c_shardings),
+        donate_argnums=(1,) if opts["donate_cache"] else ())
+    return jitted.lower(abstract_params, batch["cache"], batch["tokens"],
+                        batch["pos"])
+
+
+def _measure(compiled) -> dict:
+    from repro.distributed import hlo_analysis
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    ca = ca[0] if isinstance(ca, list) else (ca or {})
+    colls = hlo_analysis.analyze_collectives(compiled.as_text())
+    return dict(
+        flops=float(ca.get("flops", 0.0)),
+        bytes=float(ca.get("bytes accessed", 0.0)),
+        coll_wire=int(colls.wire_bytes),
+        coll_by_op={k: [int(colls.bytes_by_op[k]),
+                        int(colls.count_by_op.get(k, 0))]
+                    for k in colls.bytes_by_op},
+        mem=dict(argument=int(mem.argument_size_in_bytes),
+                 output=int(mem.output_size_in_bytes),
+                 temp=int(mem.temp_size_in_bytes),
+                 alias=int(mem.alias_size_in_bytes)),
+    )
+
+
+def _affine_probe(cfg, shape, mesh, opts, measure_key_fn):
+    """SSM/hybrid probes: chunked-linear archs have step cost AFFINE in
+    (L, T) — f(L,T) = ba + bb*T + L*la + L*lb*T. Four small probes at
+    (L1,T1),(L1,T2),(L2,T1),(L2,T2) with chunks UNROLLED (tiny T) solve the
+    system exactly; evaluate at (L*, T*). Zamba2's shared-attention is
+    quadratic in T — corrected analytically (DESIGN.md §7)."""
+    from repro.configs.base import SHAPES, ShapeConfig
+    import dataclasses as dc
+    hybrid = cfg.family == "hybrid" and cfg.attn_every
+    p = cfg.attn_every if hybrid else 1
+    l1, l2 = p, 2 * p
+    t1, t2 = 512, 1024
+    ls, ts = cfg.n_layers / p * p, shape.seq_len   # L* counted in layers
+    lstar = cfg.n_layers / p                        # in periods
+    fs = {}
+    for li in (l1, l2):
+        for ti in (t1, t2):
+            pcfg = dc.replace(cfg, n_layers=li)
+            pshape = dc.replace(shape, seq_len=ti)
+            low = _lower_cell(pcfg, pshape, mesh, {**opts, "q_chunk": 0},
+                              unroll=True)
+            comp = low.compile()
+            fs[(li, ti)] = _measure(comp)
+            del comp, low
+
+    def solve(key):
+        f11, f12 = fs[(l1, t1)][key], fs[(l1, t2)][key]
+        f21, f22 = fs[(l2, t1)][key], fs[(l2, t2)][key]
+        lb = (f22 - f21 - f12 + f11) / ((l2 - l1) / p * (t2 - t1))
+        la = (f21 - f11) / ((l2 - l1) / p) - lb * t1
+        bb = (f12 - f11) / (t2 - t1) - (l1 / p) * lb
+        ba = f11 - bb * t1 - (l1 / p) * (la + lb * t1)
+        return ba + bb * ts + lstar * (la + lb * ts)
+
+    out = {k: solve(k) for k in ("flops", "bytes", "coll_wire")}
+    if hybrid and cfg.n_heads:
+        # quadratic shared-attention correction (scores + AV): the affine
+        # fit linearizes through (t1, t2); add the residual at T*.
+        dp = mesh.shape["data"] * mesh.shape.get("pod", 1)
+        b_loc = max(shape.global_batch // dp, 1)
+        h_loc = (cfg.n_heads_padded or cfg.n_heads) // cfg.tp
+        passes = 4.0 if shape.kind == "train" else 1.0
+        n_attn = cfg.n_layers / cfg.attn_every
+
+        def quad(t):
+            return 2 * 2 * b_loc * h_loc * float(t) ** 2 * cfg.head_dim
+        line = quad(t1) + (quad(t2) - quad(t1)) / (t2 - t1) * (ts - t1)
+        out["flops"] += passes * n_attn * (quad(ts) - line)
+    return out
+
+
+def _probe_plan(cfg):
+    """(probe configs, combine fn) for per-layer extrapolation."""
+    if cfg.is_encdec:
+        p1 = dataclasses.replace(cfg, enc_layers=1, dec_layers=1)
+        p2 = dataclasses.replace(cfg, enc_layers=2, dec_layers=2)
+        n = cfg.dec_layers
+
+        def combine(f1, f2):
+            return f1 + (n - 1) * (f2 - f1)
+        return [p1, p2], combine
+    if cfg.family == "hybrid" and cfg.attn_every:
+        p = cfg.attn_every
+        n_periods, leftover = divmod(cfg.n_layers, p)
+        p1 = dataclasses.replace(cfg, n_layers=p)
+        p2 = dataclasses.replace(cfg, n_layers=2 * p)
+        p3 = dataclasses.replace(cfg, n_layers=p + 1)
+
+        def combine(f1, f2, f3):
+            return (f1 + (n_periods - 1) * (f2 - f1) + leftover * (f3 - f1))
+        return [p1, p2, p3], combine
+    p1 = dataclasses.replace(cfg, n_layers=1)
+    p2 = dataclasses.replace(cfg, n_layers=2)
+    n = cfg.n_layers
+
+    def combine(f1, f2):
+        return f1 + (n - 1) * (f2 - f1)
+    return [p1, p2], combine
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             quant: str = "none", probe: bool = True,
+             opt_overrides: dict | None = None,
+             cfg_overrides: dict | None = None) -> dict:
+    from repro.configs import SHAPES, get_config
+    from repro.launch.mesh import make_production_mesh
+
+    t_start = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch).resolve_for_mesh(tp=mesh.shape["model"])
+    if quant != "none":
+        cfg = dataclasses.replace(cfg, quant=quant)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    opts = _opts(cfg, shape)
+    if opt_overrides:
+        opts.update(opt_overrides)
+
+    unroll_main = shape.kind == "decode"
+    with jax.set_mesh(mesh):
+        lowered = _lower_cell(cfg, shape, mesh, opts, unroll=unroll_main)
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+        main = _measure(compiled)
+        del compiled, lowered
+
+        probes = {}
+        if probe and not unroll_main:
+            if cfg.family in ("ssm", "hybrid"):
+                probes = _affine_probe(cfg, shape, mesh, opts, None)
+            else:
+                probe_cfgs, combine = _probe_plan(cfg)
+                ms = []
+                for i, pcfg in enumerate(probe_cfgs):
+                    pl = _lower_cell(pcfg, shape, mesh, opts, unroll=True)
+                    pc = pl.compile()
+                    ms.append(_measure(pc))
+                    del pc, pl
+                probes = {
+                    "flops": combine(*[m["flops"] for m in ms]),
+                    "bytes": combine(*[m["bytes"] for m in ms]),
+                    "coll_wire": combine(*[float(m["coll_wire"]) for m in ms]),
+                }
+    t_probe = time.time()
+
+    n_dev = mesh.devices.size
+    flops = probes.get("flops", main["flops"])
+    hbytes = probes.get("bytes", main["bytes"])
+    coll = probes.get("coll_wire", main["coll_wire"])
+    base = get_config(arch)
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "quant": quant, "n_devices": int(n_dev),
+        "opts": {k: (bool(v) if isinstance(v, bool) else v)
+                 for k, v in opts.items()},
+        "mode": "unrolled-exact" if unroll_main else "scan+probe",
+        "lower_s": round(t_lower - t_start, 2),
+        "compile_s": round(t_compile - t_lower, 2),
+        "probe_s": round(t_probe - t_compile, 2),
+        "flops_per_device": float(flops),
+        "bytes_per_device": float(hbytes),
+        "collective_bytes_per_device": float(coll),
+        "collectives_scanned_program": main["coll_by_op"],
+        "memory": {**main["mem"],
+                   "per_device_hbm_bytes": int(
+                       (main["mem"]["argument"] + main["mem"]["output"]
+                        - main["mem"]["alias"]) / n_dev
+                       + main["mem"]["temp"] / n_dev)},
+        "model": {
+            "params": int(base.param_count()),
+            "params_padded": int(cfg.param_count(padded=True)),
+            "active_params": int(base.active_param_count()),
+        },
+    }
+    return result
+
+
+def _opt_shardings(abstract_opt, p_shardings, mesh):
+    from repro.distributed.sharding import replicated
+    from repro.optim.optimizer import AdamWState
+    return AdamWState(step=replicated(mesh),
+                      mu=jax.tree.map(lambda s: s, p_shardings),
+                      nu=jax.tree.map(lambda s: s, p_shardings))
+
+
+def cell_name(arch, shape, mesh_kind, quant="none"):
+    q = "" if quant == "none" else f"-{quant}"
+    return f"{arch}__{shape}__{mesh_kind}{q}"
+
+
+def all_cells():
+    """Single-pod cells first (they feed the roofline), then multi-pod."""
+    from repro.configs import ARCHS, shapes_for
+    for mesh_kind in ("single", "multi"):
+        for arch in sorted(ARCHS):
+            for shape in shapes_for(arch):
+                yield arch, shape, mesh_kind
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--quant", default="none", choices=["none", "bitgnn"])
+    ap.add_argument("--no-probe", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=2400)
+    args = ap.parse_args()
+    RESULTS.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        failures = []
+        for arch, shape, mesh_kind in all_cells():
+            out = RESULTS / f"{cell_name(arch, shape, mesh_kind)}.json"
+            if out.exists() and not args.force:
+                print(f"[skip] {out.name}", flush=True)
+                continue
+            print(f"[run ] {arch} x {shape} x {mesh_kind}", flush=True)
+            t0 = time.time()
+            try:
+                # in-process: saves ~60s interpreter/jax startup per cell
+                result = run_cell(arch, shape, mesh_kind,
+                                  probe=(mesh_kind == "single"))
+                out.write_text(json.dumps(result, indent=2))
+                print(f"[done] {out.name} ({time.time()-t0:.0f}s)",
+                      flush=True)
+            except Exception:
+                failures.append((arch, shape, mesh_kind))
+                traceback.print_exc()
+        print(f"\n{len(failures)} failures: {failures}")
+        sys.exit(1 if failures else 0)
+
+    try:
+        result = run_cell(args.arch, args.shape, args.mesh, quant=args.quant,
+                          probe=not args.no_probe)
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+    out = RESULTS / f"{cell_name(args.arch, args.shape, args.mesh, args.quant)}.json"
+    out.write_text(json.dumps(result, indent=2))
+    print(json.dumps(result, indent=2))
+
+
+if __name__ == "__main__":
+    main()

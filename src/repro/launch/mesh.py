@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state. Single pod: (16, 16) = 256 chips, axes
+("data", "model"). Multi-pod: (2, 16, 16) = 512 chips with a leading "pod"
+axis (pure data parallelism across pods; ICI within a pod, DCN across).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
+    """Tiny mesh over the locally available devices (tests / examples)."""
+    n = len(jax.devices())
+    data = max(n // model, 1)
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def dp_axes(mesh: jax.sharding.Mesh):
+    """The data-parallel mesh axes (includes "pod" when present)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

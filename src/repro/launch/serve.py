@@ -1,0 +1,56 @@
+"""Serving launcher: continuous-batching engine on a reduced config (host) or
+the full-config decode dry-run (single/multi mesh).
+
+    python -m repro.launch.serve --arch stablelm-1.6b --requests 8
+    python -m repro.launch.serve --arch llava-next-34b --mesh single
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--mesh", default="host",
+                    choices=["host", "single", "multi"])
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--quant", default="none", choices=["none", "bitgnn"])
+    args = ap.parse_args()
+
+    if args.mesh in ("single", "multi"):
+        from repro.launch.dryrun import run_cell
+        import json
+        r = run_cell(args.arch, "decode_32k", args.mesh, quant=args.quant)
+        print(json.dumps(r, indent=2))
+        return
+
+    import jax
+    import numpy as np
+    from repro.configs import get_config, reduced_config
+    from repro.models import transformer
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = reduced_config(get_config(args.arch)).resolve_for_mesh(tp=1)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    if args.quant == "bitgnn":
+        from repro.quant.binary_linear import quantize_params
+        params = quantize_params(params)
+    eng = ServeEngine(cfg, params, max_batch=4, max_len=256)
+    rng = np.random.default_rng(0)
+    import time
+    t0 = time.time()
+    for rid in range(args.requests):
+        eng.submit(Request(rid=rid,
+                           prompt=rng.integers(0, cfg.vocab, 8),
+                           max_new_tokens=args.max_new))
+    done = eng.run_until_done()
+    dt = time.time() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    print(f"served {len(done)} requests, {toks} tokens in {dt:.1f}s "
+          f"({toks/dt:.1f} tok/s on CPU)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model definitions: GNNs (paper) + the 10 assigned LM architectures."""
+from . import gnn, layers, moe, ssm, transformer

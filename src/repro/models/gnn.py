@@ -1,0 +1,305 @@
+"""GNN models: GCN / GraphSAGE / GraphSAINT — fp32, Bi-GCN baseline, and
+BitGNN binary inference paths (paper §2.1, §4.1).
+
+Three execution paths per model:
+  * ``*_fp``      — full-precision reference (PyG-equivalent semantics);
+  * ``*_bigcn``   — the Bi-GCN baseline: *logically* binarized (sign() and
+    scales applied, values stored fp32, fp32 matmuls) — the paper's
+    state-of-the-art comparison that shows NO speed/memory gain;
+  * ``*_bitgnn``  — BitGNN packed-bit inference through the two-level
+    abstraction (schemes: "full" = full-precision aggregation, "bin" =
+    binary aggregation; Table 3's "Ours (full)" / "Ours (bin)").
+
+Training uses straight-through estimators so the binarized inference paths
+can be validated for ACCURACY PARITY against their own training forward.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import abstraction, bitops, frdc
+from repro.core.binarize import BinTensor, straight_through_sign
+from repro.core.bmm import bmm, quantize_act, quantize_weight
+from repro.core.bspmm import bspmm
+from repro.optim.optimizer import AdamW
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+class GCNParams(NamedTuple):
+    w1: jax.Array
+    w2: jax.Array
+
+
+class SAGEParams(NamedTuple):
+    w1_self: jax.Array
+    w1_agg: jax.Array
+    w2_self: jax.Array
+    w2_agg: jax.Array
+
+
+class SAINTParams(NamedTuple):
+    w1_self: jax.Array
+    w1_agg: jax.Array
+    w2_self: jax.Array
+    w2_agg: jax.Array
+    w_fc: jax.Array
+
+
+def _glorot(key, shape):
+    lim = float(np.sqrt(6.0 / (shape[0] + shape[1])))
+    return jax.random.uniform(key, shape, jnp.float32, -lim, lim)
+
+
+def init_gcn(key, n_feat: int, hidden: int, n_classes: int) -> GCNParams:
+    k1, k2 = jax.random.split(key)
+    return GCNParams(_glorot(k1, (n_feat, hidden)), _glorot(k2, (hidden, n_classes)))
+
+
+def init_sage(key, n_feat: int, hidden: int, n_classes: int) -> SAGEParams:
+    ks = jax.random.split(key, 4)
+    return SAGEParams(_glorot(ks[0], (n_feat, hidden)),
+                      _glorot(ks[1], (n_feat, hidden)),
+                      _glorot(ks[2], (hidden, n_classes)),
+                      _glorot(ks[3], (hidden, n_classes)))
+
+
+def init_saint(key, n_feat: int, hidden: int, n_classes: int) -> SAINTParams:
+    ks = jax.random.split(key, 5)
+    return SAINTParams(_glorot(ks[0], (n_feat, hidden)),
+                       _glorot(ks[1], (n_feat, hidden)),
+                       _glorot(ks[2], (hidden, hidden)),
+                       _glorot(ks[3], (hidden, hidden)),
+                       _glorot(ks[4], (hidden, n_classes)))
+
+
+# ---------------------------------------------------------------------------
+# Aggregation backends (the FP32 (S) / FP32 (T) rows of Tables 3-5)
+# ---------------------------------------------------------------------------
+
+def aggregate_scatter(edges: jax.Array, x: jax.Array, n: int,
+                      norm: Optional[jax.Array] = None) -> jax.Array:
+    """PyG scatter-gather semantics: per-edge gather + scatter-add."""
+    src, dst = edges
+    msgs = x[src]
+    if norm is not None:
+        msgs = msgs * norm[:, None]
+    return jax.ops.segment_sum(msgs, dst, num_segments=n)
+
+
+def aggregate_dense(adj_dense: jax.Array, x: jax.Array) -> jax.Array:
+    """PyG SpMM-tensor semantics (dense matmul stand-in on CPU)."""
+    return adj_dense @ x
+
+
+# ---------------------------------------------------------------------------
+# STE binarization helpers (training-time)
+# ---------------------------------------------------------------------------
+
+def _ste_binarize_w(w: jax.Array) -> jax.Array:
+    scale = jnp.mean(jnp.abs(w), axis=0, keepdims=True)
+    return straight_through_sign(w) * scale
+
+
+def _ste_binarize_x(x: jax.Array) -> jax.Array:
+    scale = jnp.mean(jnp.abs(x), axis=-1, keepdims=True)
+    return straight_through_sign(x) * scale
+
+
+def batch_norm(x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Per-feature standardization — the BN stage that precedes every BIN in
+    Bi-GCN (paper Fig. 1). Without it, sign() of nonnegative inputs (sparse
+    bag-of-words features, post-ReLU activations) collapses to all +1."""
+    mu = jnp.mean(x, axis=0, keepdims=True)
+    sd = jnp.std(x, axis=0, keepdims=True) + eps
+    return (x - mu) / sd
+
+
+# ---------------------------------------------------------------------------
+# GCN forwards
+# ---------------------------------------------------------------------------
+
+def gcn_forward_fp(params: GCNParams, x, adj_dense):
+    h = jax.nn.relu(adj_dense @ (x @ params.w1))
+    return adj_dense @ (h @ params.w2)
+
+
+def gcn_forward_bigcn(params: GCNParams, x, adj_dense):
+    """Bi-GCN baseline: BN -> BIN -> BMM -> SCL -> SpMM per layer (Fig. 1),
+    logically binarized: fp32 storage & compute."""
+    h = _ste_binarize_x(batch_norm(x)) @ _ste_binarize_w(params.w1)
+    h = jax.nn.relu(adj_dense @ h)
+    h = _ste_binarize_x(batch_norm(h)) @ _ste_binarize_w(params.w2)
+    return adj_dense @ h
+
+
+def gcn_forward_ste_bin(params: GCNParams, x, adj_hat_dense, adj_dense):
+    """Training forward matching the BitGNN "bin" scheme (binary aggregation
+    with the unnormalized 0/1 adjacency in layer 1)."""
+    h = batch_norm(x) @ _ste_binarize_w(params.w1)   # BN + MM.FB?
+    s = straight_through_sign(h)                      # BIN (unit scale)
+    agg = adj_hat_dense @ s                           # binary aggregation
+    h1 = straight_through_sign(agg)                   # output BIN
+    h2 = (h1 @ _ste_binarize_w(params.w2))            # MM.BB?
+    return adj_dense @ h2                             # fp aggregation
+
+
+class GCNQuant(NamedTuple):
+    w1: BinTensor
+    w2: BinTensor
+
+
+def quantize_gcn(params: GCNParams) -> GCNQuant:
+    return GCNQuant(quantize_weight(params.w1), quantize_weight(params.w2))
+
+
+def gcn_forward_bitgnn(q: GCNQuant, x, adj: frdc.FRDCMatrix,
+                       adj_bin: frdc.FRDCMatrix, scheme: str = "bin",
+                       trinary_mode: str = "s3_two_popc"):
+    """BitGNN packed inference.
+
+    scheme="full": BIN -> BMM.BBF -> BSpMM.FBF per layer (fp aggregation).
+    scheme="bin":  layer1 BMM.FBB + BSpMM.BBB (binary aggregation over the
+                   0/1 adjacency), layer2 BMM.BBF + BSpMM.FBF — exactly the
+                   Table 3 "Ours (bin)" configuration.
+    """
+    if scheme == "full":
+        l1 = abstraction.MMSpMM("BMM.BBF", "BSpMM.FBF")
+        h = l1(quantize_act(batch_norm(x)), q.w1, adj)
+        h = jax.nn.relu(h)
+        l2 = abstraction.MMSpMM("BMM.BBF", "BSpMM.FBF")
+        return l2(quantize_act(batch_norm(h)), q.w2, adj)
+    if scheme == "bin":
+        l1 = abstraction.MMSpMM("BMM.FBB", "BSpMM.BBB")
+        h_bits = l1(batch_norm(x), q.w1, adj_bin, trinary_mode=trinary_mode,
+                    out_scale=False)
+        l2 = abstraction.MMSpMM("BMM.BBF", "BSpMM.FBF")
+        return l2(h_bits, q.w2, adj)
+    raise ValueError(scheme)
+
+
+# ---------------------------------------------------------------------------
+# SAGE forwards (mean aggregator + self weight; paper §2.1 SAGEConv)
+# ---------------------------------------------------------------------------
+
+def sage_forward_fp(params: SAGEParams, x, adj_mean_dense):
+    h = x @ params.w1_self + (adj_mean_dense @ x) @ params.w1_agg
+    h = jax.nn.relu(h)
+    return h @ params.w2_self + (adj_mean_dense @ h) @ params.w2_agg
+
+
+def sage_forward_bigcn(params: SAGEParams, x, adj_mean_dense):
+    xb = _ste_binarize_x(batch_norm(x))
+    h = xb @ _ste_binarize_w(params.w1_self) \
+        + (adj_mean_dense @ xb) @ _ste_binarize_w(params.w1_agg)
+    h = jax.nn.relu(h)
+    hb = _ste_binarize_x(batch_norm(h))
+    return hb @ _ste_binarize_w(params.w2_self) \
+        + (adj_mean_dense @ hb) @ _ste_binarize_w(params.w2_agg)
+
+
+class SAGEQuant(NamedTuple):
+    w1_self: BinTensor
+    w1_agg: BinTensor
+    w2_self: BinTensor
+    w2_agg: BinTensor
+
+
+def quantize_sage(params: SAGEParams) -> SAGEQuant:
+    return SAGEQuant(*(quantize_weight(w) for w in params))
+
+
+def sage_forward_bitgnn(q: SAGEQuant, x, adj_mean: frdc.FRDCMatrix):
+    """BitGNN SAGE: BMM for both branches + BSpMM.FBF mean aggregation,
+    merged by ADD (paper Fig. 2 SAGE.bin). Aggregation is applied AFTER the
+    transform — ``(A @ xb) @ W == A @ (xb @ W)`` — so the packed path is
+    bit-exact with the Bi-GCN training forward while running the cheap
+    (hidden-width) BSpMM."""
+    xq = quantize_act(batch_norm(x))
+    h = bmm(xq, q.w1_self, "BBF") \
+        + bspmm(adj_mean, bmm(xq, q.w1_agg, "BBF"), "FBF")
+    h = jax.nn.relu(h)
+    hq = quantize_act(batch_norm(h))
+    return bmm(hq, q.w2_self, "BBF") \
+        + bspmm(adj_mean, bmm(hq, q.w2_agg, "BBF"), "FBF")
+
+
+# ---------------------------------------------------------------------------
+# SAINT forwards (GraphConv sum aggregator x2 + FC; paper §2.1)
+# ---------------------------------------------------------------------------
+
+def saint_forward_fp(params: SAINTParams, x, adj_sum_dense):
+    h = x @ params.w1_self + (adj_sum_dense @ x) @ params.w1_agg
+    h = jax.nn.relu(h)
+    h = h @ params.w2_self + (adj_sum_dense @ h) @ params.w2_agg
+    h = jax.nn.relu(h)
+    return h @ params.w_fc
+
+
+class SAINTQuant(NamedTuple):
+    w1_self: BinTensor
+    w1_agg: BinTensor
+    w2_self: BinTensor
+    w2_agg: BinTensor
+    w_fc: BinTensor
+
+
+def quantize_saint(params: SAINTParams) -> SAINTQuant:
+    return SAINTQuant(*(quantize_weight(w) for w in params))
+
+
+def saint_forward_bitgnn(q: SAINTQuant, x, adj_sum: frdc.FRDCMatrix):
+    xq = quantize_act(batch_norm(x))
+    h = bmm(xq, q.w1_self, "BBF") \
+        + bspmm(adj_sum, bmm(xq, q.w1_agg, "BBF"), "FBF")
+    h = jax.nn.relu(h)
+    hq = quantize_act(batch_norm(h))
+    h = bmm(hq, q.w2_self, "BBF") \
+        + bspmm(adj_sum, bmm(hq, q.w2_agg, "BBF"), "FBF")
+    h = jax.nn.relu(h)
+    return bmm(quantize_act(batch_norm(h)), q.w_fc, "BBF")
+
+
+# ---------------------------------------------------------------------------
+# Training (full-batch node classification) & evaluation
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels, mask):
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.sum(nll * mask) / jnp.sum(mask)
+
+
+def accuracy(logits, labels, mask) -> float:
+    pred = jnp.argmax(logits, axis=-1)
+    return float(jnp.sum((pred == labels) * mask) / jnp.sum(mask))
+
+
+def train_node_classifier(forward: Callable, params, inputs: tuple,
+                          y: jax.Array, train_mask: jax.Array,
+                          epochs: int = 150, lr: float = 1e-2,
+                          weight_decay: float = 5e-4):
+    """Full-batch training of any forward(params, *inputs) model."""
+    opt = AdamW(lr=lr, weight_decay=weight_decay)
+    state = opt.init(params)
+    mask = train_mask.astype(jnp.float32)
+
+    @jax.jit
+    def step(params, state):
+        def loss_fn(p):
+            return cross_entropy(forward(p, *inputs), y, mask)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, state = opt.update(grads, state, params)
+        return params, state, loss
+
+    loss = jnp.inf
+    for _ in range(epochs):
+        params, state, loss = step(params, state)
+    return params, float(loss)

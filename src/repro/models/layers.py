@@ -1,0 +1,272 @@
+"""Transformer building blocks: norms, RoPE, GQA attention (train / chunked
+prefill / KV-cache decode), MLPs, embeddings — all sharding-friendly and
+usable under ``jax.eval_shape`` for the dry-run.
+
+BitGNN integration: ``linear()`` transparently consumes either a plain fp
+weight or a bit-packed ``{"packed","scale"}`` dict produced by
+``repro.quant.binary_linear`` (32x smaller weight storage; see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Primitives
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return (((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+            * scale + bias)
+
+
+def linear(w, x: jax.Array) -> jax.Array:
+    """x @ W with optional BitGNN bit-packed weight.
+
+    Packed form: {"packed": (out, in/32) uint32, "scale": (out,)}; bits are
+    signs packed along the contraction axis (``quantize_linear``). The unpack
+    runs in-graph (sign = 2*bit-1, times positive per-output scale).
+    """
+    if isinstance(w, dict) and "packed" in w:
+        packed, scale = w["packed"], w["scale"]
+        n_in = x.shape[-1]
+        k = jnp.arange(32, dtype=jnp.uint32)
+        bits = (packed[:, :, None] >> k) & jnp.uint32(1)          # (out,W,32)
+        pm1 = (2.0 * bits.astype(x.dtype) - 1.0).reshape(packed.shape[0], -1)
+        w_eff = (pm1[:, :n_in] * scale[:, None]).T                # (in, out)
+        return x @ w_eff
+    return x @ w
+
+
+def _init(key, shape, in_axis_size, dtype):
+    std = 1.0 / math.sqrt(in_axis_size)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, T, H, hd); positions: (B, T) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs     # (B,T,half)
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype):
+    """GQA projections with the TP padding policy applied.
+
+    q heads: ``n_heads_padded``; kv heads physically materialized at
+    ``max(n_kv_heads_padded, tp)`` (replication for tp > kv is explicit so
+    each model shard owns its kv slice — Megatron GQA practice)."""
+    d, hd = cfg.d_model, cfg.head_dim
+    hq = cfg.n_heads_padded or cfg.n_heads
+    kvc = kv_compute_heads(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _init(ks[0], (d, hq * hd), d, dtype),
+        "wk": _init(ks[1], (d, kvc * hd), d, dtype),
+        "wv": _init(ks[2], (d, kvc * hd), d, dtype),
+        "wo": _init(ks[3], (hq * hd, d), hq * hd, dtype),
+    }
+
+
+def kv_compute_heads(cfg: ModelConfig) -> int:
+    kvp = cfg.n_kv_heads_padded or cfg.n_kv_heads
+    return max(kvp, cfg.tp) if cfg.tp > 1 else kvp
+
+
+def _sdpa(q, k, v, causal: bool, q_offset, kv_len: Optional[jax.Array] = None):
+    """(B,Tq,H,hd) x (B,S,H,hd): scores materialized per call (callers chunk)."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
+    s = k.shape[1]
+    kpos = jnp.arange(s)
+    if causal:
+        qpos = q_offset + jnp.arange(q.shape[1])
+        mask = kpos[None, :] <= qpos[:, None]
+        scores = jnp.where(mask[None, None], scores, -1e9)
+    if kv_len is not None:  # decode: mask cache tail beyond current length
+        scores = jnp.where((kpos < kv_len)[None, None, None, :], scores, -1e9)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _sdpa_grouped(q, k, v, causal: bool, q_offset, kv_len=None):
+    """GQA without materializing repeated K/V (§Perf B2): q is reshaped to
+    (B,Tq,KV,G,hd) and contracted straight against the KV-head tensors — the
+    cache is read ONCE instead of G times."""
+    b, tq, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    q5 = q.reshape(b, tq, hkv, g, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q5, k) / math.sqrt(hd)
+    s = k.shape[1]
+    kpos = jnp.arange(s)
+    if causal:
+        qpos = q_offset + jnp.arange(tq)
+        mask = kpos[None, :] <= qpos[:, None]
+        scores = jnp.where(mask[None, None, None], scores, -1e9)
+    if kv_len is not None:
+        scores = jnp.where((kpos < kv_len)[None, None, None, None, :],
+                           scores, -1e9)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, tq, hq, hd)
+
+
+GQA_NO_REPEAT = False   # flipped by §Perf variants (see perf_hillclimb)
+
+
+def multi_head_attention(q, k, v, causal: bool = True, q_chunk: int = 0,
+                         q_offset: int = 0, kv_len=None):
+    """Exact attention, optionally Q-chunked so the (C, S) score block — not
+    (T, S) — bounds live memory for 32k prefill (DESIGN.md §7). Chunks are an
+    unrolled Python loop so the dry-run's cost analysis counts every FLOP."""
+    hq, hkv = q.shape[2], k.shape[2]
+    attn = _sdpa
+    if hq != hkv:
+        if GQA_NO_REPEAT:
+            attn = _sdpa_grouped
+        else:
+            k = jnp.repeat(k, hq // hkv, axis=2)
+            v = jnp.repeat(v, hq // hkv, axis=2)
+    tq = q.shape[1]
+    if not q_chunk or tq <= q_chunk:
+        return attn(q, k, v, causal, q_offset, kv_len)
+    outs = []
+    for c0 in range(0, tq, q_chunk):
+        c1 = min(c0 + q_chunk, tq)
+        outs.append(attn(q[:, c0:c1], k, v, causal, q_offset + c0, kv_len))
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention_block(params, x, positions, cfg: ModelConfig, causal=True,
+                    q_chunk: int = 0, cache=None, cache_pos=None,
+                    kv_override=None):
+    """Full attention block: proj -> rope -> sdpa -> out-proj.
+
+    cache: {"k","v"} (B, S, KVC, hd) ring buffers for decode; cache_pos is
+    the write position (scalar). kv_override short-circuits projection for
+    cross-attention (pre-computed encoder memory).
+    Returns (out, new_cache).
+    """
+    b, t, d = x.shape
+    hd = cfg.head_dim
+    hq = cfg.n_heads_padded or cfg.n_heads
+    kvc = kv_compute_heads(cfg)
+    q = linear(params["wq"], x).reshape(b, t, hq, hd)
+    if kv_override is not None:
+        k, v = kv_override
+        q = rope(q, positions, cfg.rope_theta)
+        new_cache = cache
+        kv_len = None
+    else:
+        k = linear(params["wk"], x).reshape(b, t, kvc, hd)
+        v = linear(params["wv"], x).reshape(b, t, kvc, hd)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        if cache is not None and "k_scale" in cache:
+            # int8 KV cache (§Perf): per-(position, head) symmetric scales;
+            # the dequant multiply fuses into the attention dots.
+            def quant(u):
+                s = jnp.max(jnp.abs(u), axis=-1, keepdims=True) / 127.0 + 1e-8
+                return jnp.round(u / s).astype(jnp.int8), s.astype(u.dtype)
+            kq, ks = quant(k)
+            vq, vs = quant(v)
+            upd = lambda buf, val: jax.lax.dynamic_update_slice(
+                buf, val, (0, cache_pos) + (0,) * (buf.ndim - 2))
+            new_cache = {"k": upd(cache["k"], kq),
+                         "v": upd(cache["v"], vq),
+                         "k_scale": upd(cache["k_scale"], ks),
+                         "v_scale": upd(cache["v_scale"], vs)}
+            k = new_cache["k"].astype(x.dtype) * new_cache["k_scale"]
+            v = new_cache["v"].astype(x.dtype) * new_cache["v_scale"]
+            kv_len = cache_pos + t
+        elif cache is not None:
+            k = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
+            v = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
+            new_cache = {"k": k, "v": v}
+            kv_len = cache_pos + t
+        else:
+            new_cache = None
+            kv_len = None
+    out = multi_head_attention(q, k, v, causal=causal and kv_override is None,
+                               q_chunk=q_chunk,
+                               q_offset=0 if cache is None else cache_pos,
+                               kv_len=kv_len)
+    out = linear(params["wo"], out.reshape(b, t, hq * hd))
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, ff: int, act: str, dtype):
+    k1, k2 = jax.random.split(key)
+    if act == "swiglu":
+        return {"wi": _init(k1, (d, 2 * ff), d, dtype),
+                "wo": _init(k2, (ff, d), ff, dtype)}
+    return {"wi": _init(k1, (d, ff), d, dtype),
+            "wo": _init(k2, (ff, d), ff, dtype)}
+
+
+def mlp_block(params, x, act: str):
+    h = linear(params["wi"], x)
+    if act == "swiglu":
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(h)
+    return linear(params["wo"], h)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, cfg: ModelConfig, dtype):
+    v = cfg.vocab_padded or cfg.vocab
+    table = _init(key, (v, cfg.d_model), cfg.d_model, dtype)
+    return {"table": table}
+
+
+def embed(params, tokens: jax.Array) -> jax.Array:
+    return params["table"][tokens]
+
+
+def lm_head(params, x: jax.Array, logical_vocab: int) -> jax.Array:
+    logits = x @ params["table"].T
+    v = logits.shape[-1]
+    if v > logical_vocab:  # mask padding vocab out of the softmax
+        neg = jnp.full((v - logical_vocab,), -1e9, logits.dtype)
+        logits = logits.at[..., logical_vocab:].set(neg)
+    return logits

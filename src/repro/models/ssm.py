@@ -1,0 +1,294 @@
+"""State-space blocks: Mamba2 (zamba2 hybrid) and RWKV6 "Finch" time-mix.
+
+Both use chunked linear-recurrence algorithms: O(T/Q * Q^2) intra-chunk
+matmuls (MXU-friendly) plus an O(1)-per-chunk carried state — the standard
+TPU-native formulation (quadratic attention would be O(T^2); sequential scan
+would serialize). The chunk loop is a Python loop when ``unroll`` (dry-run
+FLOP counting) else ``lax.scan`` (training compile time).
+
+Decode steps are O(1): a single state update per token — this is why the
+``long_500k`` shape runs only for these families (DESIGN.md §5).
+
+SSM states stay in fp32 (accumulator precision — binarizing them is
+unboundedly lossy; see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import _init, linear
+
+CHUNK = 256
+_CONV_K = 4
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD, n_groups=1)
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads_padded or cfg.ssm_heads
+    p_dim = cfg.ssm_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": _init(ks[0], (d, h * p_dim), d, dtype),
+        "wx": _init(ks[1], (d, h * p_dim), d, dtype),
+        "wB": _init(ks[2], (d, n), d, dtype),
+        "wC": _init(ks[3], (d, n), d, dtype),
+        "wdt": _init(ks[4], (d, h), d, dtype),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "conv_w": _init(ks[5], (_CONV_K, h * p_dim), _CONV_K, dtype),
+        "norm_scale": jnp.ones((h * p_dim,), dtype),
+        "wo": _init(ks[6], (h * p_dim, d), h * p_dim, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv (k=4) via shifted adds. x: (B, T, C); state:
+    (B, K-1, C) tail of the previous segment. Returns (y, new_state)."""
+    b, t, c = x.shape
+    if state is None:
+        state = jnp.zeros((b, _CONV_K - 1, c), x.dtype)
+    ext = jnp.concatenate([state, x], axis=1)
+    y = sum(ext[:, i:i + t] * w[i] for i in range(_CONV_K))
+    return y, ext[:, -(_CONV_K - 1):]
+
+
+def mamba_block(params, x, cfg: ModelConfig, unroll: bool,
+                cache: Optional[dict] = None):
+    """x: (B, T, d). cache (decode): {"S": (B,H,P,N) fp32, "conv": (B,3,HP)}.
+    Returns (y, new_cache)."""
+    b, t, d = x.shape
+    h = cfg.ssm_heads_padded or cfg.ssm_heads
+    p_dim, n = cfg.ssm_head_dim, cfg.ssm_state
+
+    z = linear(params["wz"], x)
+    xh = linear(params["wx"], x)
+    conv_state = None if cache is None else cache["conv"]
+    xh, new_conv = _causal_conv(xh, params["conv_w"], conv_state)
+    xh = jax.nn.silu(xh)
+    bmat = linear(params["wB"], x).astype(jnp.float32)      # (B,T,N)
+    cmat = linear(params["wC"], x).astype(jnp.float32)      # (B,T,N)
+    dt = jax.nn.softplus(linear(params["wdt"], x).astype(jnp.float32)
+                         + params["dt_bias"])               # (B,T,H)
+    a = -jnp.exp(params["A_log"])                            # (H,)
+    da = dt * a                                              # (B,T,H) <= 0
+
+    xs = xh.reshape(b, t, h, p_dim).astype(jnp.float32)
+    s0 = (jnp.zeros((b, h, p_dim, n), jnp.float32) if cache is None
+          else cache["S"])
+
+    def chunk_step_clean(s, args):
+        xq, bq, cq, dtq, daq = args
+        q_ = xq.shape[1]
+        lq = jnp.cumsum(daq, axis=1)
+        cb = jnp.einsum("bin,bjn->bij", cq, bq)
+        dec = jnp.exp(lq[:, :, None, :] - lq[:, None, :, :])
+        mask = jnp.tril(jnp.ones((q_, q_), bool))
+        w_ij = jnp.where(mask[None, :, :, None],
+                         cb[:, :, :, None] * dec * dtq[:, None, :, :], 0.0)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w_ij, xq)
+        cd = jnp.exp(lq)                                     # (B,Q,H)
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", cq, s, cd)
+        lq_end = lq[:, -1:, :]
+        contrib = jnp.einsum("bjh,bjn,bjhp->bhpn",
+                             dtq * jnp.exp(lq_end - lq), bq, xq)
+        s_new = s * jnp.exp(lq_end[:, 0])[..., None, None] + contrib
+        return s_new, y_intra
+
+    if cache is not None and t == 1:  # decode: exact single-step update
+        da1 = da[:, 0]                                       # (B,H)
+        dec = jnp.exp(da1)[..., None, None]
+        contrib = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0], bmat[:, 0], xs[:, 0])
+        s_new = s0 * dec + contrib
+        y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0], s_new)
+        y = y + params["D"][None, :, None] * xs[:, 0]
+        y = y.reshape(b, 1, h * p_dim).astype(x.dtype)
+        new_cache = {"S": s_new, "conv": new_conv}
+    else:
+        nq = -(-t // CHUNK)
+        pad = nq * CHUNK - t
+        def padq(v):
+            return jnp.pad(v, ((0, 0), (0, pad)) + ((0, 0),) * (v.ndim - 2))
+        xq = padq(xs).reshape(b, nq, CHUNK, h, p_dim)
+        bq = padq(bmat).reshape(b, nq, CHUNK, n)
+        cq = padq(cmat).reshape(b, nq, CHUNK, n)
+        dtq = padq(dt).reshape(b, nq, CHUNK, h)
+        daq = padq(da).reshape(b, nq, CHUNK, h)
+
+        def step(s, i):
+            args = (xq[:, i], bq[:, i], cq[:, i], dtq[:, i], daq[:, i])
+            s_new, y_intra = chunk_step_clean(s, args)
+            cd = jnp.exp(jnp.cumsum(daq[:, i], axis=1))
+            y_inter = jnp.einsum("bin,bhpn,bih->bihp", cq[:, i], s, cd)
+            return s_new, y_intra + y_inter
+
+        if unroll:
+            ys, s = [], s0
+            for i in range(nq):
+                s, y_i = step(s, i)
+                ys.append(y_i)
+            y = jnp.concatenate(ys, axis=1)[:, :t]
+        else:
+            s, ys = jax.lax.scan(step, s0, jnp.arange(nq))
+            y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nq * CHUNK, h, p_dim)[:, :t]
+        y = y + params["D"][None, None, :, None] * xs[:, :t]
+        y = y.reshape(b, t, h * p_dim).astype(x.dtype)
+        new_cache = None if cache is None else {"S": s, "conv": new_conv}
+
+    # gated RMSNorm + out proj (Mamba2 epilogue)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-6).astype(y.dtype)) * params["norm_scale"]
+    return linear(params["wo"], y), new_cache
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) — data-dependent per-channel decay, chunked GLA form
+# ---------------------------------------------------------------------------
+
+_LORA = 32
+_CLAMP = 30.0
+
+
+def init_rwkv(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    h = cfg.ssm_heads_padded or (d // cfg.ssm_head_dim)
+    hk = cfg.ssm_head_dim
+    dh = h * hk
+    ks = jax.random.split(key, 12)
+    return {
+        "mu": 0.5 * jnp.ones((5, d), dtype),            # r,k,v,w,g token-shift
+        "wr": _init(ks[0], (d, dh), d, dtype),
+        "wk": _init(ks[1], (d, dh), d, dtype),
+        "wv": _init(ks[2], (d, dh), d, dtype),
+        "wg": _init(ks[3], (d, dh), d, dtype),
+        "w0": -6.0 * jnp.ones((dh,), jnp.float32),      # base decay
+        "wA": _init(ks[4], (d, _LORA), d, dtype),       # decay lora
+        "wB": _init(ks[5], (_LORA, dh), _LORA, dtype),
+        "u": jnp.zeros((dh,), jnp.float32),             # bonus
+        "ln_scale": jnp.ones((dh,), dtype),
+        "wo": _init(ks[6], (dh, d), dh, dtype),
+        # channel mix
+        "cm_mu": 0.5 * jnp.ones((2, d), dtype),
+        "cm_wk": _init(ks[7], (d, cfg.d_ff), d, dtype),
+        "cm_wv": _init(ks[8], (cfg.d_ff, d), cfg.d_ff, dtype),
+        "cm_wr": _init(ks[9], (d, d), d, dtype),
+    }
+
+
+def _token_shift(x, mu, last: Optional[jax.Array] = None):
+    """x + mu * (prev_token - x); ``last`` is the previous segment's tail."""
+    b = x.shape[0]
+    prev = jnp.concatenate(
+        [jnp.zeros((b, 1, x.shape[-1]), x.dtype) if last is None
+         else last[:, None, :], x[:, :-1]], axis=1)
+    return x + mu * (prev - x)
+
+
+def rwkv_time_mix(params, x, cfg: ModelConfig, unroll: bool,
+                  cache: Optional[dict] = None):
+    """x: (B,T,d) -> (B,T,d). cache: {"S": (B,H,K,V) fp32, "last": (B,d)}."""
+    b, t, d = x.shape
+    h = cfg.ssm_heads_padded or (d // cfg.ssm_head_dim)
+    hk = cfg.ssm_head_dim
+    last = None if cache is None else cache["last"]
+    xr = _token_shift(x, params["mu"][0], last)
+    xk = _token_shift(x, params["mu"][1], last)
+    xv = _token_shift(x, params["mu"][2], last)
+    xw = _token_shift(x, params["mu"][3], last)
+    xg = _token_shift(x, params["mu"][4], last)
+
+    r = linear(params["wr"], xr).reshape(b, t, h, hk).astype(jnp.float32)
+    k = linear(params["wk"], xk).reshape(b, t, h, hk).astype(jnp.float32)
+    v = linear(params["wv"], xv).reshape(b, t, h, hk).astype(jnp.float32)
+    g = jax.nn.silu(linear(params["wg"], xg))
+
+    lora = jnp.tanh(xw @ params["wA"]) @ params["wB"]       # (B,T,HK)
+    logw = -jnp.exp(jnp.clip(params["w0"] + lora.astype(jnp.float32),
+                             -8.0, 8.0))                    # < 0
+    logw = jnp.maximum(logw, -_CLAMP).reshape(b, t, h, hk)
+    u = params["u"].reshape(h, hk)
+
+    s0 = (jnp.zeros((b, h, hk, hk), jnp.float32) if cache is None
+          else cache["S"])
+
+    if cache is not None and t == 1:
+        r1, k1, v1, w1 = r[:, 0], k[:, 0], v[:, 0], jnp.exp(logw[:, 0])
+        kv = jnp.einsum("bhk,bhv->bhkv", k1, v1)
+        y = jnp.einsum("bhk,bhkv->bhv", r1, s0 + u[None, :, :, None] * kv)
+        s_new = s0 * w1[..., None] + kv
+        y = y[:, None]                                       # (B,1,H,V)
+        new_cache = {"S": s_new, "last": x[:, -1, :]}
+    else:
+        q_sz = min(CHUNK, 64)
+        nq = -(-t // q_sz)
+        pad = nq * q_sz - t
+        def padq(vv, fill=0.0):
+            return jnp.pad(vv, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                           constant_values=fill)
+        rq = padq(r).reshape(b, nq, q_sz, h, hk)
+        kq = padq(k).reshape(b, nq, q_sz, h, hk)
+        vq = padq(v).reshape(b, nq, q_sz, h, hk)
+        lwq = padq(logw).reshape(b, nq, q_sz, h, hk)  # pads decay log(1)=0
+
+        def step(s, i):
+            ri, ki, vi, lw = rq[:, i], kq[:, i], vq[:, i], lwq[:, i]
+            cl = jnp.cumsum(lw, axis=1)                      # (B,Q,H,K) incl.
+            cl_excl = cl - lw
+            q_eff = ri * jnp.exp(jnp.maximum(cl_excl, -_CLAMP))
+            k_eff = ki * jnp.exp(jnp.minimum(-cl, _CLAMP))
+            scores = jnp.einsum("bihk,bjhk->bhij", q_eff, k_eff)
+            mask = jnp.tril(jnp.ones((q_sz, q_sz), bool), k=-1)
+            scores = jnp.where(mask[None, None], scores, 0.0)
+            bonus = jnp.einsum("bihk,hk,bihk->bih", ri, u, ki)
+            y_intra = jnp.einsum("bhij,bjhv->bihv", scores, vi) \
+                + bonus[..., None] * vi
+            y_inter = jnp.einsum("bihk,bhkv->bihv", q_eff, s)
+            cl_end = cl[:, -1]                               # (B,H,K)
+            k_carry = ki * jnp.exp(jnp.maximum(cl_end[:, None] - cl, -_CLAMP))
+            s_new = s * jnp.exp(cl_end)[..., None] \
+                + jnp.einsum("bjhk,bjhv->bhkv", k_carry, vi)
+            return s_new, y_intra + y_inter
+
+        if unroll:
+            ys, s = [], s0
+            for i in range(nq):
+                s, y_i = step(s, i)
+                ys.append(y_i)
+            y = jnp.concatenate(ys, axis=1)[:, :t]
+        else:
+            s, ys = jax.lax.scan(step, s0, jnp.arange(nq))
+            y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nq * q_sz, h, hk)[:, :t]
+        new_cache = None if cache is None else {"S": s, "last": x[:, -1, :]}
+
+    # per-head groupnorm, gate, out-proj
+    y = y.reshape(b, -1, h, hk)
+    mu_ = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = ((y - mu_) * jax.lax.rsqrt(var + 1e-5)).reshape(b, y.shape[1], h * hk)
+    y = (y.astype(x.dtype) * params["ln_scale"]) * g
+    return linear(params["wo"], y), new_cache
+
+
+def rwkv_channel_mix(params, x, cache: Optional[dict] = None):
+    """Returns (out, new_cm_last). Reads the PREVIOUS segment tail from
+    ``cache["cm_last"]``; the caller merges the returned tail into its new
+    cache (the time-mix and channel-mix tails are distinct streams)."""
+    last = None if cache is None else cache.get("cm_last")
+    xk = _token_shift(x, params["cm_mu"][0], last)
+    xr = _token_shift(x, params["cm_mu"][1], last)
+    k = jnp.square(jax.nn.relu(linear(params["cm_wk"], xk)))
+    out = jax.nn.sigmoid(linear(params["cm_wr"], xr)) * linear(params["cm_wv"], k)
+    return out, x[:, -1, :]

@@ -1,0 +1,354 @@
+"""Unified model assembly for all 10 assigned architectures.
+
+One parameter pytree + one forward covers: dense decoders (GQA+RoPE+SwiGLU),
+MoE decoders (qwen2-moe, llama4-scout), the Zamba2 hybrid (Mamba2 backbone +
+one weight-tied shared attention block), RWKV6, the enc-dec audio backbone
+(seamless-m4t; frontend stub supplies frames), and the LLaVA VLM (frontend
+stub supplies patch embeddings, projector in-model).
+
+``unroll=True`` (dry-run) lays every layer out in the HLO so
+``cost_analysis`` counts all FLOPs (DESIGN.md §7); ``unroll=False`` uses
+``lax.scan`` over stacked homogeneous layers for training compile time.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import layers, moe as moe_mod, ssm
+from .layers import (attention_block, embed, init_attention, init_embedding,
+                     init_mlp, lm_head, linear, mlp_block, rmsnorm, _init)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_norm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def _init_block(key, kind: str, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if kind == "dense":
+        return {"ln1": _init_norm(d, dtype),
+                "attn": init_attention(ks[0], cfg, dtype),
+                "ln2": _init_norm(d, dtype),
+                "mlp": init_mlp(ks[1], d, cfg.d_ff, cfg.act, dtype)}
+    if kind == "moe":
+        return {"ln1": _init_norm(d, dtype),
+                "attn": init_attention(ks[0], cfg, dtype),
+                "ln2": _init_norm(d, dtype),
+                "moe": moe_mod.init_moe(ks[1], cfg, dtype)}
+    if kind in ("mamba", "mamba_attn"):
+        return {"ln1": _init_norm(d, dtype),
+                "mamba": ssm.init_mamba(ks[0], cfg, dtype)}
+    if kind == "rwkv":
+        return {"ln1": _init_norm(d, dtype),
+                "tm": ssm.init_rwkv(ks[0], cfg, dtype),
+                "ln2": _init_norm(d, dtype)}
+    if kind == "encdec":   # decoder block with cross attention
+        return {"ln1": _init_norm(d, dtype),
+                "attn": init_attention(ks[0], cfg, dtype),
+                "ln_x": _init_norm(d, dtype),
+                "cross": init_attention(ks[1], cfg, dtype),
+                "ln2": _init_norm(d, dtype),
+                "mlp": init_mlp(ks[2], d, cfg.d_ff, cfg.act, dtype)}
+    raise ValueError(kind)
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dtype = cfg.compute_dtype
+    d = cfg.d_model
+    keys = jax.random.split(key, cfg.n_layers + cfg.enc_layers + 8)
+    p = {"embed": init_embedding(keys[0], cfg, dtype),
+         "final_ln": _init_norm(d, dtype)}
+
+    if cfg.is_encdec:
+        p["frontend_proj"] = _init(keys[1], (cfg.frontend_dim, d),
+                                   cfg.frontend_dim, dtype)
+        p["enc_blocks"] = [
+            _init_block(keys[2 + i], "dense", cfg, dtype)
+            for i in range(cfg.enc_layers)]
+        p["enc_ln"] = _init_norm(d, dtype)
+        p["blocks"] = [
+            _init_block(keys[2 + cfg.enc_layers + i], "encdec", cfg, dtype)
+            for i in range(cfg.dec_layers)]
+        return p
+
+    if cfg.family == "vlm":
+        k1, k2 = jax.random.split(keys[1])
+        p["projector"] = {
+            "w1": _init(k1, (cfg.frontend_dim, d), cfg.frontend_dim, dtype),
+            "w2": _init(k2, (d, d), d, dtype)}
+
+    pattern = cfg.block_pattern()
+    p["blocks"] = [
+        _init_block(keys[2 + i], pattern[i], cfg, dtype)
+        for i in range(cfg.n_layers)]
+    if cfg.family == "hybrid" and cfg.attn_every:
+        # ONE shared (weight-tied) attention+mlp block (Zamba2)
+        p["shared_attn"] = {
+            "ln1": _init_norm(d, dtype),
+            "attn": init_attention(keys[-2], cfg, dtype),
+            "ln2": _init_norm(d, dtype),
+            "mlp": init_mlp(keys[-1], d, cfg.d_ff, cfg.act, dtype)}
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _apply_block(bp, kind, x, positions, cfg, unroll, q_chunk,
+                 cache=None, cache_pos=None, shared=None, enc_memory_kv=None):
+    """Returns (x, new_cache)."""
+    if kind in ("dense", "moe"):
+        h, new_c = attention_block(bp["attn"], rmsnorm(x, bp["ln1"]["scale"]),
+                                   positions, cfg, q_chunk=q_chunk,
+                                   cache=cache, cache_pos=cache_pos)
+        x = x + h
+        inner = rmsnorm(x, bp["ln2"]["scale"])
+        if kind == "moe":
+            x = x + moe_mod.moe_block(bp["moe"], inner, cfg)
+        else:
+            x = x + mlp_block(bp["mlp"], inner, cfg.act)
+        return x, new_c
+    if kind in ("mamba", "mamba_attn"):
+        h, new_c = ssm.mamba_block(bp["mamba"], rmsnorm(x, bp["ln1"]["scale"]),
+                                   cfg, unroll, cache=cache)
+        x = x + h
+        if kind == "mamba_attn":
+            sc = None if cache is None else cache.get("shared")
+            h, new_sc = attention_block(
+                shared["attn"], rmsnorm(x, shared["ln1"]["scale"]), positions,
+                cfg, q_chunk=q_chunk, cache=sc, cache_pos=cache_pos)
+            x = x + h
+            x = x + mlp_block(shared["mlp"],
+                              rmsnorm(x, shared["ln2"]["scale"]), cfg.act)
+            if new_c is not None or new_sc is not None:
+                new_c = {**(new_c or {}), "shared": new_sc}
+        return x, new_c
+    if kind == "rwkv":
+        h, tm_c = ssm.rwkv_time_mix(bp["tm"], rmsnorm(x, bp["ln1"]["scale"]),
+                                    cfg, unroll, cache=cache)
+        x = x + h
+        inner = rmsnorm(x, bp["ln2"]["scale"])
+        h, cm_last = ssm.rwkv_channel_mix(bp["tm"], inner, cache=cache)
+        new_c = None if cache is None else {**tm_c, "cm_last": cm_last}
+        return x + h, new_c
+    if kind == "encdec":
+        h, new_c = attention_block(bp["attn"], rmsnorm(x, bp["ln1"]["scale"]),
+                                   positions, cfg, q_chunk=q_chunk,
+                                   cache=cache, cache_pos=cache_pos)
+        x = x + h
+        h, _ = attention_block(bp["cross"], rmsnorm(x, bp["ln_x"]["scale"]),
+                               positions, cfg, q_chunk=q_chunk,
+                               kv_override=enc_memory_kv)
+        x = x + h
+        x = x + mlp_block(bp["mlp"], rmsnorm(x, bp["ln2"]["scale"]), cfg.act)
+        return x, new_c
+    raise ValueError(kind)
+
+
+def _encode(params, cfg, frames, q_chunk):
+    """Audio/speech encoder: frontend stub frames -> memory (B, Tf, d)."""
+    x = frames.astype(cfg.compute_dtype) @ params["frontend_proj"]
+    positions = jnp.broadcast_to(jnp.arange(frames.shape[1]),
+                                 frames.shape[:2])
+    for bp in params["enc_blocks"]:
+        h, _ = attention_block(bp["attn"], rmsnorm(x, bp["ln1"]["scale"]),
+                               positions, cfg, causal=False, q_chunk=q_chunk)
+        x = x + h
+        x = x + mlp_block(bp["mlp"], rmsnorm(x, bp["ln2"]["scale"]), cfg.act)
+    return rmsnorm(x, params["enc_ln"]["scale"])
+
+
+def _cross_kv(params, cfg, memory):
+    """Precompute cross-attention K/V per decoder layer from enc memory."""
+    b, tf, d = memory.shape
+    hd, kvc = cfg.head_dim, layers.kv_compute_heads(cfg)
+    out = []
+    for bp in params["blocks"]:
+        k = linear(bp["cross"]["wk"], memory).reshape(b, tf, kvc, hd)
+        v = linear(bp["cross"]["wv"], memory).reshape(b, tf, kvc, hd)
+        out.append((k, v))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, tokens: jax.Array,
+            image_embeds: Optional[jax.Array] = None,
+            frames: Optional[jax.Array] = None,
+            unroll: bool = True, q_chunk: int = 0,
+            block_remat: bool = False, boundary_sharding=None,
+            logits_sharding=None) -> jax.Array:
+    """tokens (B, T_text) -> logits (B, T_total, vocab_padded).
+
+    ``block_remat``: jax.checkpoint around every block (activation memory =
+    layer boundaries only). ``boundary_sharding``: NamedSharding constraint
+    applied to the residual stream between blocks — P(dp, "model", None)
+    gives Megatron-style sequence-parallel boundaries so per-device
+    activation memory divides by TP as well as DP. ``logits_sharding``:
+    constraint on the (B, T, V) logits (vocab-sharded xent)."""
+    x = embed(params["embed"], tokens)
+    if cfg.family == "vlm":
+        assert image_embeds is not None
+        img = image_embeds.astype(cfg.compute_dtype)
+        img = jnp.tanh(img @ params["projector"]["w1"]) @ params["projector"]["w2"]
+        x = jnp.concatenate([img, x], axis=1)
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+
+    enc_kv = None
+    if cfg.is_encdec:
+        assert frames is not None
+        memory = _encode(params, cfg, frames, q_chunk)
+        enc_kv = _cross_kv(params, cfg, memory)
+
+    pattern = (("encdec",) * cfg.dec_layers if cfg.is_encdec
+               else cfg.block_pattern())
+    shared = params.get("shared_attn")
+
+    def constrain(h):
+        if boundary_sharding is not None:
+            return jax.lax.with_sharding_constraint(h, boundary_sharding)
+        return h
+
+    def one_block(bp, h, kind, ekv):
+        def blockfn(bp_, h_):
+            out, _ = _apply_block(bp_, kind, h_, positions, cfg, unroll,
+                                  q_chunk, shared=shared, enc_memory_kv=ekv)
+            return out
+        if block_remat:
+            blockfn = jax.checkpoint(blockfn)
+        return constrain(blockfn(bp, h))
+
+    if unroll or cfg.is_encdec:
+        for i, bp in enumerate(params["blocks"]):
+            x = one_block(bp, x, pattern[i],
+                          None if enc_kv is None else enc_kv[i])
+    else:
+        # scan over layers (or over PERIODS for periodic hybrid patterns):
+        # one compiled body regardless of depth — the production train path.
+        if len(set(pattern)) == 1:
+            period = 1
+        elif cfg.family == "hybrid" and cfg.attn_every:
+            period = cfg.attn_every
+        else:  # irregular pattern: no scan form — fall back to unrolled
+            for i, bp in enumerate(params["blocks"]):
+                x = one_block(bp, x, pattern[i], None)
+            x = rmsnorm(x, params["final_ln"]["scale"])
+            logits = lm_head(params["embed"], x, cfg.vocab)
+            if logits_sharding is not None:
+                logits = jax.lax.with_sharding_constraint(logits, logits_sharding)
+            return logits
+        n_scan = (len(pattern) // period) * period
+        if period == 1:
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                   *params["blocks"][:n_scan])
+
+            def body(h, bp):
+                return one_block(bp, h, pattern[0], None), ()
+            x, _ = jax.lax.scan(body, x, stacked)
+        else:
+            groups = [params["blocks"][i:i + period]
+                      for i in range(0, n_scan, period)]
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *[
+                jax.tree.map(lambda *ys: jnp.stack(ys), *g) for g in groups])
+
+            def body(h, grp):
+                for j in range(period):
+                    bp_j = jax.tree.map(lambda a: a[j], grp)
+                    h = one_block(bp_j, h, pattern[j], None)
+                return h, ()
+            x, _ = jax.lax.scan(body, x, stacked)
+        for i in range(n_scan, len(pattern)):          # leftover tail layers
+            x = one_block(params["blocks"][i], x, pattern[i], None)
+
+    x = rmsnorm(x, params["final_ln"]["scale"])
+    logits = lm_head(params["embed"], x, cfg.vocab)
+    if logits_sharding is not None:
+        logits = jax.lax.with_sharding_constraint(logits, logits_sharding)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int = 0) -> dict:
+    """Allocate decode caches (KV ring buffers / SSM states)."""
+    dtype = cfg.compute_dtype
+    hd, kvc = cfg.head_dim, layers.kv_compute_heads(cfg)
+    h_ssm = cfg.ssm_heads_padded or (
+        cfg.d_model // cfg.ssm_head_dim if cfg.ssm_head_dim else 0)
+
+    def attn_cache():
+        if cfg.kv_cache_quant == "int8":
+            return {"k": jnp.zeros((batch, max_len, kvc, hd), jnp.int8),
+                    "v": jnp.zeros((batch, max_len, kvc, hd), jnp.int8),
+                    "k_scale": jnp.zeros((batch, max_len, kvc, 1), dtype),
+                    "v_scale": jnp.zeros((batch, max_len, kvc, 1), dtype)}
+        return {"k": jnp.zeros((batch, max_len, kvc, hd), dtype),
+                "v": jnp.zeros((batch, max_len, kvc, hd), dtype)}
+
+    caches = []
+    pattern = (("encdec",) * cfg.dec_layers if cfg.is_encdec
+               else cfg.block_pattern())
+    for kind in pattern:
+        if kind in ("dense", "moe", "encdec"):
+            caches.append(attn_cache())
+        elif kind in ("mamba", "mamba_attn"):
+            c = {"S": jnp.zeros((batch, cfg.ssm_heads_padded or cfg.ssm_heads,
+                                 cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+                 "conv": jnp.zeros((batch, 3, (cfg.ssm_heads_padded or
+                                               cfg.ssm_heads) * cfg.ssm_head_dim),
+                                   dtype)}
+            if kind == "mamba_attn":
+                c["shared"] = attn_cache()
+            caches.append(c)
+        elif kind == "rwkv":
+            caches.append({"S": jnp.zeros((batch, h_ssm, cfg.ssm_head_dim,
+                                           cfg.ssm_head_dim), jnp.float32),
+                           "last": jnp.zeros((batch, cfg.d_model), dtype),
+                           "cm_last": jnp.zeros((batch, cfg.d_model), dtype)})
+    cache = {"layers": caches}
+    if cfg.is_encdec and enc_len:
+        d = cfg.d_model
+        cache["enc_memory"] = jnp.zeros((batch, enc_len, d), dtype)
+    return cache
+
+
+def decode_step(params, cfg: ModelConfig, cache: dict, tokens: jax.Array,
+                pos: jax.Array):
+    """One-token decode: tokens (B, 1), pos scalar -> (logits, new_cache)."""
+    x = embed(params["embed"], tokens)
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    pattern = (("encdec",) * cfg.dec_layers if cfg.is_encdec
+               else cfg.block_pattern())
+    enc_kv = None
+    if cfg.is_encdec:
+        enc_kv = _cross_kv(params, cfg, cache["enc_memory"])
+    shared = params.get("shared_attn")
+    new_layers = []
+    for i, bp in enumerate(params["blocks"]):
+        x, nc = _apply_block(
+            bp, pattern[i], x, positions, cfg, unroll=True, q_chunk=0,
+            cache=cache["layers"][i], cache_pos=pos, shared=shared,
+            enc_memory_kv=None if enc_kv is None else enc_kv[i])
+        new_layers.append(nc)
+    x = rmsnorm(x, params["final_ln"]["scale"])
+    logits = lm_head(params["embed"], x, cfg.vocab)
+    new_cache = dict(cache)
+    new_cache["layers"] = new_layers
+    return logits, new_cache

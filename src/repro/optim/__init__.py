@@ -1,0 +1,1 @@
+from .optimizer import AdamW, AdamWState, cosine_schedule, global_norm

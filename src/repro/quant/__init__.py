@@ -1,0 +1,1 @@
+from . import binary_linear, grad_compress

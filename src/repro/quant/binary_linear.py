@@ -1,0 +1,86 @@
+"""BitGNN binarized linear layers for the LM framework (DESIGN.md §4.1).
+
+Weights are factorized Bi-GCN style — ``W ~= diag-free sign(W) * scale_out``
+with a positive per-output-channel L1 scale — and stored bit-packed along the
+contraction axis: 32x less HBM than bf16. ``layers.linear`` consumes the
+packed dict transparently; on TPU the XNOR-popc Pallas kernel
+(`repro.kernels.bmm_kernel`) is the fused execution path when activations are
+also binarized (the in-graph unpack path keeps XLA-visibility for the
+dry-run's cost analysis).
+
+Quantization works on abstract (ShapeDtypeStruct) pytrees too, so the
+dry-run can lower bit-packed models without allocating anything.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# weight-matrix keys eligible for binarization (projections only; SSM decay /
+# norm / router params stay fp — DESIGN.md §Arch-applicability)
+_QUANT_KEYS = frozenset({
+    "wq", "wk", "wv", "wo", "wi", "wz", "wx", "wr", "wg",
+    "shared_wi", "shared_wo", "cm_wk", "cm_wv", "cm_wr",
+})
+
+
+def quantize_linear(w: jax.Array) -> dict:
+    """(in, out) fp weight -> {"packed": (out, ceil(in/32)) u32, "scale": (out,)}."""
+    n_in = w.shape[0]
+    scale = jnp.mean(jnp.abs(w.astype(jnp.float32)), axis=0).astype(w.dtype)
+    wt = w.T                                         # (out, in)
+    # pad the packed-word count to a multiple of 16 so the word axis divides
+    # the model-parallel mesh axis (pad bits are 0 and sliced off on unpack)
+    pad = (-n_in) % (32 * 16)
+    bits = (wt >= 0)
+    if pad:
+        bits = jnp.pad(bits, ((0, 0), (0, pad)))
+    grouped = bits.reshape(wt.shape[0], -1, 32).astype(jnp.uint32)
+    weights = jnp.left_shift(jnp.uint32(1), jnp.arange(32, dtype=jnp.uint32))
+    packed = jnp.sum(grouped * weights, axis=-1, dtype=jnp.uint32)
+    return {"packed": packed, "scale": scale}
+
+
+def dequantize_linear(q: dict, n_in: int, dtype=jnp.bfloat16) -> jax.Array:
+    k = jnp.arange(32, dtype=jnp.uint32)
+    bits = (q["packed"][:, :, None] >> k) & jnp.uint32(1)
+    pm1 = (2.0 * bits.astype(dtype) - 1.0).reshape(q["packed"].shape[0], -1)
+    return (pm1[:, :n_in] * q["scale"][:, None].astype(dtype)).T
+
+
+def _should_quantize(path, leaf) -> bool:
+    if not hasattr(leaf, "ndim") or leaf.ndim != 2:
+        return False
+    key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+    return key in _QUANT_KEYS
+
+
+def quantize_params(params: Any) -> Any:
+    """Replace every eligible 2-D projection with its bit-packed form."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = {}
+    for path, leaf in flat:
+        out[path] = quantize_linear(leaf) if _should_quantize(path, leaf) else leaf
+    # rebuild: quantized leaves are dicts -> rebuild the nested structure
+    return _rebuild(params, out, ())
+
+
+def _rebuild(node, table, path):
+    if isinstance(node, dict):
+        return {k: _rebuild(v, table, path + (jax.tree_util.DictKey(k),))
+                for k, v in node.items()}
+    if isinstance(node, list):
+        return [_rebuild(v, table, path + (jax.tree_util.SequenceKey(i),))
+                for i, v in enumerate(node)]
+    if isinstance(node, tuple):
+        return tuple(_rebuild(v, table, path + (jax.tree_util.SequenceKey(i),))
+                     for i, v in enumerate(node))
+    return table[path]
+
+
+def quantized_param_bytes(params: Any) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))

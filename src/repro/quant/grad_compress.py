@@ -1,0 +1,62 @@
+"""1-bit gradient compression with error feedback (beyond-paper; built on the
+paper's bit-packing substrate — DESIGN.md §4.3).
+
+``compress_tree`` is the in-graph numerics (sign + per-tensor L1 scale +
+EF residual). ``allreduce_1bit`` is the wire-level shard_map collective that
+actually moves PACKED bits between data-parallel replicas — 32x fewer bytes
+than an fp32 ring all-reduce; its HLO is measured by
+``benchmarks/bench_grad_compress.py``.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import bitops
+
+
+def init_error_state(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def compress_leaf(g: jax.Array, err: jax.Array):
+    """sign+scale with error feedback: returns (g_hat, new_err)."""
+    gf = g.astype(jnp.float32) + err
+    scale = jnp.mean(jnp.abs(gf))
+    g_hat = jnp.where(gf >= 0, scale, -scale)
+    return g_hat.astype(g.dtype), gf - g_hat
+
+
+def compress_tree(grads: Any, err_state: Any) -> Tuple[Any, Any]:
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err_state)
+    out_g, out_e = [], []
+    for g, e in zip(flat_g, flat_e):
+        gh, en = compress_leaf(g, e)
+        out_g.append(gh)
+        out_e.append(en)
+    return jax.tree.unflatten(tdef, out_g), jax.tree.unflatten(tdef, out_e)
+
+
+def allreduce_1bit(local_grad: jax.Array, mesh, axis: str = "data"):
+    """Cross-replica mean of sign-compressed gradients, packed on the wire.
+
+    Each replica packs sign bits (32x smaller), all-gathers the packed words
+    + one fp scale, then votes: the decompressed mean of ±scale_i values.
+    Input must be flat (n,) fp32; returns (n,) fp32.
+    """
+    n = local_grad.shape[0]
+
+    def body(g):
+        scale = jnp.mean(jnp.abs(g))
+        packed = bitops.pack_bits((g >= 0).reshape(1, -1)).reshape(-1)
+        all_packed = jax.lax.all_gather(packed, axis)        # (R, W)
+        all_scale = jax.lax.all_gather(scale, axis)          # (R,)
+        signs = bitops.unpack_pm1(all_packed, n, axis=-1)    # (R, n)
+        return jnp.mean(signs * all_scale[:, None], axis=0)
+
+    return jax.shard_map(body, mesh=mesh, in_specs=P(None),
+                         out_specs=P(None), check_vma=False)(local_grad)

@@ -1,0 +1,118 @@
+"""Train-step builder: loss, grad, AdamW update — donation-friendly and
+pjit-shardable. Also ``input_specs()``: the ShapeDtypeStruct stand-ins for
+every (arch x shape) dry-run cell (weak-type-correct, no allocation)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer
+from repro.optim.optimizer import AdamW, AdamWState
+from repro.quant import grad_compress as gc
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract model inputs for one dry-run cell.
+
+    train/prefill: token batch (+ stub frontend tensors for vlm/audio);
+    decode: one-token batch + the KV/state cache at seq_len.
+    """
+    b, t = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        t_text = t
+        batch = {}
+        if cfg.family == "vlm":
+            t_text = t - cfg.frontend_len
+            batch["image_embeds"] = sds((b, cfg.frontend_len,
+                                         cfg.frontend_dim), jnp.bfloat16)
+        if cfg.is_encdec:
+            batch["frames"] = sds((b, cfg.frontend_len, cfg.frontend_dim),
+                                  jnp.bfloat16)
+        batch["tokens"] = sds((b, t_text), jnp.int32)
+        if shape.kind == "train":
+            batch["labels"] = sds((b, t_text), jnp.int32)
+        return batch
+    # decode: cache holds seq_len history
+    cache = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, b, t, enc_len=cfg.frontend_len
+                                       if cfg.is_encdec else 0))
+    return {"tokens": sds((b, 1), jnp.int32), "cache": cache,
+            "pos": sds((), jnp.int32)}
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def make_loss_fn(cfg: ModelConfig, unroll: bool, q_chunk: int,
+                 block_remat: bool = False, boundary_sharding=None,
+                 logits_sharding=None) -> Callable:
+    def loss_fn(params, batch):
+        kw = {k: batch[k] for k in ("image_embeds", "frames") if k in batch}
+        logits = transformer.forward(params, cfg, batch["tokens"],
+                                     unroll=unroll, q_chunk=q_chunk,
+                                     block_remat=block_remat,
+                                     boundary_sharding=boundary_sharding,
+                                     logits_sharding=logits_sharding, **kw)
+        labels = batch["labels"]
+        # align labels with the (possibly frontend-prefixed) logit sequence
+        t_total = logits.shape[1]
+        if labels.shape[1] < t_total:
+            labels = jnp.pad(labels, ((0, 0), (t_total - labels.shape[1], 0)))
+        return softmax_xent(logits, labels)
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW, unroll: bool = False,
+                    q_chunk: int = 0, compress_grads: bool = False,
+                    remat: bool = False, boundary_sharding=None,
+                    logits_sharding=None) -> Callable:
+    """Returns train_step(params, opt_state, [err_state,] batch) -> ...
+
+    ``compress_grads``: 1-bit sign+scale gradient compression with error
+    feedback (paper's bit-packing substrate applied to the DP collective;
+    DESIGN.md §4.3). ``remat``: per-block activation checkpointing.
+    """
+    loss_fn = make_loss_fn(cfg, unroll, q_chunk, block_remat=remat,
+                           boundary_sharding=boundary_sharding,
+                           logits_sharding=logits_sharding)
+
+    if not compress_grads:
+        def train_step(params, opt_state: AdamWState, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            params, opt_state = opt.update(grads, opt_state, params)
+            return params, opt_state, {"loss": loss}
+        return train_step
+
+    def train_step_c(params, opt_state: AdamWState, err_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        grads, err_state = gc.compress_tree(grads, err_state)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, err_state, {"loss": loss}
+    return train_step_c
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = transformer.decode_step(params, cfg, cache, tokens, pos)
+        return logits, cache
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, q_chunk: int = 2048,
+                      boundary_sharding=None,
+                      logits_sharding=None) -> Callable:
+    def prefill_step(params, batch):
+        kw = {k: batch[k] for k in ("image_embeds", "frames") if k in batch}
+        return transformer.forward(params, cfg, batch["tokens"],
+                                   unroll=True, q_chunk=q_chunk,
+                                   boundary_sharding=boundary_sharding,
+                                   logits_sharding=logits_sharding, **kw)
+    return prefill_step

@@ -1,0 +1,118 @@
+"""Fault-tolerant training loop: periodic async checkpoints, crash-restart
+recovery, failure injection for tests, elastic re-mesh on restore.
+
+The recovery contract: a Trainer constructed over the same checkpoint dir
+resumes from the newest COMPLETE manifest (atomic saves), replaying the data
+stream deterministically from the restored step. ``FailureInjector`` raises
+at a chosen step to exercise the path in CI — the same exception surface a
+preempted TPU worker produces (the outer launcher restarts the process).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.pipeline import PrefetchLoader, SyntheticLM
+from repro.optim.optimizer import AdamW
+from repro.quant import grad_compress as gc
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    fail_at_step: int = -1
+    fired: bool = False
+
+    def maybe_fail(self, step: int):
+        if step == self.fail_at_step and not self.fired:
+            self.fired = True
+            raise InjectedFailure(f"injected node failure at step {step}")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    log_every: int = 10
+    compress_grads: bool = False
+
+
+class Trainer:
+    def __init__(self, cfg, train_step: Callable, init_state: Callable,
+                 loader: PrefetchLoader, ckpt_dir: str,
+                 tcfg: TrainerConfig = TrainerConfig(),
+                 failer: Optional[FailureInjector] = None,
+                 shardings: Any = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.train_step = jax.jit(train_step, donate_argnums=(0, 1))
+        self.init_state = init_state
+        self.loader = loader
+        self.ckpt = Checkpointer(ckpt_dir)
+        self.failer = failer
+        self.shardings = shardings
+        self.history: list = []
+
+    def _fresh_or_restored(self):
+        params, opt_state, extra = self.init_state()
+        start = 0
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            state = self.ckpt.restore(latest, (params, opt_state, extra),
+                                      self.shardings)
+            params, opt_state, extra = state
+            start = latest
+        return params, opt_state, extra, start
+
+    def run(self) -> dict:
+        params, opt_state, extra, start = self._fresh_or_restored()
+        losses = []
+        t0 = time.time()
+        step = start
+        for step in range(start, self.tcfg.total_steps):
+            if self.failer is not None:
+                self.failer.maybe_fail(step)
+            batch = self.loader.next_batch()
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            if self.tcfg.compress_grads:
+                params, opt_state, extra, metrics = self.train_step(
+                    params, opt_state, extra, batch)
+            else:
+                params, opt_state, metrics = self.train_step(
+                    params, opt_state, batch)
+            losses.append(float(metrics["loss"]))
+            if (step + 1) % self.tcfg.ckpt_every == 0:
+                self.ckpt.save(step + 1, (params, opt_state, extra))
+            if (step + 1) % self.tcfg.log_every == 0:
+                self.history.append(dict(step=step + 1, loss=losses[-1]))
+        self.ckpt.save(self.tcfg.total_steps, (params, opt_state, extra),
+                       blocking=True)
+        return dict(final_loss=losses[-1] if losses else float("nan"),
+                    losses=losses, steps=self.tcfg.total_steps - start,
+                    wall_s=time.time() - t0,
+                    straggler_misses=self.loader.straggler_misses)
+
+
+def run_with_restarts(make_trainer: Callable[[], Trainer],
+                      max_failures: int = 3) -> dict:
+    """The outer launcher loop: restart the trainer on (injected) failures —
+    the single-process analogue of a cluster controller rescheduling a job."""
+    failures = 0
+    while True:
+        trainer = make_trainer()
+        try:
+            return trainer.run() | {"restarts": failures}
+        except InjectedFailure:
+            failures += 1
+            trainer.ckpt.wait()
+            if failures > max_failures:
+                raise

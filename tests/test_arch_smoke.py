@@ -1,0 +1,154 @@
+"""Per-architecture smoke tests: reduced config, one forward + one decode
+step (+ one grad step for a representative subset) on CPU. Full configs are
+exercised only via the dry-run (ShapeDtypeStruct, no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, reduced_config, shapes_for
+from repro.models import transformer
+
+jax.config.update("jax_platform_name", "cpu")
+
+B, T = 2, 32
+
+
+def _batch_inputs(cfg, key, t=T):
+    ks = jax.random.split(key, 3)
+    kw = {}
+    t_text = t
+    if cfg.family == "vlm":
+        n_img = cfg.frontend_len
+        t_text = max(t - n_img, 4)
+        kw["image_embeds"] = jax.random.normal(
+            ks[1], (B, n_img, cfg.frontend_dim), jnp.float32)
+    if cfg.is_encdec:
+        kw["frames"] = jax.random.normal(
+            ks[2], (B, cfg.frontend_len, cfg.frontend_dim), jnp.float32)
+    tokens = jax.random.randint(ks[0], (B, t_text), 0, cfg.vocab)
+    return tokens, kw
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_forward_shapes_and_finite(arch):
+    cfg = reduced_config(get_config(arch)).resolve_for_mesh(tp=1)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    tokens, kw = _batch_inputs(cfg, jax.random.PRNGKey(1))
+    logits = transformer.forward(params, cfg, tokens, unroll=True, **kw)
+    t_total = tokens.shape[1] + (cfg.frontend_len if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, t_total, cfg.vocab_padded or cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32)))), arch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_decode_step_matches_forward(arch):
+    """Prefill-by-decode must agree with the parallel forward (last logits)."""
+    cfg = reduced_config(get_config(arch)).resolve_for_mesh(tp=1)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    t = 8
+    tokens, kw = _batch_inputs(cfg, jax.random.PRNGKey(1), t=t)
+    if cfg.family == "vlm":
+        pytest.skip("decode parity covered via text archs; vlm adds prefix")
+    full = transformer.forward(params, cfg, tokens, unroll=True, **kw)
+
+    cache = transformer.init_cache(cfg, B, max_len=t + 4,
+                                   enc_len=cfg.frontend_len)
+    if cfg.is_encdec:
+        memory = transformer._encode(params, cfg, kw["frames"], q_chunk=0)
+        cache["enc_memory"] = memory
+    logits = None
+    for i in range(t):
+        logits, cache = transformer.decode_step(
+            params, cfg, cache, tokens[:, i:i + 1], jnp.int32(i))
+    np.testing.assert_allclose(
+        np.asarray(logits[:, 0].astype(jnp.float32)),
+        np.asarray(full[:, -1].astype(jnp.float32)), rtol=0.15, atol=0.15)
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "qwen2-moe-a2.7b",
+                                  "zamba2-1.2b", "rwkv6-3b",
+                                  "seamless-m4t-medium"])
+def test_train_grad_step(arch):
+    """One loss+grad step: finite gradients for every block family."""
+    cfg = reduced_config(get_config(arch)).resolve_for_mesh(tp=1)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    tokens, kw = _batch_inputs(cfg, jax.random.PRNGKey(1))
+
+    def loss_fn(p):
+        logits = transformer.forward(p, cfg, tokens, unroll=True, **kw)
+        tgt = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+        t_total = logits.shape[1]
+        tgt = jnp.pad(tgt, ((0, 0), (t_total - tgt.shape[1], 0)))
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+        return -jnp.mean(jnp.take_along_axis(logp, tgt[..., None], axis=-1))
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss))
+    gnorm = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads))
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
+
+
+def test_scan_path_matches_unrolled():
+    cfg = reduced_config(get_config("smollm-135m")).resolve_for_mesh(tp=1)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    tokens, _ = _batch_inputs(cfg, jax.random.PRNGKey(1))
+    a = transformer.forward(params, cfg, tokens, unroll=True)
+    b = transformer.forward(params, cfg, tokens, unroll=False)
+    # bf16 accumulation order differs between the scanned and unrolled
+    # programs; logits range is O(1) so compare with absolute tolerance.
+    np.testing.assert_allclose(np.asarray(a.astype(jnp.float32)),
+                               np.asarray(b.astype(jnp.float32)),
+                               rtol=0.25, atol=0.1)
+
+
+def test_q_chunked_attention_matches():
+    cfg = reduced_config(get_config("stablelm-1.6b")).resolve_for_mesh(tp=1)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    tokens, _ = _batch_inputs(cfg, jax.random.PRNGKey(1))
+    a = transformer.forward(params, cfg, tokens, unroll=True, q_chunk=0)
+    b = transformer.forward(params, cfg, tokens, unroll=True, q_chunk=8)
+    np.testing.assert_allclose(np.asarray(a.astype(jnp.float32)),
+                               np.asarray(b.astype(jnp.float32)),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_quantized_params_run():
+    from repro.quant.binary_linear import quantize_params, quantized_param_bytes
+    cfg = reduced_config(get_config("smollm-135m")).resolve_for_mesh(tp=1)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    qparams = quantize_params(params)
+    before = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+    after = quantized_param_bytes(qparams)
+    assert after < before * 0.6  # embeddings dominate the tiny config
+    tokens, _ = _batch_inputs(cfg, jax.random.PRNGKey(1))
+    logits = transformer.forward(qparams, cfg, tokens, unroll=True)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+def test_resolve_for_mesh_padding_policy():
+    cfg = get_config("smollm-135m").resolve_for_mesh(tp=16)
+    assert cfg.n_heads_padded == 16          # 9 -> 16
+    assert cfg.n_kv_heads_padded == 4        # 3 -> 4 (divides 16)
+    assert cfg.kv_replication == 4
+    assert cfg.vocab_padded % (16 * 128) == 0
+    cfg2 = get_config("qwen2-moe-a2.7b").resolve_for_mesh(tp=16)
+    assert cfg2.moe_experts_padded == 64     # 60 -> 64
+    cfg3 = get_config("llava-next-34b").resolve_for_mesh(tp=16)
+    assert cfg3.n_heads_padded == 64 and cfg3.n_kv_heads_padded == 8
+    assert cfg3.kv_replication == 2
+
+
+def test_param_counts_plausible():
+    # smollm ~135M params (tied embeddings)
+    cfg = get_config("smollm-135m")
+    n = cfg.param_count()
+    assert 0.10e9 < n < 0.18e9, n
+    # minitron ~8B
+    n = get_config("minitron-8b").param_count()
+    assert 6e9 < n < 10e9, n
+    # qwen2-moe total ~14B, active ~2.7B
+    c = get_config("qwen2-moe-a2.7b")
+    assert 10e9 < c.param_count() < 20e9, c.param_count()
+    assert 1.5e9 < c.active_param_count() < 5e9, c.active_param_count()

@@ -1,0 +1,95 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitops
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@given(st.integers(1, 130), st.integers(0, 2**31))
+@settings(max_examples=30, deadline=None)
+def test_pack_unpack_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, size=(3, n))
+    packed = bitops.pack_bits(bits)
+    assert packed.dtype == jnp.uint32
+    assert packed.shape == (3, (n + 31) // 32)
+    out = bitops.unpack_bits(packed, n)
+    np.testing.assert_array_equal(np.asarray(out), bits)
+
+
+def test_pack_axis0():
+    rng = np.random.default_rng(0)
+    bits = rng.integers(0, 2, size=(70, 5))
+    packed = bitops.pack_bits(bits, axis=0)
+    assert packed.shape == (3, 5)
+    np.testing.assert_array_equal(np.asarray(bitops.unpack_bits(packed, 70, axis=0)), bits)
+
+
+@given(st.integers(1, 200), st.integers(0, 2**31))
+@settings(max_examples=30, deadline=None)
+def test_xnor_dot(n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.choice([-1, 1], size=n)
+    b = rng.choice([-1, 1], size=n)
+    ap = bitops.pack_bits(a > 0)
+    bp = bitops.pack_bits(b > 0)
+    assert int(bitops.xnor_dot(ap, bp, n)) == int(np.dot(a, b))
+
+
+@given(st.integers(1, 200), st.integers(0, 2**31))
+@settings(max_examples=30, deadline=None)
+def test_trinary_dot_all_modes_agree(n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 2, size=n)          # adjacency 0/1
+    b = rng.choice([-1, 1], size=n)          # activation ±1
+    expected = int(np.dot(a, b))
+    ap = bitops.pack_bits(a)
+    bp = bitops.pack_bits(b > 0)
+    assert int(bitops.trinary_dot_s2(ap, bp)) == expected
+    assert int(bitops.trinary_dot_s3(ap, bp)) == expected
+    assert int(bitops.trinary_dot_s1(jnp.asarray(a), jnp.asarray(b))) == expected
+
+
+def test_and_dot():
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, 2, size=100)
+    b = rng.integers(0, 2, size=100)
+    assert int(bitops.and_dot(bitops.pack_bits(a), bitops.pack_bits(b))) == int(a @ b)
+
+
+def test_bit_transpose_32():
+    rng = np.random.default_rng(2)
+    m = rng.integers(0, 2, size=(32, 32))
+    words = bitops.pack_bits(m)             # (32, 1) words: row k bits over f
+    t = bitops.bit_transpose_32(words.reshape(32))
+    mt = np.asarray(bitops.unpack_bits(t[:, None], 32))
+    np.testing.assert_array_equal(mt, m.T)
+
+
+def test_bit_transpose_batched():
+    rng = np.random.default_rng(3)
+    m = rng.integers(0, 2, size=(5, 32, 32))
+    words = bitops.pack_bits(m)
+    t = bitops.bit_transpose_32(words.squeeze(-1).reshape(5, 32))
+    for i in range(5):
+        np.testing.assert_array_equal(
+            np.asarray(bitops.unpack_bits(t[i][:, None], 32)), m[i].T)
+
+
+def test_bmm_xnor_words_matches_matmul():
+    rng = np.random.default_rng(4)
+    a = rng.choice([-1, 1], size=(7, 100))
+    b = rng.choice([-1, 1], size=(9, 100))
+    out = bitops.bmm_xnor_words(bitops.pack_bits(a > 0), bitops.pack_bits(b > 0), 100)
+    np.testing.assert_array_equal(np.asarray(out), a @ b.T)
+
+
+def test_unpack_pm1():
+    x = np.array([1.5, -0.2, 0.0, -3.0])
+    p = bitops.sign_bits(x)
+    np.testing.assert_array_equal(np.asarray(bitops.unpack_pm1(p, 4)),
+                                  [1.0, -1.0, 1.0, -1.0])

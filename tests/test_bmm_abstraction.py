@@ -1,0 +1,129 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import abstraction, bitops, frdc
+from repro.core.binarize import BinTensor, dequantize
+from repro.core.bmm import (BMM_VARIANTS, bmm, bmm_reference_fp,
+                            quantize_act, quantize_weight)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@given(st.integers(1, 40), st.integers(1, 70), st.integers(1, 40),
+       st.integers(0, 2**31))
+@settings(max_examples=15, deadline=None)
+def test_bmm_bbf_matches_fp_oracle(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    out = bmm(quantize_act(jnp.asarray(x)), quantize_weight(jnp.asarray(w)), "BBF")
+    expected = bmm_reference_fp(jnp.asarray(x), jnp.asarray(w), "BBF")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(1, 40), st.integers(1, 70), st.integers(1, 40),
+       st.integers(0, 2**31))
+@settings(max_examples=15, deadline=None)
+def test_bmm_fbf_matches_fp_oracle(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    out = bmm(jnp.asarray(x), quantize_weight(jnp.asarray(w)), "FBF")
+    expected = bmm_reference_fp(jnp.asarray(x), jnp.asarray(w), "FBF")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_bmm_bff_matches():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((8, 33)).astype(np.float32)
+    w = rng.standard_normal((33, 9)).astype(np.float32)
+    out = bmm(quantize_act(jnp.asarray(x)), jnp.asarray(w), "BFF")
+    expected = bmm_reference_fp(jnp.asarray(x), jnp.asarray(w), "BFF")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("variant", ["FBB", "BBB", "BFB", "FFB"])
+def test_binary_output_variants_sign_correct(variant):
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((10, 64)).astype(np.float32)
+    w = rng.standard_normal((64, 16)).astype(np.float32)
+    xin = quantize_act(jnp.asarray(x)) if variant[0] == "B" else jnp.asarray(x)
+    win = quantize_weight(jnp.asarray(w)) if variant[1] == "B" else jnp.asarray(w)
+    out = bmm(xin, win, variant)
+    assert isinstance(out, BinTensor)
+    if variant[:2] == "BB":
+        # integer-exact oracle: fp matmul of ±scale values hits FMA rounding
+        # residue at exact ties (acc==0), where sign() is ill-conditioned.
+        expected_full = (np.where(x >= 0, 1, -1) @ np.where(w >= 0, 1, -1)
+                         ).astype(np.float32)
+    else:
+        expected_full = np.asarray(
+            bmm_reference_fp(jnp.asarray(x), jnp.asarray(w), variant))
+    got_bits = np.asarray(bitops.unpack_bits(out.packed, out.n)) > 0
+    np.testing.assert_array_equal(got_bits, expected_full >= 0)
+
+
+def test_bbb_elides_scales_bitwise_identical():
+    """BBB output bits must be identical with or without operand scales."""
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((6, 96)).astype(np.float32)
+    w = rng.standard_normal((96, 32)).astype(np.float32)
+    xa = quantize_act(jnp.asarray(x))
+    xa_noscale = BinTensor(xa.packed, jnp.ones_like(xa.scale), xa.n)
+    wt = quantize_weight(jnp.asarray(w))
+    wt_noscale = BinTensor(wt.packed, jnp.ones_like(wt.scale), wt.n)
+    a = bmm(xa, wt, "BBB")
+    b = bmm(xa_noscale, wt_noscale, "BBB")
+    np.testing.assert_array_equal(np.asarray(a.packed), np.asarray(b.packed))
+
+
+def test_check_chain_accepts_legal_rejects_illegal():
+    abstraction.check_chain("BMM.FBB", "BSpMM.BBB")
+    abstraction.check_chain("BMM.BBF", "BSpMM.FBF")
+    with pytest.raises(TypeError):
+        abstraction.check_chain("BMM.FBF", "BSpMM.BBB")
+    with pytest.raises(TypeError):
+        abstraction.check_chain("BMM.FBB", "BSpMM.FBF")
+
+
+def test_registry_complete():
+    names = set(abstraction.REGISTRY)
+    for v in BMM_VARIANTS:
+        assert f"BMM.{v}" in names
+    for v in ("FBF", "FBB", "BBF", "BBB"):
+        assert f"BSpMM.{v}" in names
+    assert "ADD.FFF" in names and "ADD.BBF" in names
+    assert "CONCAT.FFF" in names and "CONCAT.BBB" in names
+
+
+def test_mmspmm_high_level_block():
+    rng = np.random.default_rng(3)
+    n, f, h = 24, 48, 32
+    x = rng.standard_normal((n, f)).astype(np.float32)
+    w = rng.standard_normal((f, h)).astype(np.float32)
+    adj = frdc.from_dense((rng.random((n, n)) < 0.2).astype(np.float32))
+    block = abstraction.MMSpMM("BMM.FBB", "BSpMM.BBB")
+    out = block(jnp.asarray(x), quantize_weight(jnp.asarray(w)), adj)
+    assert isinstance(out, BinTensor)
+    assert out.shape == (n, h)
+
+    block2 = abstraction.MMSpMM("BMM.FBF", "BSpMM.FBF")
+    out2 = block2(jnp.asarray(x), quantize_weight(jnp.asarray(w)), adj)
+    assert out2.shape == (n, h)
+
+
+def test_concat_bbb():
+    rng = np.random.default_rng(4)
+    a = rng.standard_normal((5, 32)).astype(np.float32)
+    b = rng.standard_normal((5, 40)).astype(np.float32)
+    ta, tb = quantize_act(jnp.asarray(a)), quantize_act(jnp.asarray(b))
+    out = abstraction.op("CONCAT.BBB").fn(ta, tb)
+    bits = np.asarray(bitops.unpack_bits(out.packed, out.n))
+    expected = np.concatenate([a >= 0, b >= 0], axis=-1)
+    np.testing.assert_array_equal(bits > 0, expected)

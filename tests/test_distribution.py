@@ -1,0 +1,210 @@
+"""Distribution substrate tests: sharding rules, checkpoint/restore with
+resharding, fault-tolerant training with injected failures, straggler-
+tolerant loader, 1-bit gradient compression, serve engine."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, reduced_config
+from repro.distributed import sharding
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer
+from repro.optim.optimizer import AdamW, cosine_schedule
+from repro.quant import grad_compress as gc
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_param_pspec_rules():
+    cfg = reduced_config(get_config("minitron-8b")).resolve_for_mesh(tp=1)
+    ap = jax.eval_shape(lambda: transformer.init_params(jax.random.PRNGKey(0), cfg))
+    mesh = make_host_mesh()
+    shs = sharding.param_shardings(ap, mesh, fsdp=True)
+    flat, _ = jax.tree_util.tree_flatten_with_path(shs)
+    by_key = {}
+    for path, s in flat:
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        by_key.setdefault(key, s.spec)
+    assert by_key["table"] == P("model", "data")
+    assert by_key["wq"] == P("data", "model")
+    assert by_key["wo"] == P("model", "data")
+    assert by_key["scale"] in (P(None), P(None,))  # norm scales replicated
+
+
+def test_quantized_param_specs_transpose():
+    from repro.quant.binary_linear import quantize_params
+    cfg = reduced_config(get_config("smollm-135m")).resolve_for_mesh(tp=1)
+    ap = jax.eval_shape(lambda: transformer.init_params(jax.random.PRNGKey(0), cfg))
+    qp = jax.eval_shape(quantize_params, ap)
+    mesh = make_host_mesh()
+    shs = sharding.param_shardings(qp, mesh, fsdp=False)
+    flat, _ = jax.tree_util.tree_flatten_with_path(shs)
+    for path, s in flat:
+        key = path[-1].key if hasattr(path[-1], "key") else ""
+        parent = None
+        for e in reversed(path[:-1]):
+            if hasattr(e, "key"):
+                parent = e.key
+                break
+        if key == "packed" and parent == "wq":
+            # fp wq is P(None,"model") -> packed (out,in/32) = P("model",None)
+            assert s.spec == P("model", None), s.spec
+            return
+    pytest.fail("no quantized wq found")
+
+
+def test_hlo_collective_parser():
+    from repro.distributed.hlo_analysis import analyze_collectives
+    fake = """
+  %ag = bf16[64,128]{1,0} all-gather(bf16[4,128]{1,0} %x), dimensions={0}
+  %ar = f32[256]{0} all-reduce(f32[256]{0} %y), to_apply=%sum
+  ROOT %rs = (f32[8,16]{1,0}, f32[8]{0}) reduce-scatter(%a, %b), dimensions={0}
+"""
+    st = analyze_collectives(fake)
+    assert st.bytes_by_op["all-gather"] == 64 * 128 * 2
+    assert st.bytes_by_op["all-reduce"] == 256 * 4
+    assert st.bytes_by_op["reduce-scatter"] == 8 * 16 * 4 + 8 * 4
+    assert st.wire_bytes == (64 * 128 * 2) + 2 * (256 * 4) + (8 * 16 * 4 + 8 * 4)
+
+
+def test_grad_compress_error_feedback_converges():
+    """EF compression: quantization error is re-injected, so the RUNNING SUM
+    of compressed grads tracks the running sum of true grads."""
+    rng = np.random.default_rng(0)
+    g_true = [jnp.asarray(rng.standard_normal(64), jnp.float32)
+              for _ in range(50)]
+    err = jnp.zeros(64)
+    acc_c = jnp.zeros(64)
+    acc_t = jnp.zeros(64)
+    for g in g_true:
+        gh, err = gc.compress_leaf(g, err)
+        acc_c += gh
+        acc_t += g
+    # residual bounded by one step's quantization error, not accumulating
+    resid = float(jnp.max(jnp.abs(acc_c - acc_t)))
+    assert resid < 3.0, resid
+
+
+def test_allreduce_1bit_shard_map():
+    mesh = make_host_mesh()
+    g = jnp.asarray(np.random.default_rng(1).standard_normal(128), jnp.float32)
+    out = gc.allreduce_1bit(g, mesh, axis="data")
+    # single replica on CPU: mean of 1 replica == its own sign*scale
+    scale = float(jnp.mean(jnp.abs(g)))
+    np.testing.assert_allclose(np.asarray(out),
+                               np.where(np.asarray(g) >= 0, scale, -scale),
+                               rtol=1e-5)
+
+
+def test_checkpoint_save_restore_roundtrip(tmp_path):
+    from repro.checkpoint.checkpointer import Checkpointer
+    ck = Checkpointer(tmp_path, keep=2)
+    state = {"w": jnp.arange(8.0), "opt": {"mu": jnp.ones((3, 3))}}
+    ck.save(10, state, blocking=True)
+    ck.save(20, jax.tree.map(lambda x: x * 2, state), blocking=True)
+    assert ck.latest_step() == 20
+    restored = ck.restore(None, state)
+    np.testing.assert_allclose(np.asarray(restored["w"]),
+                               np.arange(8.0) * 2)
+    # keep=2 garbage collection
+    ck.save(30, state, blocking=True)
+    ck.save(40, state, blocking=True)
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert len(steps) == 2 and steps[-1] == "step_00000040"
+
+
+def _tiny_trainer(tmp_path, fail_at=-1, total=12):
+    from repro.data.pipeline import PrefetchLoader, SyntheticLM
+    from repro.train.trainer import (FailureInjector, Trainer, TrainerConfig)
+    from repro.train.train_step import make_train_step
+    cfg = reduced_config(get_config("smollm-135m")).resolve_for_mesh(tp=1)
+    opt = AdamW(lr=3e-3)
+    step = make_train_step(cfg, opt, unroll=True)
+    loader = PrefetchLoader(SyntheticLM(cfg.vocab, 16), batch=4, seed=0)
+
+    def init_state():
+        params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+        return params, opt.init(params), ()
+
+    return Trainer(cfg, step, init_state, loader, str(tmp_path),
+                   TrainerConfig(total_steps=total, ckpt_every=4,
+                                 log_every=4),
+                   failer=FailureInjector(fail_at) if fail_at >= 0 else None)
+
+
+def test_trainer_loss_decreases(tmp_path):
+    tr = _tiny_trainer(tmp_path, total=40)
+    out = tr.run()
+    assert np.mean(out["losses"][-5:]) < np.mean(out["losses"][:5]) - 0.1
+    tr.loader.close()
+
+
+def test_trainer_failure_injection_and_restart(tmp_path):
+    from repro.train.trainer import run_with_restarts
+    calls = {"n": 0}
+
+    def make():
+        calls["n"] += 1
+        return _tiny_trainer(tmp_path, fail_at=9 if calls["n"] == 1 else -1,
+                             total=12)
+
+    out = run_with_restarts(make, max_failures=2)
+    assert out["restarts"] == 1
+    # restarted from step 8 checkpoint -> ran only steps 8..12 the 2nd time
+    assert out["steps"] <= 6
+
+
+def test_loader_straggler_substitution():
+    from repro.data.pipeline import PrefetchLoader, SyntheticLM
+
+    class SlowLM(SyntheticLM):
+        def __init__(self):
+            super().__init__(vocab=64, seq_len=8)
+            self.calls = 0
+
+        def sample(self, rng, batch):
+            import time
+            self.calls += 1
+            if self.calls > 1:
+                time.sleep(3600)  # simulated dead input shard
+            return super().sample(rng, batch)
+
+    loader = PrefetchLoader(SlowLM(), batch=2, timeout_s=0.3)
+    b1 = loader.next_batch()
+    b2 = loader.next_batch()   # worker is stuck -> backup batch
+    assert loader.straggler_misses >= 1
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    loader._stop.set()
+
+
+def test_serve_engine_end_to_end():
+    from repro.serve.engine import Request, ServeEngine
+    cfg = reduced_config(get_config("smollm-135m")).resolve_for_mesh(tp=1)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=64)
+    rng = np.random.default_rng(0)
+    for rid in range(3):
+        eng.submit(Request(rid=rid, prompt=rng.integers(0, cfg.vocab, 5),
+                           max_new_tokens=4))
+    done = eng.run_until_done()
+    assert len(done) == 3
+    for req in done:
+        assert len(req.out_tokens) == 4
+        assert all(0 <= t < cfg.vocab for t in req.out_tokens)
+
+
+def test_elastic_restore_resharding(tmp_path):
+    """Restore a checkpoint onto a different mesh layout (elastic scaling)."""
+    from repro.checkpoint.checkpointer import Checkpointer
+    ck = Checkpointer(tmp_path)
+    w = jnp.arange(64.0).reshape(8, 8)
+    ck.save(1, {"w": w}, blocking=True)
+    mesh = make_host_mesh()
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    restored = ck.restore(None, {"w": w}, shardings=sh)
+    np.testing.assert_allclose(np.asarray(restored["w"]), np.asarray(w))
+    assert restored["w"].sharding.spec == P("data", None)

@@ -1,0 +1,92 @@
+"""Unit tests for dry-run machinery that don't require the 512-device env:
+input_specs shapes, probe-plan math, roofline term arithmetic."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SHAPES, get_config, shapes_for
+from repro.configs.base import ShapeConfig
+from repro.train.train_step import input_specs
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "llava-next-34b",
+                                  "seamless-m4t-medium", "rwkv6-3b",
+                                  "zamba2-1.2b", "qwen2-moe-a2.7b"])
+def test_input_specs_train(arch):
+    cfg = get_config(arch).resolve_for_mesh(tp=16)
+    shape = SHAPES["train_4k"]
+    spec = input_specs(cfg, shape)
+    assert spec["tokens"].shape[0] == shape.global_batch
+    t_text = spec["tokens"].shape[1]
+    if cfg.family == "vlm":
+        assert "image_embeds" in spec
+        assert t_text + cfg.frontend_len == shape.seq_len
+    else:
+        assert t_text == shape.seq_len
+    if cfg.is_encdec:
+        assert spec["frames"].shape == (shape.global_batch, cfg.frontend_len,
+                                        cfg.frontend_dim)
+    assert spec["labels"].shape == spec["tokens"].shape
+
+
+@pytest.mark.parametrize("arch", ["minitron-8b", "rwkv6-3b", "zamba2-1.2b",
+                                  "seamless-m4t-medium"])
+def test_input_specs_decode_cache_abstract(arch):
+    cfg = get_config(arch).resolve_for_mesh(tp=16)
+    shape = SHAPES["decode_32k"]
+    spec = input_specs(cfg, shape)
+    assert spec["tokens"].shape == (shape.global_batch, 1)
+    leaves = jax.tree.leaves(spec["cache"])
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    assert len(leaves) > 0
+
+
+def test_shapes_for_skip_policy():
+    assert "long_500k" in shapes_for("rwkv6-3b")
+    assert "long_500k" in shapes_for("zamba2-1.2b")
+    assert "long_500k" not in shapes_for("llava-next-34b")
+    assert "long_500k" not in shapes_for("minitron-8b")
+    # 32 live single-pod cells total (40 assigned minus 8 long_500k skips)
+    total = sum(len(shapes_for(a)) for a in
+                ["llava-next-34b", "minitron-8b", "starcoder2-3b",
+                 "stablelm-1.6b", "smollm-135m", "zamba2-1.2b",
+                 "qwen2-moe-a2.7b", "llama4-scout-17b-a16e",
+                 "seamless-m4t-medium", "rwkv6-3b"])
+    assert total == 32
+
+
+def test_roofline_terms_math():
+    from benchmarks.roofline import PEAK_FLOPS, HBM_BW, ICI_BW, analyze
+    rec = dict(arch="smollm-135m", shape="train_4k", n_devices=256,
+               flops_per_device=1e14, bytes_per_device=1e11,
+               collective_bytes_per_device=5e10,
+               model={"active_params": get_config("smollm-135m").param_count()},
+               memory={"per_device_hbm_bytes": 1 << 30})
+    a = analyze(rec)
+    assert abs(a["terms"]["compute"] - 1e14 / PEAK_FLOPS) < 1e-9
+    assert abs(a["terms"]["memory"] - 1e11 / HBM_BW) < 1e-9
+    assert abs(a["terms"]["collective"] - 5e10 / ICI_BW) < 1e-9
+    assert a["dominant"] == "collective"
+    assert 0 < a["roofline_fraction"] < 1
+
+
+def test_affine_probe_solve_exactness():
+    """The 4-point (L,T) solve recovers an affine function exactly."""
+    ba, bb, la, lb = 3.0, 0.5, 7.0, 0.25
+
+    def f(l, t):
+        return ba + bb * t + l * (la + lb * t)
+    l1, l2, t1, t2 = 1, 2, 512, 1024
+    f11, f12, f21, f22 = f(l1, t1), f(l1, t2), f(l2, t1), f(l2, t2)
+    lb_ = (f22 - f21 - f12 + f11) / ((l2 - l1) * (t2 - t1))
+    la_ = (f21 - f11) / (l2 - l1) - lb_ * t1
+    bb_ = (f12 - f11) / (t2 - t1) - l1 * lb_
+    ba_ = f11 - bb_ * t1 - l1 * (la_ + lb_ * t1)
+    for lstar, tstar in [(32, 32768), (38 / 6, 524288)]:
+        want = f(lstar, tstar)
+        got = ba_ + bb_ * tstar + lstar * (la_ + lb_ * tstar)
+        assert abs(got - want) / want < 1e-12

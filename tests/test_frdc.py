@@ -1,0 +1,122 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitops, frdc
+from repro.core.binarize import BinTensor
+from repro.core.bspmm import bspmm
+from repro.core.bmm import quantize_act
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def random_graph(n, density, seed):
+    rng = np.random.default_rng(seed)
+    a = (rng.random((n, n)) < density).astype(np.float32)
+    return a
+
+
+@given(st.integers(1, 70), st.floats(0.01, 0.4), st.integers(0, 2**31))
+@settings(max_examples=25, deadline=None)
+def test_from_dense_roundtrip(n, density, seed):
+    a = random_graph(n, density, seed)
+    m = frdc.from_dense(a)
+    np.testing.assert_array_equal(np.asarray(frdc.to_dense(m)), a)
+    assert m.nnz == int(a.sum())
+
+
+def test_coarsen_groups_concatenates_tiles():
+    # one group: tile t has bit (i*4+j) -> word i bit (t*4+j)
+    rng = np.random.default_rng(0)
+    tiles = rng.integers(0, 2**16, size=(1, frdc.GROUP), dtype=np.uint16)
+    words = np.asarray(frdc.coarsen_groups(jnp.asarray(tiles)))
+    for i in range(4):
+        for t in range(8):
+            for j in range(4):
+                expected = (int(tiles[0, t]) >> (i * 4 + j)) & 1
+                got = (int(words[0, i]) >> (t * 4 + j)) & 1
+                assert got == expected
+
+
+@given(st.integers(2, 60), st.integers(1, 40), st.floats(0.02, 0.5),
+       st.integers(0, 2**31))
+@settings(max_examples=20, deadline=None)
+def test_bspmm_fbf_exact(n, f, density, seed):
+    a = random_graph(n, density, seed)
+    m = frdc.from_dense(a)
+    rng = np.random.default_rng(seed + 1)
+    x = rng.standard_normal((n, f)).astype(np.float32)
+    out = bspmm(m, jnp.asarray(x), "FBF")
+    np.testing.assert_allclose(np.asarray(out), a @ x, rtol=1e-5, atol=1e-5)
+
+
+def test_bspmm_fbf_weighted_exact():
+    n, f = 50, 17
+    rng = np.random.default_rng(7)
+    rr, cc = np.nonzero(random_graph(n, 0.15, 3))
+    m = frdc.gcn_normalized(rr, cc, n)
+    dense = np.asarray(frdc.to_dense(m))
+    x = rng.standard_normal((n, f)).astype(np.float32)
+    out = bspmm(m, jnp.asarray(x), "FBF")
+    np.testing.assert_allclose(np.asarray(out), dense @ x, rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(2, 60), st.integers(1, 64), st.floats(0.05, 0.5),
+       st.integers(0, 2**31))
+@settings(max_examples=20, deadline=None)
+def test_bspmm_bbf_counts_exact_unweighted(n, f, density, seed):
+    """For an unweighted adjacency with unit act scales, BBF is EXACT."""
+    a = random_graph(n, density, seed)
+    m = frdc.from_dense(a)
+    rng = np.random.default_rng(seed + 2)
+    act = rng.choice([-1.0, 1.0], size=(n, f)).astype(np.float32)
+    xt = BinTensor(packed=bitops.pack_bits(act > 0), scale=jnp.ones((n, 1)), n=f)
+    out = bspmm(m, xt, "BBF")
+    np.testing.assert_allclose(np.asarray(out), a @ act, rtol=1e-5, atol=1e-5)
+
+
+@given(st.sampled_from(["s2_and_andnot", "s3_two_popc"]))
+@settings(max_examples=2, deadline=None)
+def test_bspmm_bbb_binarizes_counts(mode):
+    n, f = 40, 33
+    a = random_graph(n, 0.2, 11)
+    m = frdc.from_dense(a)
+    rng = np.random.default_rng(12)
+    act = rng.choice([-1.0, 1.0], size=(n, f)).astype(np.float32)
+    xt = BinTensor(packed=bitops.pack_bits(act > 0), scale=jnp.ones((n, 1)), n=f)
+    out = bspmm(m, xt, "BBB", trinary_mode=mode)
+    expected = (a @ act) >= 0
+    got = np.asarray(bitops.unpack_bits(out.packed, f)) > 0
+    np.testing.assert_array_equal(got, expected)
+
+
+def test_bspmm_fbb_elides_row_scale():
+    """FBB output bits must be unaffected by (positive) row scales."""
+    n, f = 30, 20
+    rng = np.random.default_rng(5)
+    rr, cc = np.nonzero(random_graph(n, 0.2, 6))
+    m = frdc.gcn_normalized(rr, cc, n)
+    x = rng.standard_normal((n, f)).astype(np.float32)
+    out = bspmm(m, jnp.asarray(x), "FBB")
+    dense = np.asarray(frdc.to_dense(m))
+    expected = (dense @ x) >= 0
+    np.testing.assert_array_equal(
+        np.asarray(bitops.unpack_bits(out.packed, f)) > 0, expected)
+
+
+def test_stats_reports_space_saving():
+    a = random_graph(200, 0.05, 9)
+    m = frdc.from_dense(a)
+    s = frdc.stats(m)
+    assert s["nnz"] == int(a.sum())
+    assert s["frdc_bytes"] > 0
+    assert 0.0 <= s["pad_fraction"] < 1.0
+
+
+def test_empty_graph():
+    m = frdc.from_coo(np.array([], np.int64), np.array([], np.int64), 8, 8)
+    x = jnp.ones((8, 4))
+    out = bspmm(m, x, "FBF")
+    np.testing.assert_allclose(np.asarray(out), np.zeros((8, 4)), atol=1e-6)

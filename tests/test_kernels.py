@@ -1,0 +1,103 @@
+"""Kernel-vs-oracle sweeps (interpret mode on CPU; same code targets TPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitops, frdc
+from repro.kernels import bmm_kernel, bspmm_kernel, pack_kernel, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand_packed(rng, rows, nbits):
+    raw = rng.choice([-1.0, 1.0], size=(rows, nbits))
+    return bitops.pack_bits(raw > 0), raw
+
+
+@pytest.mark.parametrize("m,n,k", [
+    (8, 32, 32), (16, 64, 96), (3, 33, 65), (130, 40, 256), (1, 1, 7),
+])
+def test_bmm_xnor_kernel_matches_ref(m, n, k):
+    rng = np.random.default_rng(m * 1000 + n * 10 + k)
+    ap, _ = _rand_packed(rng, m, k)
+    bp, _ = _rand_packed(rng, n, k)
+    got = bmm_kernel.bmm_xnor(ap, bp, k, block_m=32, block_n=32)
+    want = ref.bmm_xnor_ref(ap, bp, k)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("m,n,k", [(8, 64, 32), (5, 96, 128), (9, 40, 64)])
+def test_bmm_xnor_binarize_fused(m, n, k):
+    rng = np.random.default_rng(m + n + k)
+    ap, _ = _rand_packed(rng, m, k)
+    bp, _ = _rand_packed(rng, n, k)
+    got = bmm_kernel.bmm_xnor(ap, bp, k, binarize=True, block_m=32, block_n=32)
+    want = ref.bmm_xnor_bin_ref(ap, bp, k)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("m,f", [(8, 32), (3, 100), (65, 256), (1, 31)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_binarize_pack_kernel(m, f, dtype):
+    rng = np.random.default_rng(m * f)
+    x = jnp.asarray(rng.standard_normal((m, f)), dtype)
+    got = pack_kernel.binarize_pack(x, block_m=32, block_f=64)
+    want = ref.binarize_pack_ref(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def _graph(rng, n, density):
+    return (rng.random((n, n)) < density).astype(np.float32)
+
+
+@pytest.mark.parametrize("n,f,density", [
+    (16, 32, 0.3), (40, 64, 0.1), (33, 96, 0.25), (64, 32, 0.05),
+])
+def test_bspmm_bits_kernel_binarized(n, f, density):
+    rng = np.random.default_rng(n * f)
+    adj = frdc.from_dense(_graph(rng, n, density))
+    act = rng.choice([-1.0, 1.0], size=(n, f))
+    xp = bitops.pack_bits(act > 0)
+    got = bspmm_kernel.bspmm_bits(adj, xp, f, binarize=True)
+    want = ref.bspmm_bits_ref(adj, xp, f, binarize=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("mode", ["s2_and_andnot", "s3_two_popc"])
+def test_bspmm_bits_kernel_counts(mode):
+    rng = np.random.default_rng(7)
+    n, f = 24, 64
+    adj = frdc.from_dense(_graph(rng, n, 0.2))
+    act = rng.choice([-1.0, 1.0], size=(n, f))
+    xp = bitops.pack_bits(act > 0)
+    got = bspmm_kernel.bspmm_bits(adj, xp, f, binarize=False,
+                                  trinary_mode=mode)
+    want = ref.bspmm_bits_ref(adj, xp, f, binarize=False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n,f,density", [(16, 32, 0.3), (41, 128, 0.15)])
+def test_bspmm_fp_kernel(n, f, density):
+    rng = np.random.default_rng(n + f)
+    adj = frdc.from_dense(_graph(rng, n, density))
+    x = jnp.asarray(rng.standard_normal((n, f)), jnp.float32)
+    got = bspmm_kernel.bspmm_fp(adj, x)
+    want = ref.bspmm_fp_ref(adj, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bspmm_empty_rows_prefill():
+    """Rows with no edges: counts path gives 0, binarized path gives sign(0)=+1."""
+    n, f = 16, 32
+    a = np.zeros((n, n), np.float32)
+    a[0, 3] = 1.0   # only tile-row 0 has a group
+    adj = frdc.from_dense(a)
+    rng = np.random.default_rng(0)
+    act = rng.choice([-1.0, 1.0], size=(n, f))
+    xp = bitops.pack_bits(act > 0)
+    counts = bspmm_kernel.bspmm_bits(adj, xp, f, binarize=False)
+    np.testing.assert_array_equal(np.asarray(counts[4:]), 0)
+    bits = bspmm_kernel.bspmm_bits(adj, xp, f, binarize=True)
+    np.testing.assert_array_equal(np.asarray(bits[4:]), 0xFFFFFFFF)

@@ -1,0 +1,130 @@
+"""Property-based tests (hypothesis) for the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import abstraction, bitops, frdc
+from repro.core.binarize import BinTensor, binarize_matrix, dequantize
+from repro.core.bmm import bmm, quantize_act, quantize_weight
+from repro.core.bspmm import bspmm
+from repro.quant import grad_compress as gc
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# --- invariant: packing is an isomorphism on {0,1}^n -----------------------
+
+@given(st.integers(1, 257), st.integers(1, 5), st.integers(0, 2**31))
+@settings(max_examples=25, deadline=None)
+def test_pack_preserves_popcount(n, rows, seed):
+    bits = np.random.default_rng(seed).integers(0, 2, size=(rows, n))
+    packed = bitops.pack_bits(bits)
+    total = int(jnp.sum(bitops.popcount(packed)))
+    assert total == int(bits.sum())
+
+
+# --- invariant: dequantize(binarize(x)) preserves signs and row scale ------
+
+@given(st.integers(1, 40), st.integers(1, 100), st.integers(0, 2**31))
+@settings(max_examples=20, deadline=None)
+def test_binarize_dequantize_signs(m, n, seed):
+    x = np.random.default_rng(seed).standard_normal((m, n)).astype(np.float32)
+    t = binarize_matrix(jnp.asarray(x), scale="row")
+    back = np.asarray(dequantize(t))
+    assert np.all(np.sign(back) == np.where(x >= 0, 1, -1))
+    np.testing.assert_allclose(np.abs(back)[:, 0],
+                               np.mean(np.abs(x), axis=1), rtol=1e-5)
+
+
+# --- invariant: the SCL-before-BIN elision is EXACT (paper §3.1.2) ---------
+
+@given(st.integers(1, 30), st.integers(1, 60), st.integers(0, 2**31),
+       st.floats(0.01, 100.0))
+@settings(max_examples=20, deadline=None)
+def test_positive_scale_elision_exact(m, n, seed, scale):
+    x = np.random.default_rng(seed).standard_normal((m, n)).astype(np.float32)
+    a = bitops.sign_bits(jnp.asarray(x))
+    b = bitops.sign_bits(jnp.asarray(x) * scale)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --- invariant: trinary schemes agree on any (adjacency, activation) pair --
+
+@given(st.integers(1, 120), st.integers(0, 2**31))
+@settings(max_examples=25, deadline=None)
+def test_trinary_equivalence(n, seed):
+    rng = np.random.default_rng(seed)
+    a = bitops.pack_bits(rng.integers(0, 2, size=(1, n)))
+    b = bitops.pack_bits(rng.integers(0, 2, size=(1, n)))
+    s2 = np.asarray(bitops.trinary_dot_s2(a, b))
+    s3 = np.asarray(bitops.trinary_dot_s3(a, b))
+    np.testing.assert_array_equal(s2, s3)
+
+
+# --- invariant: FRDC decode o encode == identity on sparsity patterns ------
+
+@given(st.integers(1, 50), st.integers(1, 50), st.floats(0.0, 0.5),
+       st.integers(0, 2**31))
+@settings(max_examples=20, deadline=None)
+def test_frdc_roundtrip_rect(rows, cols, density, seed):
+    a = (np.random.default_rng(seed).random((rows, cols)) < density
+         ).astype(np.float32)
+    m = frdc.from_dense(a)
+    np.testing.assert_array_equal(np.asarray(frdc.to_dense(m)), a)
+
+
+# --- invariant: BSpMM.FBF is linear in its dense operand -------------------
+
+@given(st.integers(4, 40), st.integers(1, 24), st.integers(0, 2**31),
+       st.floats(-3.0, 3.0))
+@settings(max_examples=15, deadline=None)
+def test_bspmm_linearity(n, f, seed, alpha):
+    rng = np.random.default_rng(seed)
+    adj = frdc.from_dense((rng.random((n, n)) < 0.3).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((n, f)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((n, f)), jnp.float32)
+    lhs = bspmm(adj, x + alpha * y, "FBF")
+    rhs = bspmm(adj, x, "FBF") + alpha * bspmm(adj, y, "FBF")
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=2e-3, atol=2e-3)
+
+
+# --- invariant: type-checked chains never mix precisions -------------------
+
+@given(st.sampled_from(list(abstraction.MMSPMM_PAIRINGS)))
+@settings(max_examples=6, deadline=None)
+def test_all_registered_pairings_typecheck(pair):
+    abstraction.check_chain(*pair)
+
+
+# --- invariant: EF compression error stays bounded (no drift) --------------
+
+@given(st.integers(0, 2**31), st.integers(10, 60))
+@settings(max_examples=10, deadline=None)
+def test_ef_residual_bounded(seed, steps):
+    rng = np.random.default_rng(seed)
+    err = jnp.zeros(32)
+    for _ in range(steps):
+        g = jnp.asarray(rng.standard_normal(32), jnp.float32)
+        _, err = gc.compress_leaf(g, err)
+    # EF residual is bounded by ~2*max|g| per coordinate, never diverges
+    assert float(jnp.max(jnp.abs(err))) < 10.0
+
+
+# --- invariant: quantized LM linear == sign(W)*scale matmul ----------------
+
+@given(st.integers(1, 8), st.integers(1, 70), st.integers(1, 20),
+       st.integers(0, 2**31))
+@settings(max_examples=15, deadline=None)
+def test_quantized_linear_matches_dequant(b, din, dout, seed):
+    from repro.models.layers import linear
+    from repro.quant.binary_linear import dequantize_linear, quantize_linear
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((din, dout)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((b, din)), jnp.float32)
+    q = quantize_linear(w)
+    got = linear(q, x)
+    w_eff = dequantize_linear(q, din, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w_eff),
+                               rtol=1e-3, atol=1e-3)
