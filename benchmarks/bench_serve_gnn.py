@@ -1,0 +1,100 @@
+"""Serving benchmark: QPS + latency percentiles of the GNN serving subsystem
+(GraphStore -> CompiledGraphSession -> GNNServeEngine) on a stat-matched
+synthetic Table-2 graph, for all three model families and both serve paths
+(micro-batched k-hop subgraph vs. cached full-graph inference).
+
+Queries arrive in waves (submit one micro-batch worth, then tick) so the
+reported latency is end-to-end batch service time, not closed-loop queueing
+over the whole run. Emits CSV rows like every other section plus a
+``results/BENCH_serve_gnn.json`` summary — the start of the serving-side
+perf trajectory (kernels are tracked by the other sections).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.graphs.datasets import make_dataset
+from repro.models import gnn
+from repro.serve import GNNServeEngine, GraphStore
+
+from .common import csv_row
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+FAMILY_INITS = {
+    "gcn": gnn.init_gcn, "sage": gnn.init_sage, "saint": gnn.init_saint,
+}
+
+
+def _serve_wave(engine: GNNServeEngine, graph: str, model: str,
+                nodes: np.ndarray, batch: int) -> None:
+    for i in range(0, nodes.size, batch):
+        engine.submit_many(graph, model, nodes[i:i + batch])
+        engine.tick()
+    engine.run_until_drained()
+
+
+def _bench_mode(store: GraphStore, family: str, mode: str, n_queries: int,
+                n_nodes: int, batch: int, seed: int = 0) -> dict:
+    engine = GNNServeEngine(store, max_batch=batch, mode=mode)
+    warm_compiles = engine.warmup("bench", family)
+    c0 = engine.compile_count
+    nodes = np.random.default_rng(seed).integers(0, n_nodes, size=n_queries)
+    _serve_wave(engine, "bench", family, nodes, batch)
+    snap = engine.snapshot()
+    snap["warmup_compiles"] = warm_compiles
+    snap["steady_state_compiles"] = engine.compile_count - c0
+    return snap
+
+
+def run(full: bool = False) -> dict:
+    jax.config.update("jax_platform_name", "cpu")
+    scale = 1.0 if full else 0.15
+    n_queries = 1000 if full else 200
+    batch = 32 if full else 16
+    hidden = 64 if full else 32
+
+    d = make_dataset("cora", seed=0, scale=scale)
+    store = GraphStore(max_batch=batch)
+    store.register_graph("bench", d)
+    key = jax.random.PRNGKey(0)
+    for fam, init in FAMILY_INITS.items():
+        store.register_model(fam, fam, init(key, d.x.shape[1], hidden,
+                                            d.n_classes))
+
+    summary: dict = dict(dataset="cora", scale=scale, n_nodes=d.n_nodes,
+                         n_edges=d.n_edges, n_queries=n_queries,
+                         batch=batch, families={})
+    for fam in FAMILY_INITS:
+        sess = store.session("bench", fam, tune=(fam == "gcn"),
+                             tune_repeats=1)
+        fam_out = dict(plan=sess.plan.name(),
+                       tuned_latency_ms=sess.plan.tuned_latency_s * 1e3)
+        for mode in ("subgraph", "full"):
+            snap = _bench_mode(store, fam, mode, n_queries, d.n_nodes, batch)
+            fam_out[mode] = snap
+            lat = snap["latency"]
+            csv_row(f"serve_gnn/{fam}/{mode}",
+                    1e6 / max(snap["qps"], 1e-9),
+                    f"qps={snap['qps']:.1f};p50_ms={lat['p50_ms']:.2f};"
+                    f"p99_ms={lat['p99_ms']:.2f};"
+                    f"hit_rate={snap['cache_hit_rate']:.2f};"
+                    f"steady_compiles={snap['steady_state_compiles']}")
+        summary["families"][fam] = fam_out
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = RESULTS / "BENCH_serve_gnn.json"
+    out.write_text(json.dumps(summary, indent=2))
+    csv_row("serve_gnn/summary", 0.0, f"wrote={out}")
+    return summary
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    run(full=ap.parse_args().full)

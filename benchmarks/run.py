@@ -16,12 +16,13 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bench_fig4, bench_gnn_tables, bench_grad_compress,
-                   bench_memory)
+                   bench_memory, bench_serve_gnn)
     sections = [
         ("gnn_tables", bench_gnn_tables.run),     # Tables 3, 4, 5
         ("memory", bench_memory.run),             # Peak-Mem columns
         ("fig4", bench_fig4.run),                 # kernel profile proxy
         ("grad_compress", bench_grad_compress.run),
+        ("serve_gnn", bench_serve_gnn.run),       # serving QPS/latency
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -1,0 +1,23 @@
+"""Version-compatibility shims for the jax API surface this repo uses.
+
+Newer jax promotes ``shard_map`` to ``jax.shard_map`` (with ``check_vma``);
+older 0.4.x only has ``jax.experimental.shard_map.shard_map`` (with the
+equivalent ``check_rep``). Callers import from here so both work.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def get_abstract_mesh():
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    return fn() if fn is not None else None

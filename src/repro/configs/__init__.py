@@ -94,8 +94,13 @@ def reduced_config(cfg: ModelConfig) -> ModelConfig:
     if cfg.n_heads:
         kw.update(n_heads=4, n_kv_heads=min(cfg.n_kv_heads, 2))
     if cfg.moe_experts:
+        # capacity_factor large enough that the tiny expert count never drops
+        # tokens: capacity drops are batch-composition-dependent, so they
+        # break prefill-by-decode vs. parallel-forward parity at smoke scale
+        # (16 tokens over 4 experts bind at the default 1.25).
         kw.update(moe_experts=4, moe_top_k=min(cfg.moe_top_k, 2),
-                  moe_shared_ff=64 if cfg.moe_shared_ff else 0)
+                  moe_shared_ff=64 if cfg.moe_shared_ff else 0,
+                  capacity_factor=8.0)
     if cfg.ssm_state:
         kw.update(ssm_state=16, ssm_head_dim=32)
     if cfg.attn_every:

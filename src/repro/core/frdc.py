@@ -186,6 +186,52 @@ def group_neighbor_ids(col_idx: jax.Array) -> jax.Array:
         *col_idx.shape[:-1], GROUP_COLS)
 
 
+def pad_frdc(m: FRDCMatrix, n_rows: int, n_cols: Optional[int] = None,
+             n_groups: Optional[int] = None) -> FRDCMatrix:
+    """Zero-pad an FRDC matrix to fixed bucket dimensions (serving shape
+    buckets — one jit trace per bucket, zero steady-state recompiles).
+
+    Padded groups hold zero tiles mapped to tile-row 0, which contribute
+    nothing to any aggregation: the fp path masks lanes with the tile bits,
+    and both trinary popc modes yield 0 for an all-zero adjacency word
+    (``2*popc(0&b) - popc(0) == popc(0&b) - popc(0&~b) == 0``). Padded rows
+    and columns carry no bits, so padded node slots never mix with real ones.
+
+    Caveat: the BSpMM ``B?F`` variants rescale their popc counts by the
+    GLOBAL ``mean(col_scale)`` (the paper's factorization-vector
+    approximation, bspmm.py) — column padding appends 1.0 scales and shifts
+    that mean, so those two variants are NOT padding-invariant on scaled
+    adjacencies. Exact for everything the serving plans run: FBF/FBB, BBB,
+    and B?F on unscaled (0/1) adjacencies.
+    """
+    n_cols = n_rows if n_cols is None else n_cols
+    if n_rows < m.n_rows or n_cols < m.n_cols:
+        raise ValueError(f"bucket ({n_rows},{n_cols}) smaller than matrix "
+                         f"({m.n_rows},{m.n_cols})")
+    g = m.n_groups
+    n_groups = g if n_groups is None else max(n_groups, g)
+    pad_g = n_groups - g
+    n_tr = -(-n_rows // TILE)
+    grp_ptr = jnp.concatenate([
+        m.grp_ptr,
+        jnp.full((n_tr - m.n_tile_rows,), m.grp_ptr[-1], jnp.int32)])
+
+    def _pad_scale(s, n_old, n_new):
+        if s is None:
+            return None
+        return jnp.concatenate([s, jnp.ones((n_new - n_old,), s.dtype)])
+
+    return FRDCMatrix(
+        tiles=jnp.pad(m.tiles, ((0, pad_g), (0, 0))),
+        col_idx=jnp.pad(m.col_idx, ((0, pad_g), (0, 0))),
+        group_row=jnp.pad(m.group_row, (0, pad_g)),
+        group_first=jnp.pad(m.group_first, (0, pad_g)),
+        grp_ptr=grp_ptr, n_rows=int(n_rows), n_cols=int(n_cols), nnz=m.nnz,
+        row_scale=_pad_scale(m.row_scale, m.n_rows, n_rows),
+        col_scale=_pad_scale(m.col_scale, m.n_cols, n_cols),
+    )
+
+
 def to_dense(m: FRDCMatrix, dtype=jnp.float32, apply_scales: bool = True):
     """Decode to a dense matrix — the oracle used by every BSpMM test."""
     tiles = np.asarray(m.tiles)

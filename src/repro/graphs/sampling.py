@@ -1,13 +1,33 @@
-"""Inductive-learning samplers: GraphSAGE neighbor sampling and GraphSAINT
-node-budget subgraph sampling (paper §2.1 / §4.1 inductive GNNs)."""
+"""Inductive-learning samplers (GraphSAGE neighbor sampling, GraphSAINT
+node-budget subgraphs; paper §2.1 / §4.1) plus the deterministic k-hop
+subgraph API the serving engine uses to answer node-level queries."""
 from __future__ import annotations
 
-from typing import Iterator, Tuple
+from typing import Iterator, NamedTuple, Tuple
 
 import numpy as np
 
 from repro.core import frdc
 from .datasets import GraphData
+
+
+class CSRGraph(NamedTuple):
+    """Host-side CSR over the directed edge list: row -> neighbor columns.
+
+    Rows are the RECEIVING side of aggregation (``out[r] += x[c]`` for every
+    edge (r, c)), matching ``frdc.from_coo(edges[0], edges[1], ...)``.
+    """
+    indptr: np.ndarray     # (N+1,) int64
+    indices: np.ndarray    # (E,) int64
+    n_nodes: int
+
+    def neighbors(self, u: int) -> np.ndarray:
+        return self.indices[self.indptr[u]:self.indptr[u + 1]]
+
+
+def to_csr(edges: np.ndarray, n_nodes: int) -> CSRGraph:
+    indptr, indices = _build_csr(np.asarray(edges, np.int64), n_nodes)
+    return CSRGraph(indptr=indptr, indices=indices, n_nodes=n_nodes)
 
 
 def _build_csr(edges: np.ndarray, n: int):
@@ -17,6 +37,70 @@ def _build_csr(edges: np.ndarray, n: int):
     indptr = np.zeros(n + 1, np.int64)
     np.cumsum(counts, out=indptr[1:])
     return indptr, dst_sorted
+
+
+def _gather_neighbors(csr: CSRGraph, nodes: np.ndarray
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Concatenated neighbor lists of ``nodes`` + per-node counts, fully
+    vectorized (this sits on the per-batch serving hot path — no Python
+    loop over nodes)."""
+    counts = csr.indptr[nodes + 1] - csr.indptr[nodes]
+    total = int(counts.sum())
+    if total == 0:
+        return np.zeros(0, np.int64), counts
+    ends = np.cumsum(counts)
+    offs = np.arange(total) - np.repeat(ends - counts, counts)
+    idx = np.repeat(csr.indptr[nodes], counts) + offs
+    return csr.indices[idx], counts
+
+
+def khop_nodes(csr: CSRGraph, seeds: np.ndarray, k: int) -> np.ndarray:
+    """Sorted node ids of the FULL (unsampled) k-hop closure of ``seeds``.
+
+    Every node at distance <= k-1 from a seed has its complete neighborhood
+    inside the closure, so an L-layer GNN restricted to the k=L closure
+    reproduces full-graph outputs for the seeds exactly.
+    """
+    seen = np.zeros(csr.n_nodes, bool)
+    frontier = np.unique(np.asarray(seeds, np.int64))
+    seen[frontier] = True
+    for _ in range(k):
+        if frontier.size == 0:
+            break
+        nbrs, _ = _gather_neighbors(csr, frontier)
+        if nbrs.size == 0:
+            break
+        nbrs = np.unique(nbrs)
+        frontier = nbrs[~seen[nbrs]]
+        seen[frontier] = True
+    return np.nonzero(seen)[0]
+
+
+def induced_edges(csr: CSRGraph, sub_nodes: np.ndarray) -> np.ndarray:
+    """(2, E_sub) edge list among ``sub_nodes``, reindexed into the subgraph
+    (relative node order preserved — sub id i is the i-th smallest full id)."""
+    remap = -np.ones(csr.n_nodes, np.int64)
+    remap[sub_nodes] = np.arange(sub_nodes.size)
+    cols, counts = _gather_neighbors(csr, sub_nodes)
+    if cols.size == 0:
+        return np.zeros((2, 0), np.int64)
+    rows = np.repeat(sub_nodes, counts)
+    keep = remap[cols] >= 0
+    return np.stack([remap[rows[keep]], remap[cols[keep]]])
+
+
+def khop_subgraph(csr: CSRGraph, seeds: np.ndarray, k: int
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Deterministic full k-hop subgraph extraction for serving.
+
+    Returns (sub_nodes sorted, (2, E_sub) reindexed edges, positions of the
+    seeds inside ``sub_nodes`` in the order given).
+    """
+    seeds = np.asarray(seeds, np.int64)
+    sub_nodes = khop_nodes(csr, seeds, k)
+    sub_edges = induced_edges(csr, sub_nodes)
+    seed_pos = np.searchsorted(sub_nodes, seeds)
+    return sub_nodes, sub_edges, seed_pos
 
 
 def sage_sample(data: GraphData, batch_nodes: np.ndarray, fanouts=(10, 10),

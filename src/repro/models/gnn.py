@@ -113,13 +113,45 @@ def _ste_binarize_x(x: jax.Array) -> jax.Array:
     return straight_through_sign(x) * scale
 
 
-def batch_norm(x: jax.Array, eps: float = 1e-5) -> jax.Array:
-    """Per-feature standardization — the BN stage that precedes every BIN in
-    Bi-GCN (paper Fig. 1). Without it, sign() of nonnegative inputs (sparse
-    bag-of-words features, post-ReLU activations) collapses to all +1."""
+def bn_stats(x: jax.Array, eps: float = 1e-5) -> tuple:
+    """Per-feature (mu, sd) over the node axis — the only cross-node statistic
+    in any bitgnn forward. Serving freezes these on the FULL graph so a k-hop
+    subgraph forward reproduces the full-graph computation node-for-node."""
     mu = jnp.mean(x, axis=0, keepdims=True)
     sd = jnp.std(x, axis=0, keepdims=True) + eps
+    return mu, sd
+
+
+def batch_norm(x: jax.Array, eps: float = 1e-5,
+               stats: Optional[tuple] = None) -> jax.Array:
+    """Per-feature standardization — the BN stage that precedes every BIN in
+    Bi-GCN (paper Fig. 1). Without it, sign() of nonnegative inputs (sparse
+    bag-of-words features, post-ReLU activations) collapses to all +1.
+
+    ``stats``: optional frozen (mu, sd) — inference-mode BN for serving."""
+    if stats is None:
+        stats = bn_stats(x, eps)
+    mu, sd = stats
     return (x - mu) / sd
+
+
+class _BNTap:
+    """Sequences the BN sites of a forward: replays frozen per-site stats
+    (serving) or computes-and-records them from the batch (calibration)."""
+
+    def __init__(self, frozen: Optional[tuple]):
+        self.frozen = frozen
+        self.collected: list = []
+        self._i = 0
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        if self.frozen is not None:
+            s = self.frozen[self._i]
+            self._i += 1
+        else:
+            s = bn_stats(x)
+            self.collected.append(s)
+        return batch_norm(x, stats=s)
 
 
 # ---------------------------------------------------------------------------
@@ -162,27 +194,38 @@ def quantize_gcn(params: GCNParams) -> GCNQuant:
 
 def gcn_forward_bitgnn(q: GCNQuant, x, adj: frdc.FRDCMatrix,
                        adj_bin: frdc.FRDCMatrix, scheme: str = "bin",
-                       trinary_mode: str = "s3_two_popc"):
+                       trinary_mode: str = "s3_two_popc",
+                       bn_stats: Optional[tuple] = None,
+                       return_bn_stats: bool = False):
     """BitGNN packed inference.
 
     scheme="full": BIN -> BMM.BBF -> BSpMM.FBF per layer (fp aggregation).
     scheme="bin":  layer1 BMM.FBB + BSpMM.BBB (binary aggregation over the
                    0/1 adjacency), layer2 BMM.BBF + BSpMM.FBF — exactly the
                    Table 3 "Ours (bin)" configuration.
+
+    ``bn_stats``: frozen per-site (mu, sd) tuples (serving/inference mode);
+    ``return_bn_stats=True`` additionally returns the stats computed from this
+    batch (full-graph BN calibration for the serving subsystem).
     """
+    bn = _BNTap(bn_stats)
     if scheme == "full":
         l1 = abstraction.MMSpMM("BMM.BBF", "BSpMM.FBF")
-        h = l1(quantize_act(batch_norm(x)), q.w1, adj)
+        h = l1(quantize_act(bn(x)), q.w1, adj)
         h = jax.nn.relu(h)
         l2 = abstraction.MMSpMM("BMM.BBF", "BSpMM.FBF")
-        return l2(quantize_act(batch_norm(h)), q.w2, adj)
-    if scheme == "bin":
+        out = l2(quantize_act(bn(h)), q.w2, adj)
+    elif scheme == "bin":
         l1 = abstraction.MMSpMM("BMM.FBB", "BSpMM.BBB")
-        h_bits = l1(batch_norm(x), q.w1, adj_bin, trinary_mode=trinary_mode,
+        h_bits = l1(bn(x), q.w1, adj_bin, trinary_mode=trinary_mode,
                     out_scale=False)
         l2 = abstraction.MMSpMM("BMM.BBF", "BSpMM.FBF")
-        return l2(h_bits, q.w2, adj)
-    raise ValueError(scheme)
+        out = l2(h_bits, q.w2, adj)
+    else:
+        raise ValueError(scheme)
+    if return_bn_stats:
+        return out, tuple(bn.collected)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -216,19 +259,25 @@ def quantize_sage(params: SAGEParams) -> SAGEQuant:
     return SAGEQuant(*(quantize_weight(w) for w in params))
 
 
-def sage_forward_bitgnn(q: SAGEQuant, x, adj_mean: frdc.FRDCMatrix):
+def sage_forward_bitgnn(q: SAGEQuant, x, adj_mean: frdc.FRDCMatrix,
+                        bn_stats: Optional[tuple] = None,
+                        return_bn_stats: bool = False):
     """BitGNN SAGE: BMM for both branches + BSpMM.FBF mean aggregation,
     merged by ADD (paper Fig. 2 SAGE.bin). Aggregation is applied AFTER the
     transform — ``(A @ xb) @ W == A @ (xb @ W)`` — so the packed path is
     bit-exact with the Bi-GCN training forward while running the cheap
     (hidden-width) BSpMM."""
-    xq = quantize_act(batch_norm(x))
+    bn = _BNTap(bn_stats)
+    xq = quantize_act(bn(x))
     h = bmm(xq, q.w1_self, "BBF") \
         + bspmm(adj_mean, bmm(xq, q.w1_agg, "BBF"), "FBF")
     h = jax.nn.relu(h)
-    hq = quantize_act(batch_norm(h))
-    return bmm(hq, q.w2_self, "BBF") \
+    hq = quantize_act(bn(h))
+    out = bmm(hq, q.w2_self, "BBF") \
         + bspmm(adj_mean, bmm(hq, q.w2_agg, "BBF"), "FBF")
+    if return_bn_stats:
+        return out, tuple(bn.collected)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -255,16 +304,22 @@ def quantize_saint(params: SAINTParams) -> SAINTQuant:
     return SAINTQuant(*(quantize_weight(w) for w in params))
 
 
-def saint_forward_bitgnn(q: SAINTQuant, x, adj_sum: frdc.FRDCMatrix):
-    xq = quantize_act(batch_norm(x))
+def saint_forward_bitgnn(q: SAINTQuant, x, adj_sum: frdc.FRDCMatrix,
+                         bn_stats: Optional[tuple] = None,
+                         return_bn_stats: bool = False):
+    bn = _BNTap(bn_stats)
+    xq = quantize_act(bn(x))
     h = bmm(xq, q.w1_self, "BBF") \
         + bspmm(adj_sum, bmm(xq, q.w1_agg, "BBF"), "FBF")
     h = jax.nn.relu(h)
-    hq = quantize_act(batch_norm(h))
+    hq = quantize_act(bn(h))
     h = bmm(hq, q.w2_self, "BBF") \
         + bspmm(adj_sum, bmm(hq, q.w2_agg, "BBF"), "FBF")
     h = jax.nn.relu(h)
-    return bmm(quantize_act(batch_norm(h)), q.w_fc, "BBF")
+    out = bmm(quantize_act(bn(h)), q.w_fc, "BBF")
+    if return_bn_stats:
+        return out, tuple(bn.collected)
+    return out
 
 
 # ---------------------------------------------------------------------------

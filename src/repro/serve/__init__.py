@@ -1,0 +1,15 @@
+"""Serving subsystem.
+
+``engine``      — transformer continuous-batching serve loop (LLM path).
+``gnn_session`` — GraphStore / CompiledGraphSession artifacts (GNN path).
+``gnn_engine``  — micro-batched node-query engine over compiled sessions.
+``metrics``     — latency percentiles / QPS / cache counters.
+"""
+from .gnn_engine import GNNServeEngine, NodeQuery
+from .gnn_session import CompiledGraphSession, GraphStore, SessionPlan
+from .metrics import LatencyStats, ServeMetrics
+
+__all__ = [
+    "GNNServeEngine", "NodeQuery", "CompiledGraphSession", "GraphStore",
+    "SessionPlan", "LatencyStats", "ServeMetrics",
+]

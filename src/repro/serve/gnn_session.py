@@ -1,0 +1,593 @@
+"""Compiled graph sessions: the (graph, model) serving artifact.
+
+A ``GraphStore`` registers graphs (host-side ``GraphData``) and models
+(family + full-precision params) and compiles a ``CompiledGraphSession`` per
+(graph, model) pair:
+
+  * FRDC-encoded adjacencies of every kind the family's packed forward needs
+    (GCN: normalized + 0/1; SAGE: mean-normalized; SAINT: 0/1 sum);
+  * bit-packed quantized weights (``quantize_gcn`` / ``quantize_sage`` /
+    ``quantize_saint``);
+  * a tuner-selected variant plan (reusing :mod:`repro.core.tuner` over the
+    legal :mod:`repro.core.abstraction` pairings), timed on the actual graph;
+  * full-graph BN calibration: the per-site (mu, sd) batch-norm statistics —
+    the ONLY cross-node statistic in any bitgnn forward — are frozen from one
+    full-graph pass, so a k-hop subgraph forward reproduces the full-graph
+    computation for the seed nodes exactly (fp-reassociation noise only);
+  * a cached full-graph logits fast path, invalidated on feature update.
+
+Artifacts are serialized through the existing async checkpointer
+(:mod:`repro.checkpoint.checkpointer`): array state in ``step_0/shard_0.npz``
+plus a ``plan.json`` sidecar holding the plan, static FRDC dims and a feature
+fingerprint; a store restart with an unchanged graph/model restores instead
+of re-tuning.
+
+Subgraph forwards are served through HIGH-WATER SHAPE BUCKETS: node and FRDC
+group counts are padded up to pow2 marks that only ever grow (capped at the
+full graph), so the per-session jitted forward converges to one steady
+padded shape after a short warmup and never recompiles in steady state
+(``compile_count`` counts jit traces and is the verification counter).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from pathlib import Path
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core import frdc, tuner
+from repro.core.bspmm import TRINARY_DEFAULT
+from repro.graphs import sampling
+from repro.graphs.datasets import GraphData
+from repro.models import gnn
+
+FAMILIES = ("gcn", "sage", "saint")
+
+# layer_variants of the two legal GCN end-to-end schemes (paper Table 3);
+# SAGE/SAINT run the fixed Fig. 2 pipeline (BMM.BBF branches + BSpMM.FBF).
+_GCN_SCHEME_VARIANTS = {
+    "full": (("BMM.BBF", "BSpMM.FBF"), ("BMM.BBF", "BSpMM.FBF")),
+    "bin": (("BMM.FBB", "BSpMM.BBB"), ("BMM.BBF", "BSpMM.FBF")),
+}
+_FIXED_VARIANTS = (("BMM.BBF", "BSpMM.FBF"), ("BMM.BBF", "BSpMM.FBF"))
+
+
+def bucket_pow2(n: int, floor: int, cap: Optional[int] = None) -> int:
+    """Round up to the power-of-two bucket grid (>= floor, <= cap)."""
+    b = floor
+    while b < n:
+        b *= 2
+    return b if cap is None else min(b, cap)
+
+
+@dataclasses.dataclass
+class SessionPlan:
+    """Tuner-selected execution plan of one compiled session."""
+    family: str
+    scheme: str                       # gcn: "full" | "bin"; else "fixed"
+    trinary_mode: str = TRINARY_DEFAULT
+    layer_variants: tuple = _FIXED_VARIANTS
+    tuned_latency_s: float = float("nan")
+    output_delta: float = float("nan")
+
+    def name(self) -> str:
+        layers = ";".join(f"{m}+{s}" for m, s in self.layer_variants)
+        return f"{self.family}/{self.scheme}[{layers}|{self.trinary_mode}]"
+
+    def to_json(self) -> dict:
+        return dict(family=self.family, scheme=self.scheme,
+                    trinary_mode=self.trinary_mode,
+                    layer_variants=[list(v) for v in self.layer_variants],
+                    tuned_latency_s=self.tuned_latency_s,
+                    output_delta=self.output_delta)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "SessionPlan":
+        return cls(family=d["family"], scheme=d["scheme"],
+                   trinary_mode=d["trinary_mode"],
+                   layer_variants=tuple(tuple(v) for v in d["layer_variants"]),
+                   tuned_latency_s=d.get("tuned_latency_s", float("nan")),
+                   output_delta=d.get("output_delta", float("nan")))
+
+
+@dataclasses.dataclass
+class GraphEntry:
+    name: str
+    data: GraphData
+    version: int = 0
+    _csr: Optional[sampling.CSRGraph] = None
+    _dinv_gcn: Optional[np.ndarray] = None
+    _dinv_mean: Optional[np.ndarray] = None
+
+    @property
+    def csr(self) -> sampling.CSRGraph:
+        if self._csr is None:
+            self._csr = sampling.to_csr(self.data.edges, self.data.n_nodes)
+        return self._csr
+
+    @property
+    def dinv_gcn(self) -> np.ndarray:
+        """Full-graph D^-1/2 (self-loops included) — GCN factorization vector.
+        Subgraph adjacencies index into THIS so seed rows aggregate with the
+        exact full-graph normalization."""
+        if self._dinv_gcn is None:
+            n = self.data.n_nodes
+            deg = np.bincount(self.data.edges[0], minlength=n) + 1.0
+            self._dinv_gcn = 1.0 / np.sqrt(deg)
+        return self._dinv_gcn
+
+    @property
+    def dinv_mean(self) -> np.ndarray:
+        if self._dinv_mean is None:
+            n = self.data.n_nodes
+            deg = np.bincount(self.data.edges[0], minlength=n).astype(
+                np.float64)
+            self._dinv_mean = 1.0 / np.maximum(deg, 1.0)
+        return self._dinv_mean
+
+
+@dataclasses.dataclass
+class ModelEntry:
+    name: str
+    family: str
+    params: object
+
+
+def _quantize(family: str, params):
+    return {"gcn": gnn.quantize_gcn, "sage": gnn.quantize_sage,
+            "saint": gnn.quantize_saint}[family](params)
+
+
+def _frdc_arrays(m: frdc.FRDCMatrix) -> dict:
+    out = dict(tiles=m.tiles, col_idx=m.col_idx, group_row=m.group_row,
+               group_first=m.group_first, grp_ptr=m.grp_ptr)
+    if m.row_scale is not None:
+        out["row_scale"] = m.row_scale
+    if m.col_scale is not None:
+        out["col_scale"] = m.col_scale
+    return out
+
+
+def _frdc_rebuild(arrs: dict, n_rows: int, n_cols: int,
+                  nnz: int = 0) -> frdc.FRDCMatrix:
+    return frdc.FRDCMatrix(
+        tiles=arrs["tiles"], col_idx=arrs["col_idx"],
+        group_row=arrs["group_row"], group_first=arrs["group_first"],
+        grp_ptr=arrs["grp_ptr"], n_rows=int(n_rows), n_cols=int(n_cols),
+        nnz=int(nnz), row_scale=arrs.get("row_scale"),
+        col_scale=arrs.get("col_scale"))
+
+
+def _feature_fingerprint(x: np.ndarray) -> str:
+    return hashlib.sha1(np.ascontiguousarray(x).tobytes()).hexdigest()[:16]
+
+
+def _session_fingerprint(graph: "GraphEntry", model: "ModelEntry") -> dict:
+    d = graph.data
+    return dict(graph=graph.name, model=model.name, family=model.family,
+                n_nodes=int(d.n_nodes), n_edges=int(d.n_edges),
+                features=_feature_fingerprint(d.x))
+
+
+# FRDC array fields per adjacency kind of each family — the (deterministic)
+# pytree structure of a saved artifact, so load() can build the restore
+# template without encoding any adjacency.
+_FRDC_BASE_FIELDS = ("tiles", "col_idx", "group_row", "group_first",
+                     "grp_ptr")
+_ADJ_SCALE_FIELDS = {
+    "gcn": {"adj": ("row_scale", "col_scale"), "bin": ()},
+    "sage": {"mean": ("row_scale",)},
+    "saint": {"sum": ()},
+}
+
+
+def _adj_like(family: str) -> dict:
+    return {kind: {f: np.zeros(0) for f in _FRDC_BASE_FIELDS + extra}
+            for kind, extra in _ADJ_SCALE_FIELDS[family].items()}
+
+
+def _coerce_quant(q):
+    """Re-type a checkpoint-restored quantized param tree: the static ``n``
+    field of each BinTensor round-trips through npz as a 0-d array and must
+    come back as a python int (it participates in jit-static shape logic)."""
+    from repro.core.binarize import BinTensor
+    return type(q)(*(BinTensor(packed=jnp.asarray(t.packed),
+                               scale=jnp.asarray(t.scale), n=int(t.n))
+                     for t in q))
+
+
+class CompiledGraphSession:
+    """Per-(graph, model) compiled serving artifact. See module docstring."""
+
+    NODE_BUCKET_FLOOR = 64
+    GROUP_BUCKET_FLOOR = 16
+
+    def __init__(self, graph: GraphEntry, model: ModelEntry,
+                 plan: SessionPlan, qparams, khop: int = 2,
+                 max_batch: int = 32,
+                 adj_full: Optional[Dict[str, frdc.FRDCMatrix]] = None):
+        self.graph = graph
+        self.model = model
+        self.plan = plan
+        self.qparams = qparams
+        self.khop = khop
+        self.max_batch = max_batch
+        self.key = f"{graph.name}__{model.name}"
+        self.feature_version = -1          # forces first sync to calibrate
+        self.bn: Optional[tuple] = None
+        self._x_dev: Optional[jax.Array] = None
+        self._full_cache: Optional[np.ndarray] = None
+        self._n_traces = 0                 # jit cache-miss counter
+        self._invalidations = 0
+        # high-water shape buckets: node and group pads only ever GROW (in
+        # pow2 steps, capped at the full graph), so a session converges to
+        # one steady padded shape and serving stops recompiling — warmup is
+        # a handful of max-width batches, not a probabilistic shape sweep.
+        self._n_water = 0
+        self._g_water: Dict[Tuple[int, str], int] = {}
+        # adj_full injected on artifact restore (skips re-encoding the graph)
+        self._adj_full = (adj_full if adj_full is not None
+                          else self._build_full_adjacencies())
+        self._jit_full = self._make_full_fn()
+        self._jit_serve = self._make_serve_fn()
+
+    # ------------------------------------------------------------ build ----
+    def _build_full_adjacencies(self) -> Dict[str, frdc.FRDCMatrix]:
+        d = self.graph.data
+        fam = self.plan.family
+        if fam == "gcn":
+            return {"adj": d.adjacency("gcn"), "bin": d.adjacency("binary")}
+        if fam == "sage":
+            return {"mean": d.adjacency("mean")}
+        return {"sum": d.adjacency("binary")}
+
+    def _forward(self, qparams, x, adjs: Dict[str, frdc.FRDCMatrix], **kw):
+        fam = self.plan.family
+        if fam == "gcn":
+            return gnn.gcn_forward_bitgnn(
+                qparams, x, adjs["adj"], adjs["bin"], scheme=self.plan.scheme,
+                trinary_mode=self.plan.trinary_mode, **kw)
+        if fam == "sage":
+            return gnn.sage_forward_bitgnn(qparams, x, adjs["mean"], **kw)
+        return gnn.saint_forward_bitgnn(qparams, x, adjs["sum"], **kw)
+
+    def _make_full_fn(self):
+        # qparams/adjacencies are closed over (jit constants): BinTensor's
+        # static ``n`` and FRDCMatrix's static dims must not be traced. The
+        # jitted fns are recreated whenever qparams are swapped (load()).
+        adjs, qparams = self._adj_full, self.qparams
+
+        def full(x):
+            return self._forward(qparams, x, adjs, return_bn_stats=True)
+
+        return jax.jit(full)
+
+    def _make_serve_fn(self):
+        """The bucket-shaped subgraph forward. One ``jax.jit`` per session;
+        jit's shape-keyed cache gives one compile per (node bucket, group
+        buckets) combination. ``self._n_traces`` increments on trace only
+        (python side effect), i.e. it IS the jit cache-miss counter."""
+        qparams = self.qparams
+
+        def serve(x, bn, adjs, seeds):
+            self._n_traces += 1
+            n_pad = x.shape[0]
+            mats = {k: _frdc_rebuild(v, n_pad, n_pad)
+                    for k, v in adjs.items()}
+            out = self._forward(qparams, x, mats, bn_stats=bn)
+            return out[seeds]
+
+        return jax.jit(serve)
+
+    # ------------------------------------------------------------- sync ----
+    def sync(self) -> None:
+        """Adopt the store's current features: re-upload, recalibrate BN and
+        refresh the full-graph logits cache. No-op when already current."""
+        if self.feature_version == self.graph.version:
+            return
+        invalidated = self.feature_version >= 0
+        self._x_dev = jnp.asarray(self.graph.data.x)
+        out, bn = self._jit_full(self._x_dev)
+        self.bn = bn
+        self._full_cache = np.asarray(out)
+        self.feature_version = self.graph.version
+        if invalidated:
+            self._invalidations += 1
+
+    @property
+    def invalidations(self) -> int:
+        return self._invalidations
+
+    @property
+    def compile_count(self) -> int:
+        """Number of jit traces of the bucketed subgraph forward."""
+        return self._n_traces
+
+    # ------------------------------------------------------ full path ------
+    def full_logits(self) -> np.ndarray:
+        """Cached full-graph inference (the fast path for small/warm graphs)."""
+        self.sync()
+        return self._full_cache
+
+    # -------------------------------------------------- subgraph path ------
+    def _sub_adjacency(self, sub_nodes: np.ndarray,
+                       sub_edges: np.ndarray) -> Dict[str, frdc.FRDCMatrix]:
+        """Per-family subgraph FRDC matrices carrying FULL-graph factorization
+        vectors, so seed-row aggregation is identical to the full graph."""
+        fam = self.plan.family
+        ns = sub_nodes.size
+        if fam == "gcn":
+            loops = np.arange(ns, dtype=np.int64)
+            r = np.concatenate([sub_edges[0], loops])
+            c = np.concatenate([sub_edges[1], loops])
+            dinv = self.graph.dinv_gcn[sub_nodes]
+            return {
+                "adj": frdc.from_coo(r, c, ns, ns, row_scale=dinv,
+                                     col_scale=dinv),
+                "bin": frdc.from_coo(sub_edges[0], sub_edges[1], ns, ns),
+            }
+        if fam == "sage":
+            return {"mean": frdc.from_coo(
+                sub_edges[0], sub_edges[1], ns, ns,
+                row_scale=self.graph.dinv_mean[sub_nodes])}
+        return {"sum": frdc.from_coo(sub_edges[0], sub_edges[1], ns, ns)}
+
+    @property
+    def _node_cap(self) -> int:
+        return self._adj_full[next(iter(self._adj_full))].n_tile_rows \
+            * frdc.TILE
+
+    def _extract(self, uniq_seeds: np.ndarray):
+        """Host-side k-hop extraction + subgraph FRDC build (no device work
+        — also used by warmup to probe steady-state shapes cheaply)."""
+        sub_nodes, sub_edges, seed_pos = sampling.khop_subgraph(
+            self.graph.csr, uniq_seeds, self.khop)
+        return sub_nodes, self._sub_adjacency(sub_nodes, sub_edges), seed_pos
+
+    def serve_subgraph(self, seeds: np.ndarray) -> np.ndarray:
+        """Micro-batched node-level inference: k-hop extraction -> bucket
+        padding -> jitted forward -> (len(seeds), n_out) logits."""
+        self.sync()
+        seeds = np.asarray(seeds, np.int64)
+        uniq, inverse = np.unique(seeds, return_inverse=True)
+        sub_nodes, mats, seed_pos = self._extract(uniq)
+
+        n_pad = bucket_pow2(max(sub_nodes.size, self._n_water),
+                            self.NODE_BUCKET_FLOOR, self._node_cap)
+        self._n_water = n_pad
+        adjs = {}
+        for k, m in mats.items():
+            wkey = (n_pad, k)
+            g_pad = max(self._g_water.get(wkey, 0),
+                        bucket_pow2(m.n_groups, self.GROUP_BUCKET_FLOOR))
+            self._g_water[wkey] = g_pad
+            adjs[k] = _frdc_arrays(frdc.pad_frdc(m, n_pad, n_groups=g_pad))
+
+        x_pad = np.zeros((n_pad, self.graph.data.x.shape[1]), np.float32)
+        x_pad[:sub_nodes.size] = self.graph.data.x[sub_nodes]
+        pos_pad = np.zeros((self.max_batch,), np.int32)
+        pos_pad[:seed_pos.size] = seed_pos
+
+        out = self._jit_serve(jnp.asarray(x_pad), self.bn, adjs,
+                              jnp.asarray(pos_pad))
+        return np.asarray(out)[:uniq.size][inverse]
+
+    def warmup(self, rng: Optional[np.random.Generator] = None,
+               probes: int = 16, margin: float = 1.125) -> int:
+        """Drive the high-water shape bucket to its steady value and compile
+        it. Probes ``probes`` max-width batches HOST-SIDE ONLY (k-hop +
+        subgraph FRDC build, no device work, milliseconds each) to find the
+        largest node/group counts the workload produces, sets the water
+        marks to ``margin`` above that (then pow2-rounded), and runs one
+        real forward to compile the steady shape. A workload batch can only
+        recompile by exceeding the margined pow2 bucket — and the monotone
+        water then absorbs it after one compile. Returns compiles triggered."""
+        rng = rng or np.random.default_rng(0)
+        before = self._n_traces
+        self.sync()
+        n = self.graph.data.n_nodes
+        n_max, g_max = 0, {}
+        for _ in range(probes):
+            seeds = np.unique(rng.integers(0, n, size=self.max_batch))
+            sub_nodes, mats, _ = self._extract(seeds)
+            n_max = max(n_max, sub_nodes.size)
+            for k, m in mats.items():
+                g_max[k] = max(g_max.get(k, 0), m.n_groups)
+        n_pad = bucket_pow2(min(int(n_max * margin), self._node_cap),
+                            self.NODE_BUCKET_FLOOR, self._node_cap)
+        self._n_water = max(self._n_water, n_pad)
+        for k, g in g_max.items():
+            wkey = (self._n_water, k)
+            g_pad = bucket_pow2(int(g * margin), self.GROUP_BUCKET_FLOOR)
+            self._g_water[wkey] = max(self._g_water.get(wkey, 0), g_pad)
+        self.serve_subgraph(rng.integers(0, n, size=self.max_batch))
+        return self._n_traces - before
+
+    # ------------------------------------------------------- artifact ------
+    def _state(self) -> dict:
+        # bn stats are NOT serialized: they are a pure function of
+        # (qparams, features) and the first sync() after load recomputes
+        # them in the same full-graph pass that fills the logits cache.
+        return {"qparams": self.qparams,
+                "adj": {k: _frdc_arrays(m)
+                        for k, m in self._adj_full.items()}}
+
+    def fingerprint(self) -> dict:
+        return _session_fingerprint(self.graph, self.model)
+
+    def save(self, directory: Path) -> None:
+        """Serialize the compiled artifact via the existing checkpointer:
+        arrays in step_0, plan + static dims + fingerprint in plan.json."""
+        self.sync()
+        ckpt = Checkpointer(directory, keep=1)
+        ckpt.save(0, self._state(), blocking=True)
+        sidecar = dict(
+            plan=self.plan.to_json(), fingerprint=self.fingerprint(),
+            khop=self.khop, max_batch=self.max_batch,
+            adj_dims={k: [m.n_rows, m.n_cols, m.nnz]
+                      for k, m in self._adj_full.items()})
+        (Path(directory) / "plan.json").write_text(json.dumps(sidecar))
+
+    @classmethod
+    def load(cls, directory: Path, graph: GraphEntry, model: ModelEntry,
+             khop: Optional[int] = None, max_batch: Optional[int] = None
+             ) -> Optional["CompiledGraphSession"]:
+        """Restore a session artifact; returns None on any mismatch (missing
+        files, different graph/model/features, or a khop/max_batch that
+        differs from what the caller wants — a narrower restored seed-slot
+        buffer would overflow under a wider engine) so the caller recompiles.
+
+        All mismatch checks run BEFORE anything is built; the adjacency
+        encode (the expensive part of a cold session build on large graphs)
+        is skipped entirely — the FRDC arrays come from the checkpoint."""
+        directory = Path(directory)
+        sidecar_path = directory / "plan.json"
+        if not sidecar_path.exists():
+            return None
+        sidecar = json.loads(sidecar_path.read_text())
+        if khop is not None and sidecar["khop"] != khop:
+            return None
+        if max_batch is not None and sidecar["max_batch"] != max_batch:
+            return None
+        if _session_fingerprint(graph, model) != sidecar["fingerprint"]:
+            return None
+        plan = SessionPlan.from_json(sidecar["plan"])
+        like = {"qparams": _quantize(model.family, model.params),
+                "adj": _adj_like(model.family)}
+        try:
+            state = Checkpointer(directory, keep=1).restore(None, like)
+        except (FileNotFoundError, AssertionError):
+            return None
+        dims = sidecar["adj_dims"]
+        adj_full = {k: _frdc_rebuild(v, *dims[k])
+                    for k, v in state["adj"].items()}
+        return cls(graph, model, plan, _coerce_quant(state["qparams"]),
+                   khop=sidecar["khop"], max_batch=sidecar["max_batch"],
+                   adj_full=adj_full)
+
+
+# ---------------------------------------------------------------------------
+# Store
+# ---------------------------------------------------------------------------
+
+class GraphStore:
+    """Registry of graphs + models producing cached compiled sessions."""
+
+    def __init__(self, cache_dir: Optional[str] = None, khop: int = 2,
+                 max_batch: int = 32):
+        self.cache_dir = Path(cache_dir) if cache_dir else None
+        self.khop = khop
+        self.max_batch = max_batch
+        self.graphs: Dict[str, GraphEntry] = {}
+        self.models: Dict[str, ModelEntry] = {}
+        self._sessions: Dict[Tuple[str, str], CompiledGraphSession] = {}
+
+    # -------------------------------------------------------- registry ----
+    def register_graph(self, name: str, data: GraphData) -> GraphEntry:
+        entry = GraphEntry(name=name, data=data)
+        self.graphs[name] = entry
+        return entry
+
+    def register_model(self, name: str, family: str, params) -> ModelEntry:
+        if family not in FAMILIES:
+            raise ValueError(f"unknown family {family!r}; have {FAMILIES}")
+        entry = ModelEntry(name=name, family=family, params=params)
+        self.models[name] = entry
+        return entry
+
+    def update_features(self, name: str, x: np.ndarray) -> None:
+        """Swap node features in place; sessions recalibrate + drop their
+        full-graph caches on next use (version-based invalidation)."""
+        entry = self.graphs[name]
+        x = np.asarray(x, np.float32)
+        if x.shape != entry.data.x.shape:
+            raise ValueError(f"feature shape {x.shape} != "
+                             f"{entry.data.x.shape} (graph structure and "
+                             f"feature width are fixed per registration)")
+        entry.data.x = x
+        entry.version += 1
+
+    # --------------------------------------------------------- compile ----
+    def session(self, graph: str, model: str, tune: bool = False,
+                tune_repeats: int = 2) -> CompiledGraphSession:
+        key = (graph, model)
+        if key in self._sessions:
+            return self._sessions[key]
+        g, m = self.graphs[graph], self.models[model]
+
+        sess = None
+        sess_dir = (self.cache_dir / f"{graph}__{model}"
+                    if self.cache_dir else None)
+        if sess_dir is not None:
+            sess = CompiledGraphSession.load(sess_dir, g, m, khop=self.khop,
+                                             max_batch=self.max_batch)
+        if sess is None:
+            qparams = _quantize(m.family, m.params)
+            plan = (self._tune_plan(g, m, qparams, repeats=tune_repeats)
+                    if tune else self._default_plan(m.family))
+            sess = CompiledGraphSession(g, m, plan, qparams, khop=self.khop,
+                                        max_batch=self.max_batch)
+            sess.sync()
+            if sess_dir is not None:
+                sess.save(sess_dir)
+        self._sessions[key] = sess
+        return sess
+
+    @staticmethod
+    def _default_plan(family: str) -> SessionPlan:
+        if family == "gcn":
+            return SessionPlan(family, "bin",
+                               layer_variants=_GCN_SCHEME_VARIANTS["bin"])
+        return SessionPlan(family, "fixed")
+
+    def _tune_plan(self, g: GraphEntry, m: ModelEntry, qparams,
+                   repeats: int = 2) -> SessionPlan:
+        """Time the legal end-to-end variant assignments on the actual graph
+        (paper §3.4) and pick the fastest."""
+        x = jnp.asarray(g.data.x)
+        if m.family == "gcn":
+            adj, adj_bin = g.data.adjacency("gcn"), g.data.adjacency("binary")
+            cands = [
+                tuner.Candidate(_GCN_SCHEME_VARIANTS["full"], "s3_two_popc"),
+                tuner.Candidate(_GCN_SCHEME_VARIANTS["bin"], "s3_two_popc"),
+                tuner.Candidate(_GCN_SCHEME_VARIANTS["bin"], "s2_and_andnot"),
+            ]
+
+            def build(cand):
+                scheme = ("bin" if cand.layer_variants[0][0] == "BMM.FBB"
+                          else "full")
+                def fwd(xx):
+                    return gnn.gcn_forward_bitgnn(
+                        qparams, xx, adj, adj_bin, scheme=scheme,
+                        trinary_mode=cand.trinary_mode)
+                return fwd
+        else:
+            adj = g.data.adjacency(
+                "mean" if m.family == "sage" else "binary")
+            fwd_fn = (gnn.sage_forward_bitgnn if m.family == "sage"
+                      else gnn.saint_forward_bitgnn)
+            cands = [tuner.Candidate(_FIXED_VARIANTS, TRINARY_DEFAULT)]
+
+            def build(cand):
+                def fwd(xx):
+                    return fwd_fn(qparams, xx, adj)
+                return fwd
+
+        results = tuner.tune(build, (x,), cands, repeats=repeats)
+        best = results[0]
+        scheme = "fixed"
+        if m.family == "gcn":
+            scheme = ("bin" if best.candidate.layer_variants[0][0] ==
+                      "BMM.FBB" else "full")
+        return SessionPlan(
+            family=m.family, scheme=scheme,
+            trinary_mode=best.candidate.trinary_mode,
+            layer_variants=best.candidate.layer_variants,
+            tuned_latency_s=best.latency_s,
+            output_delta=best.output_delta)

@@ -1,0 +1,108 @@
+"""Serving metrics: latency percentiles, QPS, cache hit-rates, jit-compile
+counters — the observability layer of the GNN serving subsystem.
+
+Single-process and allocation-light: a flat sample list per histogram and
+plain integer counters. ``snapshot()`` returns a JSON-serializable dict, the
+payload of ``BENCH_serve_gnn.json`` and the example's final report.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class LatencyStats:
+    """Wall-clock latency samples with percentile summaries.
+
+    Bounded: keeps the most recent ``max_samples`` in a ring buffer so a
+    long-running engine doesn't grow without limit; ``count`` stays exact
+    over the full lifetime, percentiles are over the retained window."""
+
+    def __init__(self, max_samples: int = 100_000) -> None:
+        self.max_samples = max_samples
+        self._samples: List[float] = []
+        self._pos = 0
+        self._total = 0
+
+    def record(self, seconds: float) -> None:
+        s = float(seconds)
+        if len(self._samples) < self.max_samples:
+            self._samples.append(s)
+        else:
+            self._samples[self._pos] = s
+            self._pos = (self._pos + 1) % self.max_samples
+        self._total += 1
+
+    @property
+    def count(self) -> int:
+        return self._total
+
+    def percentile(self, p: float) -> float:
+        if not self._samples:
+            return float("nan")
+        return float(np.percentile(np.asarray(self._samples), p))
+
+    def summary(self) -> Dict[str, float]:
+        if not self._samples:
+            return dict(count=0, mean_ms=float("nan"), p50_ms=float("nan"),
+                        p90_ms=float("nan"), p99_ms=float("nan"),
+                        max_ms=float("nan"))
+        a = np.asarray(self._samples) * 1e3
+        return dict(count=self._total, mean_ms=float(a.mean()),
+                    p50_ms=float(np.percentile(a, 50)),
+                    p90_ms=float(np.percentile(a, 90)),
+                    p99_ms=float(np.percentile(a, 99)),
+                    max_ms=float(a.max()))
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    """Counters + histograms for one engine (or one session)."""
+    latency: LatencyStats = dataclasses.field(default_factory=LatencyStats)
+    batch_latency: LatencyStats = dataclasses.field(
+        default_factory=LatencyStats)
+    queries: int = 0
+    batches: int = 0
+    full_cache_hits: int = 0       # answered from the cached full-graph pass
+    subgraph_queries: int = 0      # answered via the micro-batched k-hop path
+    started_at: Optional[float] = None
+    finished_at: Optional[float] = None
+
+    def start_clock(self) -> None:
+        if self.started_at is None:
+            self.started_at = time.perf_counter()
+
+    def stop_clock(self) -> None:
+        self.finished_at = time.perf_counter()
+
+    @property
+    def elapsed_s(self) -> float:
+        if self.started_at is None:
+            return 0.0
+        end = self.finished_at or time.perf_counter()
+        return max(end - self.started_at, 1e-9)
+
+    @property
+    def qps(self) -> float:
+        return self.queries / self.elapsed_s
+
+    @property
+    def cache_hit_rate(self) -> float:
+        return self.full_cache_hits / max(self.queries, 1)
+
+    def snapshot(self, extra: Optional[dict] = None) -> dict:
+        out = dict(
+            queries=self.queries, batches=self.batches, qps=self.qps,
+            full_cache_hits=self.full_cache_hits,
+            subgraph_queries=self.subgraph_queries,
+            cache_hit_rate=self.cache_hit_rate,
+            elapsed_s=self.elapsed_s,
+            latency=self.latency.summary(),
+            batch_latency=self.batch_latency.summary(),
+        )
+        if extra:
+            out.update(extra)
+        return out

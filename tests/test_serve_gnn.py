@@ -1,0 +1,227 @@
+"""Serving subsystem tests: served predictions bit-exact vs. the direct
+``*_forward_bitgnn`` calls for all three families, bucket-padding invariance,
+cache invalidation on feature update, artifact save/restore."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import frdc
+from repro.core.bspmm import bspmm
+from repro.graphs import sampling
+from repro.graphs.datasets import make_dataset
+from repro.models import gnn
+from repro.serve import GNNServeEngine, GraphStore
+
+jax.config.update("jax_platform_name", "cpu")
+
+HIDDEN = 16
+BATCH = 8
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_dataset("cora", seed=0, scale=0.1)
+
+
+@pytest.fixture(scope="module")
+def store(data):
+    st = GraphStore(max_batch=BATCH)
+    st.register_graph("g", data)
+    key = jax.random.PRNGKey(0)
+    f, c = data.x.shape[1], data.n_classes
+    st.register_model("gcn", "gcn", gnn.init_gcn(key, f, HIDDEN, c))
+    st.register_model("sage", "sage", gnn.init_sage(key, f, HIDDEN, c))
+    st.register_model("saint", "saint", gnn.init_saint(key, f, HIDDEN, c))
+    return st
+
+
+def _direct(store, data, model):
+    """The reference: the plain full-graph *_forward_bitgnn call."""
+    x = jnp.asarray(data.x)
+    sess = store.session("g", model)
+    if model == "gcn":
+        out = gnn.gcn_forward_bitgnn(
+            sess.qparams, x, data.adjacency("gcn"), data.adjacency("binary"),
+            scheme=sess.plan.scheme, trinary_mode=sess.plan.trinary_mode)
+    elif model == "sage":
+        out = gnn.sage_forward_bitgnn(sess.qparams, x,
+                                      data.adjacency("mean"))
+    else:
+        out = gnn.saint_forward_bitgnn(sess.qparams, x,
+                                       data.adjacency("binary"))
+    return np.asarray(out)
+
+
+@pytest.mark.parametrize("model", ["gcn", "sage", "saint"])
+def test_served_matches_direct_forward(store, data, model):
+    """Micro-batched subgraph serving must reproduce the direct full-graph
+    forward: identical predictions, logits equal to fp-reassociation noise."""
+    ref = _direct(store, data, model)
+    engine = GNNServeEngine(store, max_batch=BATCH, mode="subgraph")
+    nodes = np.random.default_rng(1).integers(0, data.n_nodes, size=3 * BATCH)
+    queries = engine.submit_many("g", model, nodes)
+    engine.run_until_drained()
+    assert all(q.done for q in queries)
+    got = np.stack([q.logits for q in queries])
+    want = ref[nodes]
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.array([q.pred for q in queries]),
+                                  np.argmax(want, axis=-1))
+
+
+@pytest.mark.parametrize("model", ["gcn", "sage", "saint"])
+def test_full_cache_path_matches_direct(store, data, model):
+    """The cached full-graph path runs the direct forward once per feature
+    version: predictions exactly equal, logits equal up to jit-vs-eager
+    fusion rounding; repeat queries replay the identical cached array."""
+    ref = _direct(store, data, model)
+    engine = GNNServeEngine(store, max_batch=BATCH, mode="full")
+    nodes = np.arange(0, data.n_nodes, 7)[:2 * BATCH]
+    queries = engine.submit_many("g", model, nodes)
+    engine.run_until_drained()
+    got = np.stack([q.logits for q in queries])
+    np.testing.assert_allclose(got, ref[nodes], rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.argmax(got, -1),
+                                  np.argmax(ref[nodes], -1))
+    assert engine.metrics.full_cache_hits == len(queries)
+    again = engine.submit_many("g", model, nodes)
+    engine.run_until_drained()
+    np.testing.assert_array_equal(np.stack([q.logits for q in again]), got)
+
+
+def test_bucket_padding_never_changes_results(data):
+    """pad_frdc is exact: decoded matrix and BSpMM outputs are unchanged."""
+    m = data.adjacency("gcn")
+    pad = frdc.pad_frdc(m, m.n_rows + 37, n_groups=m.n_groups + 11)
+    dense, dense_pad = np.asarray(frdc.to_dense(m)), \
+        np.asarray(frdc.to_dense(pad))
+    np.testing.assert_array_equal(dense_pad[:m.n_rows, :m.n_cols], dense)
+    assert not dense_pad[m.n_rows:].any()
+    assert not dense_pad[:, m.n_cols:].any()
+    x = jax.random.normal(jax.random.PRNGKey(2), (m.n_cols, HIDDEN))
+    x_pad = jnp.zeros((pad.n_cols, HIDDEN)).at[:m.n_cols].set(x)
+    a = np.asarray(bspmm(m, x, "FBF"))
+    b = np.asarray(bspmm(pad, x_pad, "FBF"))
+    np.testing.assert_array_equal(b[:m.n_rows], a)
+
+
+def test_batch_composition_invariance(store, data):
+    """The same node served alone and inside a full batch (different shape
+    buckets and neighbor subgraphs) must yield the same prediction."""
+    ref = _direct(store, data, "gcn")
+    sess = store.session("g", "gcn")
+    node = int(np.argmax(np.bincount(data.edges[0])))   # a hub node
+    alone = sess.serve_subgraph(np.array([node]))[0]
+    rng = np.random.default_rng(3)
+    batch = np.concatenate([[node], rng.integers(0, data.n_nodes, BATCH - 1)])
+    grouped = sess.serve_subgraph(batch)[0]
+    np.testing.assert_allclose(alone, grouped, rtol=1e-4, atol=1e-4)
+    assert np.argmax(alone) == np.argmax(grouped) == np.argmax(ref[node])
+
+
+def test_khop_closure_property(data):
+    """Every node within k-1 hops of a seed keeps its FULL neighborhood."""
+    csr = sampling.to_csr(data.edges, data.n_nodes)
+    seeds = np.array([1, 2, 3])
+    sub_nodes, sub_edges, seed_pos = sampling.khop_subgraph(csr, seeds, 2)
+    np.testing.assert_array_equal(sub_nodes[seed_pos], seeds)
+    in_sub = np.zeros(data.n_nodes, bool)
+    in_sub[sub_nodes] = True
+    deg_sub = np.bincount(sub_edges[0], minlength=sub_nodes.size)
+    for s in seeds:                       # distance 0 <= k-1: full rows
+        pos = int(np.searchsorted(sub_nodes, s))
+        nbrs = csr.neighbors(int(s))
+        assert in_sub[nbrs].all()
+        assert deg_sub[pos] == nbrs.size
+
+
+def test_feature_update_invalidates_sessions(data):
+    """update_features bumps the version; both serve paths recalibrate and
+    answer from the NEW features, matching a fresh direct forward."""
+    st = GraphStore(max_batch=BATCH)
+    d2 = make_dataset("cora", seed=0, scale=0.1)
+    st.register_graph("g", d2)
+    st.register_model("gcn", "gcn",
+                      gnn.init_gcn(jax.random.PRNGKey(0), d2.x.shape[1],
+                                   HIDDEN, d2.n_classes))
+    engine = GNNServeEngine(st, max_batch=BATCH, mode="full")
+    nodes = np.arange(BATCH)
+    engine.submit_many("g", "gcn", nodes)
+    engine.run_until_drained()
+    before = np.stack([q.logits for q in engine.finished])
+
+    x2 = d2.x.copy()
+    x2[: d2.n_nodes // 5] = 0.0
+    st.update_features("g", x2)
+    sess = st.session("g", "gcn")
+    ref2 = np.asarray(gnn.gcn_forward_bitgnn(
+        sess.qparams, jnp.asarray(x2), d2.adjacency("gcn"),
+        d2.adjacency("binary"), scheme=sess.plan.scheme,
+        trinary_mode=sess.plan.trinary_mode))
+
+    qs = engine.submit_many("g", "gcn", nodes)
+    engine.run_until_drained()
+    after = np.stack([q.logits for q in qs])
+    np.testing.assert_allclose(after, ref2[nodes], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(after, before, rtol=1e-3, atol=1e-3)
+    assert sess.invalidations == 1
+
+    # subgraph path also serves from the new features
+    sub = sess.serve_subgraph(nodes[:4])
+    np.testing.assert_allclose(sub, ref2[nodes[:4]], rtol=1e-4, atol=1e-4)
+
+    with pytest.raises(ValueError):
+        st.update_features("g", x2[:, :10])   # feature width is fixed
+
+
+def test_session_artifact_roundtrip(tmp_path, data):
+    """save/load through the checkpointer reproduces plan + outputs; a
+    feature change invalidates the artifact (fingerprint mismatch)."""
+    params = gnn.init_gcn(jax.random.PRNGKey(0), data.x.shape[1], HIDDEN,
+                          data.n_classes)
+    st1 = GraphStore(cache_dir=str(tmp_path), max_batch=BATCH)
+    st1.register_graph("g", make_dataset("cora", seed=0, scale=0.1))
+    st1.register_model("gcn", "gcn", params)
+    s1 = st1.session("g", "gcn", tune=True, tune_repeats=1)
+    assert s1.plan.family == "gcn" and s1.plan.scheme in ("full", "bin")
+    assert np.isfinite(s1.plan.tuned_latency_s)
+
+    st2 = GraphStore(cache_dir=str(tmp_path), max_batch=BATCH)
+    st2.register_graph("g", make_dataset("cora", seed=0, scale=0.1))
+    st2.register_model("gcn", "gcn", params)
+    s2 = st2.session("g", "gcn")          # restored, not re-tuned
+    p1, p2 = s1.plan.to_json(), s2.plan.to_json()
+    d1, d2 = p1.pop("output_delta"), p2.pop("output_delta")
+    assert p1 == p2
+    assert (d1 == d2) or (np.isnan(d1) and np.isnan(d2))
+    np.testing.assert_array_equal(s1.full_logits(), s2.full_logits())
+
+    # different features -> stale artifact rejected -> fresh compile
+    st3 = GraphStore(cache_dir=str(tmp_path), max_batch=BATCH)
+    d3 = make_dataset("cora", seed=0, scale=0.1)
+    d3.x[:5] = 1.0
+    st3.register_graph("g", d3)
+    st3.register_model("gcn", "gcn", params)
+    from repro.serve.gnn_session import CompiledGraphSession
+    assert CompiledGraphSession.load(tmp_path / "g__gcn",
+                                     st3.graphs["g"],
+                                     st3.models["gcn"]) is None
+
+
+def test_zero_steady_state_recompiles(store, data):
+    """After warmup the jit cache-miss counter must not move."""
+    engine = GNNServeEngine(store, max_batch=BATCH, mode="subgraph")
+    engine.warmup("g", "sage")
+    c0 = engine.compile_count
+    rng = np.random.default_rng(5)
+    for _ in range(6):
+        engine.submit_many("g", "sage",
+                           rng.integers(0, data.n_nodes,
+                                        rng.integers(1, BATCH + 1)))
+        engine.tick()
+    engine.run_until_drained()
+    assert engine.compile_count == c0
+    snap = engine.snapshot()
+    assert snap["queries"] >= 6 and snap["qps"] > 0
+    assert snap["latency"]["p99_ms"] >= snap["latency"]["p50_ms"]
