@@ -1,0 +1,123 @@
+"""Sharded serving benchmark: QPS + latency percentiles of the partitioned
+engine (ShardPlanner -> ShardedGraphSession -> ShardedServeEngine) against
+the single-host baseline, plus the halo traffic the distributed pass and the
+routed subgraph path moved — per layer, packed vs fp.
+
+Shards are simulated on one host (the shard boundary, routing and halo
+mechanics are identical; only the transport latency is not real), so the QPS
+columns measure the ORCHESTRATION overhead of sharding, and the halo-bytes
+columns the communication volume a real deployment would pay — the number
+the paper's bit-packing shrinks 32x on the binary-aggregation layer.
+
+Emits CSV rows like every other section plus
+``results/BENCH_sharded_serve.json``.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.graphs.datasets import make_dataset
+from repro.models import gnn
+from repro.serve import GNNServeEngine, GraphStore, ShardedServeEngine
+
+from .common import csv_row
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+FAMILY_INITS = {
+    "gcn": gnn.init_gcn, "sage": gnn.init_sage, "saint": gnn.init_saint,
+}
+SHARD_COUNTS = (2, 4)
+
+
+def _serve_wave(engine, graph: str, model: str, nodes: np.ndarray,
+                batch: int) -> None:
+    for i in range(0, nodes.size, batch):
+        engine.submit_many(graph, model, nodes[i:i + batch])
+        engine.tick()
+    engine.run_until_drained()
+
+
+def _bench_engine(engine, fam: str, nodes: np.ndarray, batch: int) -> dict:
+    warm = engine.warmup("bench", fam)
+    c0 = engine.compile_count
+    _serve_wave(engine, "bench", fam, nodes, batch)
+    snap = engine.snapshot()
+    snap["warmup_compiles"] = warm
+    snap["steady_state_compiles"] = engine.compile_count - c0
+    return snap
+
+
+def run(full: bool = False) -> dict:
+    jax.config.update("jax_platform_name", "cpu")
+    scale = 1.0 if full else 0.15
+    n_queries = 600 if full else 120
+    batch = 32 if full else 16
+    hidden = 64 if full else 32
+
+    d = make_dataset("cora", seed=0, scale=scale)
+    store = GraphStore(max_batch=batch)
+    store.register_graph("bench", d)
+    key = jax.random.PRNGKey(0)
+    for fam, init in FAMILY_INITS.items():
+        store.register_model(fam, fam, init(key, d.x.shape[1], hidden,
+                                            d.n_classes))
+
+    summary: dict = dict(dataset="cora", scale=scale, n_nodes=d.n_nodes,
+                         n_edges=d.n_edges, n_queries=n_queries,
+                         batch=batch, shard_counts=list(SHARD_COUNTS),
+                         families={})
+    rng = np.random.default_rng(0)
+    nodes = rng.integers(0, d.n_nodes, size=n_queries)
+
+    for fam in FAMILY_INITS:
+        fam_out: dict = {}
+        single = _bench_engine(
+            GNNServeEngine(store, max_batch=batch, mode="subgraph"),
+            fam, nodes, batch)
+        fam_out["single"] = single
+        csv_row(f"sharded_serve/{fam}/single",
+                1e6 / max(single["qps"], 1e-9),
+                f"qps={single['qps']:.1f};"
+                f"p50_ms={single['latency']['p50_ms']:.2f};"
+                f"p99_ms={single['latency']['p99_ms']:.2f}")
+        for p in SHARD_COUNTS:
+            engine = ShardedServeEngine(store, p, max_batch=batch,
+                                        mode="subgraph")
+            snap = _bench_engine(engine, fam, nodes, batch)
+            sess = store.sharded_session("bench", fam, p)
+            snap["plan_stats"] = sess.shard_plan.stats()
+            # the distributed full pass ran once per calibration: its tags
+            # are the per-layer halo volume of full-graph inference
+            snap["full_pass_halo_bytes"] = {
+                t: b for t, b in sess.halo_stats.bytes_by_tag.items()
+                if t.startswith("layer")}
+            fam_out[f"P{p}"] = snap
+            halo = ";".join(f"{t.replace('/', '_')}={b}"
+                            for t, b in
+                            sorted(snap["full_pass_halo_bytes"].items()))
+            csv_row(f"sharded_serve/{fam}/P{p}",
+                    1e6 / max(snap["qps"], 1e-9),
+                    f"qps={snap['qps']:.1f};"
+                    f"p50_ms={snap['latency']['p50_ms']:.2f};"
+                    f"p99_ms={snap['latency']['p99_ms']:.2f};"
+                    f"halo_bytes={snap['halo_bytes']};{halo};"
+                    f"steady_compiles={snap['steady_state_compiles']}")
+        summary["families"][fam] = fam_out
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = RESULTS / "BENCH_sharded_serve.json"
+    out.write_text(json.dumps(summary, indent=2))
+    csv_row("sharded_serve/summary", 0.0, f"wrote={out}")
+    return summary
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    run(full=ap.parse_args().full)

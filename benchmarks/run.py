@@ -16,13 +16,14 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bench_fig4, bench_gnn_tables, bench_grad_compress,
-                   bench_memory, bench_serve_gnn)
+                   bench_memory, bench_serve_gnn, bench_sharded_serve)
     sections = [
         ("gnn_tables", bench_gnn_tables.run),     # Tables 3, 4, 5
         ("memory", bench_memory.run),             # Peak-Mem columns
         ("fig4", bench_fig4.run),                 # kernel profile proxy
         ("grad_compress", bench_grad_compress.run),
         ("serve_gnn", bench_serve_gnn.run),       # serving QPS/latency
+        ("sharded_serve", bench_sharded_serve.run),  # partitioned serving
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -1,0 +1,117 @@
+"""Sharded GNN serving demo: partition a graph across P shards and answer
+node queries with cross-shard k-hop routing + halo exchange.
+
+    PYTHONPATH=src python examples/serve_sharded.py [--shards 4] [--scale 0.2]
+
+Walkthrough:
+  1. a GraphStore registers a synthetic Table-2 graph + a binary GCN;
+  2. ``store.sharded_session(graph, model, P)`` runs the ShardPlanner
+     (edge-balanced tile-row cuts via graphs/partition.py), builds per-shard
+     intra FRDC + bit-packed halo adjacencies and a routing table, compiles
+     one bucketed serve core per shard and calibrates BN once;
+  3. the distributed full pass fills the per-shard logits caches, exchanging
+     activations layer-wise — PACKED words on the binary-aggregation layer;
+  4. the ShardedServeEngine routes micro-batched queries to their owning
+     shards (per-owner FIFO queues) and serves them with ZERO steady-state
+     recompiles per shard; answers are bit-exact vs single-host serving;
+  5. artifacts (per-shard FRDC + routing.json) roundtrip through the
+     checkpointer without re-partitioning.
+
+Run with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to move the
+halo exchange onto real per-shard devices (shard_map + ppermute collectives).
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.graphs.datasets import make_dataset
+from repro.launch.mesh import make_shard_mesh
+from repro.models import gnn
+from repro.serve import GraphStore, ShardedServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--queries", type=int, default=200)
+    ap.add_argument("--scale", type=float, default=0.2)
+    ap.add_argument("--batch", type=int, default=16)
+    args = ap.parse_args()
+    jax.config.update("jax_platform_name", "cpu")
+
+    # 1. graph + model -------------------------------------------------------
+    d = make_dataset("cora", seed=0, scale=args.scale)
+    print(f"graph: cora-like, {d.n_nodes} nodes / {d.n_edges} edges")
+    params = gnn.init_gcn(jax.random.PRNGKey(0), d.x.shape[1], 32,
+                          d.n_classes)
+    with tempfile.TemporaryDirectory() as cache:
+        store = GraphStore(cache_dir=cache, max_batch=args.batch)
+        store.register_graph("cora", d)
+        store.register_model("gcn", "gcn", params)
+
+        # 2. plan + compile the sharded session -----------------------------
+        mesh = make_shard_mesh(args.shards)
+        print(f"halo transport: "
+              f"{'mesh collectives' if mesh is not None else 'host loopback'}"
+              f" ({len(jax.devices())} devices)")
+        t0 = time.perf_counter()
+        sess = store.sharded_session("cora", "gcn", args.shards, mesh=mesh)
+        stats = sess.shard_plan.stats()
+        print(f"planned + compiled {sess.key!r} in "
+              f"{time.perf_counter()-t0:.1f}s")
+        print(f"  local nodes per shard: {stats['local_nodes']}, halo "
+              f"nodes: {stats['halo_nodes']}, edge-cut "
+              f"{stats['edge_cut_fraction']:.1%}, imbalance "
+              f"{stats['imbalance']:.2f}")
+
+        # 3. distributed full pass already ran in sync(): halo per layer ----
+        for tag, b in sorted(sess.halo_stats.bytes_by_tag.items()):
+            print(f"  halo[{tag}]: {b} bytes")
+
+        # 4. routed micro-batched serving -----------------------------------
+        engine = ShardedServeEngine(store, args.shards, max_batch=args.batch,
+                                    mode="subgraph", mesh=mesh)
+        warm = engine.warmup("cora", "gcn")
+        c0 = engine.compile_count
+        rng = np.random.default_rng(1)
+        nodes = rng.integers(0, d.n_nodes, size=args.queries)
+        for i in range(0, nodes.size, args.batch):
+            engine.submit_many("cora", "gcn", nodes[i:i + args.batch])
+            engine.tick()
+        engine.run_until_drained()
+        snap = engine.snapshot()
+        lat = snap["latency"]
+        print(f"  warmup compiles {warm} | steady-state recompiles "
+              f"{engine.compile_count - c0} (per shard: "
+              f"{snap['compiles_by_shard']})")
+        print(f"  {snap['queries']} queries -> {snap['qps']:.1f} QPS | "
+              f"p50 {lat['p50_ms']:.2f}ms p99 {lat['p99_ms']:.2f}ms | "
+              f"serve halo {snap['halo_bytes_by_tag'].get('serve/x', 0)} B")
+        assert engine.compile_count == c0, "steady-state recompile!"
+
+        # 5. sanity vs single host + artifact restore -----------------------
+        single = store.session("cora", "gcn")
+        sample = nodes[: args.batch]
+        owners = sess.routing.owner(sample)
+        for o in np.unique(owners):
+            grp = sample[owners == o]
+            a = sess.serve_subgraph(grp)
+            b = single.serve_subgraph(grp)
+            assert np.array_equal(a, b), "sharded != single-host!"
+        print("sharded answers are bit-exact vs the single-host session")
+
+        store2 = GraphStore(cache_dir=cache, max_batch=args.batch)
+        store2.register_graph("cora", d)
+        store2.register_model("gcn", "gcn", params)
+        restored = store2.sharded_session("cora", "gcn", args.shards)
+        assert np.array_equal(restored.routing.bounds, sess.routing.bounds)
+        print("artifact restored from cache without re-partitioning")
+
+
+if __name__ == "__main__":
+    main()

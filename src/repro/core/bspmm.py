@@ -19,7 +19,8 @@ the CPU execution path and the kernel's structural reference.
 """
 from __future__ import annotations
 
-from typing import Union
+import contextlib
+from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +32,29 @@ from .frdc import (FRDCMatrix, GROUP_COLS, TILE, coarsen_groups,
 
 BSPMM_VARIANTS = ("FBF", "FBB", "BBF", "BBB")
 TRINARY_DEFAULT = "s3_two_popc"
+
+# Pluggable execution backends: when set (see kernels.ops.serve_kernels),
+# the fp aggregation / trinary-counts stages run through them instead of the
+# jnp reference below. The hooks sit at the same semantic level as the
+# reference helpers: fp(adj, x) -> (n_rows, F) with scales applied;
+# bits(adj, x_packed, trinary_mode) -> (n_rows, Wf*32) int32 counts.
+_FP_BACKEND: Optional[Callable] = None
+_BITS_BACKEND: Optional[Callable] = None
+
+
+@contextlib.contextmanager
+def override_backends(fp: Optional[Callable] = None,
+                      bits: Optional[Callable] = None):
+    """Route BSpMM stages through alternative implementations (Pallas
+    kernels). The override is consulted at call/trace time, so wrapping a
+    jit trace bakes the backend into the compiled executable."""
+    global _FP_BACKEND, _BITS_BACKEND
+    prev = (_FP_BACKEND, _BITS_BACKEND)
+    _FP_BACKEND, _BITS_BACKEND = fp, bits
+    try:
+        yield
+    finally:
+        _FP_BACKEND, _BITS_BACKEND = prev
 
 
 def _pad_rows(x: jax.Array, multiple: int) -> jax.Array:
@@ -108,12 +132,13 @@ def bspmm(adj: FRDCMatrix, x: Union[jax.Array, BinTensor], variant: str,
     xa, _, op = variant
 
     if xa == "F":
-        full = _spmm_fp(adj, x)
+        full = (_FP_BACKEND or _spmm_fp)(adj, x)
         n_feat = x.shape[-1]
     else:
         assert isinstance(x, BinTensor)
         xp = _pad_rows(x.packed, TILE)
-        counts = _spmm_bits(adj, xp, trinary_mode).astype(jnp.float32)
+        counts = (_BITS_BACKEND or _spmm_bits)(
+            adj, xp, trinary_mode).astype(jnp.float32)
         n_feat = x.n
         counts = counts[:, :n_feat] if counts.shape[-1] > n_feat else counts
         if op == "F":

@@ -24,14 +24,40 @@ class RowShard:
     row_end: int             # one past last node row owned
 
 
+def shard_tile_bounds(rows: np.ndarray, n: int, n_shards: int) -> np.ndarray:
+    """Contiguous tile-row shard boundaries, balanced by EDGE count.
+
+    Returns ``(n_shards + 1,)`` tile-row indices (first 0, last
+    ``ceil(n/TILE)``); shard ``s`` owns tile-rows ``[b[s], b[s+1])``.
+    Balancing by edges (not nodes) mitigates power-law row skew — the same
+    reasoning as the paper's warp-balance concern (§3.3.1), applied at the
+    inter-chip level. Deterministic: a pure function of the row histogram.
+    """
+    rows = np.asarray(rows, np.int64)
+    n_tr = -(-n // TILE)
+    counts = np.bincount(rows // TILE, minlength=n_tr)
+    cum = np.concatenate([[0], np.cumsum(counts)])
+    total = cum[-1]
+    bounds = np.zeros(n_shards + 1, np.int64)
+    for s in range(n_shards):
+        target = total * (s + 1) / n_shards
+        tr_end = int(np.searchsorted(cum, target)) if s < n_shards - 1 else n_tr
+        bounds[s + 1] = max(tr_end, bounds[s])  # allow empty on tiny graphs
+    return bounds
+
+
+def shard_node_bounds(rows: np.ndarray, n: int, n_shards: int) -> np.ndarray:
+    """``shard_tile_bounds`` in NODE units: tile-aligned except the last,
+    which is clamped to ``n``. The routing table of the sharded serving
+    subsystem is exactly this array (node -> owning shard by bisection)."""
+    return np.minimum(shard_tile_bounds(rows, n, n_shards) * TILE, n)
+
+
 def partition_rows(rows: np.ndarray, cols: np.ndarray, n: int,
                    n_shards: int, kind: str = "gcn") -> List[RowShard]:
-    """Split an edge list into ``n_shards`` contiguous tile-row shards.
-
-    Shard boundaries are tile-row aligned (multiples of TILE) and balanced by
-    EDGE count (not node count) to mitigate power-law row skew — the same
-    reasoning as the paper's warp-balance concern (§3.3.1), applied at the
-    inter-chip level.
+    """Split an edge list into ``n_shards`` contiguous tile-row shards
+    (boundaries from :func:`shard_tile_bounds`); every shard holds its FRDC
+    block-rows over the FULL column space.
     """
     rows = np.asarray(rows, np.int64)
     cols = np.asarray(cols, np.int64)
@@ -42,13 +68,11 @@ def partition_rows(rows: np.ndarray, cols: np.ndarray, n: int,
     edge_tile_row = rows_s // TILE
     counts = np.bincount(edge_tile_row, minlength=n_tr)
     cum = np.concatenate([[0], np.cumsum(counts)])
-    total = cum[-1]
+    bounds = shard_tile_bounds(rows, n, n_shards)
     shards = []
     prev_tr = 0
     for s in range(n_shards):
-        target = total * (s + 1) / n_shards
-        tr_end = int(np.searchsorted(cum, target)) if s < n_shards - 1 else n_tr
-        tr_end = max(tr_end, prev_tr)  # allow empty shards on tiny graphs
+        tr_end = int(bounds[s + 1])
         lo, hi = cum[prev_tr], cum[tr_end]
         r_lo, r_hi = prev_tr * TILE, min(tr_end * TILE, n)
         sel = slice(lo, hi)

@@ -54,6 +54,12 @@ def _gather_neighbors(csr: CSRGraph, nodes: np.ndarray
     return csr.indices[idx], counts
 
 
+# public alias: the sharded k-hop router expands per-shard frontiers with
+# the exact same vectorized gather the single-host path uses, so cross-shard
+# extraction reproduces the single-host neighbor ordering bit-for-bit.
+gather_neighbors = _gather_neighbors
+
+
 def khop_nodes(csr: CSRGraph, seeds: np.ndarray, k: int) -> np.ndarray:
     """Sorted node ids of the FULL (unsampled) k-hop closure of ``seeds``.
 

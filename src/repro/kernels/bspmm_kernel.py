@@ -146,10 +146,27 @@ def _fp_kernel(col_idx_ref, first_ref, last_ref, row_ref, tiles_ref,
 
 
 def _group_last(adj: FRDCMatrix) -> jax.Array:
-    """1 iff the group is the last of its tile-row."""
-    nxt = jnp.concatenate([adj.group_row[1:],
-                           jnp.full((1,), -1, adj.group_row.dtype)])
-    return (adj.group_row != nxt).astype(jnp.int32)
+    """1 iff the group is the last NONZERO group of its tile-row.
+
+    All-zero groups are ``pad_frdc`` bucket padding (mapped to tile-row 0
+    WITHOUT a first-of-row reset): they must never close a row — that would
+    flush a stale accumulator over row 0's output — AND they must not hide
+    the real last group of row 0 behind them (comparing against the
+    immediate successor's row would). So each nonzero group flushes iff the
+    NEXT nonzero group belongs to a different tile-row; zero groups
+    contribute nothing and never flush (rows with no real groups keep the
+    prefill value, which is exact)."""
+    g = adj.group_row.shape[0]
+    nonzero = (adj.tiles != 0).any(axis=-1)
+    idx = jnp.arange(g, dtype=jnp.int32)
+    key = jnp.where(nonzero, idx, g)
+    # suffix-min -> index of the next nonzero group at-or-after each slot
+    at_or_after = jax.lax.cummin(key[::-1])[::-1]
+    nxt_idx = jnp.concatenate([at_or_after[1:],
+                               jnp.full((1,), g, jnp.int32)])
+    nxt_row = jnp.where(nxt_idx < g,
+                        adj.group_row[jnp.clip(nxt_idx, 0, g - 1)], -1)
+    return (nonzero & (adj.group_row != nxt_row)).astype(jnp.int32)
 
 
 def bspmm_bits(adj: FRDCMatrix, x_packed: jax.Array, n_feat: int | None = None,

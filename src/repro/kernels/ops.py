@@ -7,6 +7,7 @@ faster there — so dispatch prefers jnp off-TPU unless ``force_kernels`` is on
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Optional
 
@@ -74,15 +75,48 @@ def bspmm_bits(adj: FRDCMatrix, x_packed: jax.Array, n_feat: int,
     return res.packed if binarize else res
 
 
+def _serve_fp_backend(adj: FRDCMatrix, x: jax.Array) -> jax.Array:
+    """core.bspmm fp-stage hook: Pallas BSpMM.FB? with scales applied here
+    (the kernel computes raw masked matmuls)."""
+    xin = x
+    if adj.col_scale is not None:
+        xin = xin * adj.col_scale[:, None].astype(x.dtype)
+    out = bspmm_kernel.bspmm_fp(adj, xin, interpret=_interpret())
+    out = out[: adj.n_rows]
+    if adj.row_scale is not None:
+        out = out * adj.row_scale[:, None].astype(out.dtype)
+    return out
+
+
+def _serve_bits_backend(adj: FRDCMatrix, x_packed: jax.Array,
+                        trinary_mode: str) -> jax.Array:
+    """core.bspmm trinary-counts hook: Pallas BSpMM.BB? raw counts."""
+    out = bspmm_kernel.bspmm_bits(adj, x_packed, binarize=False,
+                                  trinary_mode=trinary_mode,
+                                  interpret=_interpret())
+    return out[: adj.n_rows]
+
+
+@contextlib.contextmanager
+def serve_kernels(enabled: bool = True):
+    """Route BSpMM aggregation through the Pallas kernels while active.
+
+    The serving sessions enter this at jit TRACE time (``use_pallas``
+    config flag), so the kernel calls are baked into the compiled serve
+    executables. Off-TPU (and without ``force_kernels``) it is a no-op and
+    the reference jnp path runs instead — the sessions' documented fallback.
+    Yields whether the kernels are actually active.
+    """
+    if not (enabled and _use_kernels()):
+        yield False
+        return
+    with bspmm_core.override_backends(fp=_serve_fp_backend,
+                                      bits=_serve_bits_backend):
+        yield True
+
+
 def bspmm_fp(adj: FRDCMatrix, x: jax.Array) -> jax.Array:
     """FRDC fp aggregation (scales applied here, kernel does raw counts)."""
     if _use_kernels():
-        xin = x
-        if adj.col_scale is not None:
-            xin = xin * adj.col_scale[:, None].astype(x.dtype)
-        out = bspmm_kernel.bspmm_fp(adj, xin, interpret=_interpret())
-        out = out[: adj.n_rows]
-        if adj.row_scale is not None:
-            out = out * adj.row_scale[:, None].astype(out.dtype)
-        return out
+        return _serve_fp_backend(adj, x)
     return bspmm_core.bspmm(adj, x, "FBF")

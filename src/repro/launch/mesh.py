@@ -32,6 +32,19 @@ def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
                          **_axis_types_kw(2))
 
 
+def make_shard_mesh(n_shards: int):
+    """Mesh with a ``data`` axis of exactly ``n_shards`` devices — the shape
+    the sharded serving halo collectives (ppermute ring) run over. Returns
+    None when the host exposes fewer devices (callers fall back to the host
+    loopback transport). CPU-only runners get multiple devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``."""
+    import numpy as np
+    devs = jax.devices()
+    if len(devs) < n_shards:
+        return None
+    return jax.sharding.Mesh(np.asarray(devs[:n_shards]), ("data",))
+
+
 def dp_axes(mesh: jax.sharding.Mesh):
     """The data-parallel mesh axes (includes "pod" when present)."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,15 +1,21 @@
 """Serving subsystem.
 
-``engine``      — transformer continuous-batching serve loop (LLM path).
-``gnn_session`` — GraphStore / CompiledGraphSession artifacts (GNN path).
-``gnn_engine``  — micro-batched node-query engine over compiled sessions.
-``metrics``     — latency percentiles / QPS / cache counters.
+``engine``       — transformer continuous-batching serve loop (LLM path).
+``session_core`` — shared compile/calibrate/bucketed-serve machinery.
+``gnn_session``  — GraphStore / CompiledGraphSession artifacts (GNN path).
+``gnn_engine``   — micro-batched node-query engine over compiled sessions.
+``sharded``      — partitioned sessions: cross-shard k-hop routing + halo
+                   exchange (ShardedGraphSession / ShardedServeEngine).
+``metrics``      — latency percentiles / QPS / cache counters.
 """
 from .gnn_engine import GNNServeEngine, NodeQuery
 from .gnn_session import CompiledGraphSession, GraphStore, SessionPlan
 from .metrics import LatencyStats, ServeMetrics
+from .sharded import (ShardedGraphSession, ShardedServeEngine, ShardPlan,
+                      ShardPlanner)
 
 __all__ = [
     "GNNServeEngine", "NodeQuery", "CompiledGraphSession", "GraphStore",
-    "SessionPlan", "LatencyStats", "ServeMetrics",
+    "SessionPlan", "LatencyStats", "ServeMetrics", "ShardedGraphSession",
+    "ShardedServeEngine", "ShardPlan", "ShardPlanner",
 ]

@@ -94,9 +94,16 @@ class GNNServeEngine:
         q = NodeQuery(graph=graph, model=model, node=node)
         q.qid, self._next_qid = self._next_qid, self._next_qid + 1
         q.t_submit = time.perf_counter()
-        self._queues.setdefault((graph, model), deque()).append(q)
+        key = self._queue_key(graph, model, node)
+        self._queues.setdefault(key, deque()).append(q)
         self.metrics.start_clock()
         return q
+
+    def _queue_key(self, graph: str, model: str, node: int) -> tuple:
+        """Queue routing hook: one FIFO per (graph, model) here; the sharded
+        engine additionally keys by the node's owning shard so every served
+        micro-batch is a single-owner group."""
+        return (graph, model)
 
     def submit_many(self, graph: str, model: str,
                     nodes: np.ndarray) -> List[NodeQuery]:
@@ -106,11 +113,16 @@ class GNNServeEngine:
     def pending(self) -> int:
         return sum(len(q) for q in self._queues.values())
 
+    def _sessions(self):
+        """The store sessions this engine class serves from (the sharded
+        engine overrides this to its partitioned sessions)."""
+        return self.store._sessions.values()
+
     @property
     def compile_count(self) -> int:
         """Total jit traces across all sessions this engine has touched —
         the 'zero steady-state recompiles' acceptance counter."""
-        return sum(s.compile_count for s in self.store._sessions.values())
+        return sum(s.compile_count for s in self._sessions())
 
     # ------------------------------------------------------------- serve ----
     def _pick_queue(self) -> Optional[Tuple[str, str]]:
@@ -120,12 +132,25 @@ class GNNServeEngine:
                 best, best_t = key, dq[0].t_submit
         return best
 
-    def _use_full_cache(self, session: CompiledGraphSession) -> bool:
+    def _use_full_cache(self, session) -> bool:
         if self.mode == "full":
             return True
         if self.mode == "subgraph":
             return False
         return session.graph.data.n_nodes <= self.full_cache_max_nodes
+
+    def _get_session(self, key: Tuple[str, ...]):
+        """Resolve a queue key (first two entries: graph, model) to the
+        session answering it (hook: the sharded engine resolves to a
+        partitioned session instead)."""
+        return self.store.session(*key[:2])
+
+    def _serve_logits(self, session, seeds: np.ndarray) -> np.ndarray:
+        if self._use_full_cache(session):
+            self.metrics.full_cache_hits += len(seeds)
+            return session.full_logits()[seeds]
+        self.metrics.subgraph_queries += len(seeds)
+        return session.serve_subgraph(seeds)
 
     def tick(self) -> int:
         """Serve ONE micro-batch (the oldest-waiting session's head of
@@ -135,17 +160,10 @@ class GNNServeEngine:
             return 0
         dq = self._queues[key]
         batch = [dq.popleft() for _ in range(min(self.max_batch, len(dq)))]
-        session = self.store.session(*key)
+        session = self._get_session(key)
         t0 = time.perf_counter()
         seeds = np.asarray([q.node for q in batch], np.int64)
-
-        if self._use_full_cache(session):
-            logits = session.full_logits()[seeds]
-            self.metrics.full_cache_hits += len(batch)
-        else:
-            logits = session.serve_subgraph(seeds)
-            self.metrics.subgraph_queries += len(batch)
-
+        logits = self._serve_logits(session, seeds)
         t_done = time.perf_counter()
         self.metrics.batches += 1
         self.metrics.batch_latency.record(t_done - t0)
@@ -173,14 +191,14 @@ class GNNServeEngine:
         """Pre-populate a session's jit shape buckets (and its full cache)
         so the serving loop runs with zero steady-state recompiles. Returns
         the number of compiles the warmup triggered."""
-        session = self.store.session(graph, model)
+        session = self._get_session((graph, model))
         session.sync()
         if self._use_full_cache(session):
             return 0     # steady state serves from the cache sync just built
         return session.warmup(np.random.default_rng(seed), probes=probes)
 
     def snapshot(self) -> dict:
-        inval = sum(s.invalidations for s in self.store._sessions.values())
+        inval = sum(s.invalidations for s in self._sessions())
         return self.metrics.snapshot(extra=dict(
             compiles=self.compile_count, invalidations=inval,
             pending=self.pending))

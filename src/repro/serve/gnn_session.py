@@ -16,84 +16,46 @@ A ``GraphStore`` registers graphs (host-side ``GraphData``) and models
     computation for the seed nodes exactly (fp-reassociation noise only);
   * a cached full-graph logits fast path, invalidated on feature update.
 
+The compile/calibrate/bucketed-serve machinery itself lives in
+:mod:`repro.serve.session_core` (shared with the partitioned sessions of
+:mod:`repro.serve.sharded`); this module owns the single-host graph state.
+
 Artifacts are serialized through the existing async checkpointer
 (:mod:`repro.checkpoint.checkpointer`): array state in ``step_0/shard_0.npz``
 plus a ``plan.json`` sidecar holding the plan, static FRDC dims and a feature
 fingerprint; a store restart with an unchanged graph/model restores instead
 of re-tuning.
 
-Subgraph forwards are served through HIGH-WATER SHAPE BUCKETS: node and FRDC
-group counts are padded up to pow2 marks that only ever grow (capped at the
-full graph), so the per-session jitted forward converges to one steady
-padded shape after a short warmup and never recompiles in steady state
-(``compile_count`` counts jit traces and is the verification counter).
+Feature updates: ``GraphStore.update_features`` records WHICH rows changed.
+A session in incremental mode keeps its frozen BN calibration and patches
+only the ``FAMILY_AGG_LAYERS``-hop out-neighborhood of the changed nodes in
+its cached full-graph logits (output rows outside that closure are provably
+unchanged under frozen BN stats); the default mode recalibrates and recomputes
+the whole cache.
 """
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 import json
 from pathlib import Path
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
-from repro.core import frdc, tuner
-from repro.core.bspmm import TRINARY_DEFAULT
+from repro.core import frdc
 from repro.graphs import sampling
 from repro.graphs.datasets import GraphData
-from repro.models import gnn
+from repro.serve import session_core
+from repro.serve.session_core import (  # re-exported (stable import path)
+    FAMILIES, FAMILY_AGG_LAYERS, ServeCore, SessionPlan, bucket_pow2)
 
-FAMILIES = ("gcn", "sage", "saint")
-
-# layer_variants of the two legal GCN end-to-end schemes (paper Table 3);
-# SAGE/SAINT run the fixed Fig. 2 pipeline (BMM.BBF branches + BSpMM.FBF).
-_GCN_SCHEME_VARIANTS = {
-    "full": (("BMM.BBF", "BSpMM.FBF"), ("BMM.BBF", "BSpMM.FBF")),
-    "bin": (("BMM.FBB", "BSpMM.BBB"), ("BMM.BBF", "BSpMM.FBF")),
-}
-_FIXED_VARIANTS = (("BMM.BBF", "BSpMM.FBF"), ("BMM.BBF", "BSpMM.FBF"))
-
-
-def bucket_pow2(n: int, floor: int, cap: Optional[int] = None) -> int:
-    """Round up to the power-of-two bucket grid (>= floor, <= cap)."""
-    b = floor
-    while b < n:
-        b *= 2
-    return b if cap is None else min(b, cap)
-
-
-@dataclasses.dataclass
-class SessionPlan:
-    """Tuner-selected execution plan of one compiled session."""
-    family: str
-    scheme: str                       # gcn: "full" | "bin"; else "fixed"
-    trinary_mode: str = TRINARY_DEFAULT
-    layer_variants: tuple = _FIXED_VARIANTS
-    tuned_latency_s: float = float("nan")
-    output_delta: float = float("nan")
-
-    def name(self) -> str:
-        layers = ";".join(f"{m}+{s}" for m, s in self.layer_variants)
-        return f"{self.family}/{self.scheme}[{layers}|{self.trinary_mode}]"
-
-    def to_json(self) -> dict:
-        return dict(family=self.family, scheme=self.scheme,
-                    trinary_mode=self.trinary_mode,
-                    layer_variants=[list(v) for v in self.layer_variants],
-                    tuned_latency_s=self.tuned_latency_s,
-                    output_delta=self.output_delta)
-
-    @classmethod
-    def from_json(cls, d: dict) -> "SessionPlan":
-        return cls(family=d["family"], scheme=d["scheme"],
-                   trinary_mode=d["trinary_mode"],
-                   layer_variants=tuple(tuple(v) for v in d["layer_variants"]),
-                   tuned_latency_s=d.get("tuned_latency_s", float("nan")),
-                   output_delta=d.get("output_delta", float("nan")))
+# retained changelog entries per graph: an incremental session can catch up
+# across at most this many feature versions before falling back to a full
+# recompute.
+CHANGELOG_KEEP = 64
 
 
 @dataclasses.dataclass
@@ -101,7 +63,11 @@ class GraphEntry:
     name: str
     data: GraphData
     version: int = 0
+    # (version, changed row ids) per update_features call, most recent last
+    changelog: List[Tuple[int, np.ndarray]] = dataclasses.field(
+        default_factory=list)
     _csr: Optional[sampling.CSRGraph] = None
+    _csr_rev: Optional[sampling.CSRGraph] = None
     _dinv_gcn: Optional[np.ndarray] = None
     _dinv_mean: Optional[np.ndarray] = None
 
@@ -110,6 +76,16 @@ class GraphEntry:
         if self._csr is None:
             self._csr = sampling.to_csr(self.data.edges, self.data.n_nodes)
         return self._csr
+
+    @property
+    def csr_rev(self) -> sampling.CSRGraph:
+        """Reverse CSR (sender -> receivers): who aggregates FROM a node —
+        the out-neighborhood a feature change invalidates."""
+        if self._csr_rev is None:
+            e = self.data.edges
+            self._csr_rev = sampling.to_csr(np.stack([e[1], e[0]]),
+                                            self.data.n_nodes)
+        return self._csr_rev
 
     @property
     def dinv_gcn(self) -> np.ndarray:
@@ -131,6 +107,28 @@ class GraphEntry:
             self._dinv_mean = 1.0 / np.maximum(deg, 1.0)
         return self._dinv_mean
 
+    def dinv_for(self, family: str) -> Optional[np.ndarray]:
+        if family == "gcn":
+            return self.dinv_gcn
+        if family == "sage":
+            return self.dinv_mean
+        return None
+
+    def record_change(self, changed: np.ndarray) -> None:
+        self.changelog.append((self.version, np.asarray(changed, np.int64)))
+        del self.changelog[:-CHANGELOG_KEEP]
+
+    def changed_since(self, version: int) -> Optional[np.ndarray]:
+        """Union of rows changed in (version, self.version], or None when the
+        changelog no longer covers that span (caller must recompute fully)."""
+        need = [v for v in range(version + 1, self.version + 1)]
+        have = {v: c for v, c in self.changelog}
+        if any(v not in have for v in need):
+            return None
+        if not need:
+            return np.zeros(0, np.int64)
+        return np.unique(np.concatenate([have[v] for v in need]))
+
 
 @dataclasses.dataclass
 class ModelEntry:
@@ -139,103 +137,40 @@ class ModelEntry:
     params: object
 
 
-def _quantize(family: str, params):
-    return {"gcn": gnn.quantize_gcn, "sage": gnn.quantize_sage,
-            "saint": gnn.quantize_saint}[family](params)
-
-
-def _frdc_arrays(m: frdc.FRDCMatrix) -> dict:
-    out = dict(tiles=m.tiles, col_idx=m.col_idx, group_row=m.group_row,
-               group_first=m.group_first, grp_ptr=m.grp_ptr)
-    if m.row_scale is not None:
-        out["row_scale"] = m.row_scale
-    if m.col_scale is not None:
-        out["col_scale"] = m.col_scale
-    return out
-
-
-def _frdc_rebuild(arrs: dict, n_rows: int, n_cols: int,
-                  nnz: int = 0) -> frdc.FRDCMatrix:
-    return frdc.FRDCMatrix(
-        tiles=arrs["tiles"], col_idx=arrs["col_idx"],
-        group_row=arrs["group_row"], group_first=arrs["group_first"],
-        grp_ptr=arrs["grp_ptr"], n_rows=int(n_rows), n_cols=int(n_cols),
-        nnz=int(nnz), row_scale=arrs.get("row_scale"),
-        col_scale=arrs.get("col_scale"))
-
-
-def _feature_fingerprint(x: np.ndarray) -> str:
-    return hashlib.sha1(np.ascontiguousarray(x).tobytes()).hexdigest()[:16]
-
-
-def _session_fingerprint(graph: "GraphEntry", model: "ModelEntry") -> dict:
-    d = graph.data
-    return dict(graph=graph.name, model=model.name, family=model.family,
-                n_nodes=int(d.n_nodes), n_edges=int(d.n_edges),
-                features=_feature_fingerprint(d.x))
-
-
-# FRDC array fields per adjacency kind of each family — the (deterministic)
-# pytree structure of a saved artifact, so load() can build the restore
-# template without encoding any adjacency.
-_FRDC_BASE_FIELDS = ("tiles", "col_idx", "group_row", "group_first",
-                     "grp_ptr")
-_ADJ_SCALE_FIELDS = {
-    "gcn": {"adj": ("row_scale", "col_scale"), "bin": ()},
-    "sage": {"mean": ("row_scale",)},
-    "saint": {"sum": ()},
-}
-
-
-def _adj_like(family: str) -> dict:
-    return {kind: {f: np.zeros(0) for f in _FRDC_BASE_FIELDS + extra}
-            for kind, extra in _ADJ_SCALE_FIELDS[family].items()}
-
-
-def _coerce_quant(q):
-    """Re-type a checkpoint-restored quantized param tree: the static ``n``
-    field of each BinTensor round-trips through npz as a 0-d array and must
-    come back as a python int (it participates in jit-static shape logic)."""
-    from repro.core.binarize import BinTensor
-    return type(q)(*(BinTensor(packed=jnp.asarray(t.packed),
-                               scale=jnp.asarray(t.scale), n=int(t.n))
-                     for t in q))
+_session_fingerprint = session_core.session_fingerprint
 
 
 class CompiledGraphSession:
     """Per-(graph, model) compiled serving artifact. See module docstring."""
 
-    NODE_BUCKET_FLOOR = 64
-    GROUP_BUCKET_FLOOR = 16
-
     def __init__(self, graph: GraphEntry, model: ModelEntry,
                  plan: SessionPlan, qparams, khop: int = 2,
                  max_batch: int = 32,
-                 adj_full: Optional[Dict[str, frdc.FRDCMatrix]] = None):
+                 adj_full: Optional[Dict[str, frdc.FRDCMatrix]] = None,
+                 use_pallas: bool = False, incremental: bool = False):
         self.graph = graph
         self.model = model
         self.plan = plan
         self.qparams = qparams
         self.khop = khop
         self.max_batch = max_batch
+        self.use_pallas = use_pallas
+        self.incremental = incremental
         self.key = f"{graph.name}__{model.name}"
         self.feature_version = -1          # forces first sync to calibrate
         self.bn: Optional[tuple] = None
         self._x_dev: Optional[jax.Array] = None
         self._full_cache: Optional[np.ndarray] = None
-        self._n_traces = 0                 # jit cache-miss counter
         self._invalidations = 0
-        # high-water shape buckets: node and group pads only ever GROW (in
-        # pow2 steps, capped at the full graph), so a session converges to
-        # one steady padded shape and serving stops recompiling — warmup is
-        # a handful of max-width batches, not a probabilistic shape sweep.
-        self._n_water = 0
-        self._g_water: Dict[Tuple[int, str], int] = {}
+        self._incremental_refreshes = 0
         # adj_full injected on artifact restore (skips re-encoding the graph)
         self._adj_full = (adj_full if adj_full is not None
                           else self._build_full_adjacencies())
-        self._jit_full = self._make_full_fn()
-        self._jit_serve = self._make_serve_fn()
+        node_cap = self._adj_full[next(iter(self._adj_full))].n_tile_rows \
+            * frdc.TILE
+        self.core = ServeCore(plan, qparams, max_batch, node_cap,
+                              use_pallas=use_pallas)
+        self._jit_full, self._jit_full_frozen = self._make_full_fns()
 
     # ------------------------------------------------------------ build ----
     def _build_full_adjacencies(self) -> Dict[str, frdc.FRDCMatrix]:
@@ -247,67 +182,79 @@ class CompiledGraphSession:
             return {"mean": d.adjacency("mean")}
         return {"sum": d.adjacency("binary")}
 
-    def _forward(self, qparams, x, adjs: Dict[str, frdc.FRDCMatrix], **kw):
-        fam = self.plan.family
-        if fam == "gcn":
-            return gnn.gcn_forward_bitgnn(
-                qparams, x, adjs["adj"], adjs["bin"], scheme=self.plan.scheme,
-                trinary_mode=self.plan.trinary_mode, **kw)
-        if fam == "sage":
-            return gnn.sage_forward_bitgnn(qparams, x, adjs["mean"], **kw)
-        return gnn.saint_forward_bitgnn(qparams, x, adjs["sum"], **kw)
-
-    def _make_full_fn(self):
+    def _make_full_fns(self):
         # qparams/adjacencies are closed over (jit constants): BinTensor's
         # static ``n`` and FRDCMatrix's static dims must not be traced. The
         # jitted fns are recreated whenever qparams are swapped (load()).
-        adjs, qparams = self._adj_full, self.qparams
+        adjs, qparams, plan = self._adj_full, self.qparams, self.plan
+        use_pallas = self.use_pallas
 
         def full(x):
-            return self._forward(qparams, x, adjs, return_bn_stats=True)
+            return session_core.family_forward(
+                plan, qparams, x, adjs, use_pallas=use_pallas,
+                return_bn_stats=True)
 
-        return jax.jit(full)
+        def full_frozen(x, bn):
+            return session_core.family_forward(
+                plan, qparams, x, adjs, use_pallas=use_pallas, bn_stats=bn)
 
-    def _make_serve_fn(self):
-        """The bucket-shaped subgraph forward. One ``jax.jit`` per session;
-        jit's shape-keyed cache gives one compile per (node bucket, group
-        buckets) combination. ``self._n_traces`` increments on trace only
-        (python side effect), i.e. it IS the jit cache-miss counter."""
-        qparams = self.qparams
-
-        def serve(x, bn, adjs, seeds):
-            self._n_traces += 1
-            n_pad = x.shape[0]
-            mats = {k: _frdc_rebuild(v, n_pad, n_pad)
-                    for k, v in adjs.items()}
-            out = self._forward(qparams, x, mats, bn_stats=bn)
-            return out[seeds]
-
-        return jax.jit(serve)
+        return jax.jit(full), jax.jit(full_frozen)
 
     # ------------------------------------------------------------- sync ----
     def sync(self) -> None:
-        """Adopt the store's current features: re-upload, recalibrate BN and
-        refresh the full-graph logits cache. No-op when already current."""
+        """Adopt the store's current features. Default: re-upload,
+        recalibrate BN and refresh the full-graph logits cache. Incremental
+        mode: keep the frozen calibration and patch only the out-neighborhood
+        of the changed rows. No-op when already current."""
         if self.feature_version == self.graph.version:
             return
         invalidated = self.feature_version >= 0
+        changed = None
+        if (self.incremental and invalidated and self.bn is not None
+                and self._full_cache is not None):
+            changed = self.graph.changed_since(self.feature_version)
         self._x_dev = jnp.asarray(self.graph.data.x)
-        out, bn = self._jit_full(self._x_dev)
-        self.bn = bn
-        self._full_cache = np.asarray(out)
+        if changed is None:
+            out, bn = self._jit_full(self._x_dev)
+            self.bn = bn
+            self._full_cache = np.array(out)   # writable: patched in place
+        elif changed.size:
+            self._refresh_incremental(changed)
         self.feature_version = self.graph.version
         if invalidated:
             self._invalidations += 1
+
+    def _refresh_incremental(self, changed: np.ndarray) -> None:
+        """Patch the cached logits of every node whose output can depend on
+        a changed row: the FAMILY_AGG_LAYERS-hop closure of ``changed`` under
+        REVERSE edges. BN stats stay frozen (they are calibration constants
+        in this mode), so rows outside the closure are bitwise unchanged."""
+        k = FAMILY_AGG_LAYERS[self.plan.family]
+        affected = sampling.khop_nodes(self.graph.csr_rev, changed, k)
+        n = self.graph.data.n_nodes
+        # beyond ~12.5% of the graph the batched subgraph passes cost more
+        # than one frozen-stats full pass — patch from that instead.
+        if affected.size * 8 > n:
+            out = np.asarray(self._jit_full_frozen(self._x_dev, self.bn))
+            self._full_cache[affected] = out[affected]
+        else:
+            for i in range(0, affected.size, self.max_batch):
+                chunk = affected[i:i + self.max_batch]
+                self._full_cache[chunk] = self._serve_batch(chunk)
+        self._incremental_refreshes += 1
 
     @property
     def invalidations(self) -> int:
         return self._invalidations
 
     @property
+    def incremental_refreshes(self) -> int:
+        return self._incremental_refreshes
+
+    @property
     def compile_count(self) -> int:
         """Number of jit traces of the bucketed subgraph forward."""
-        return self._n_traces
+        return self.core.compile_count
 
     # ------------------------------------------------------ full path ------
     def full_logits(self) -> np.ndarray:
@@ -316,39 +263,24 @@ class CompiledGraphSession:
         return self._full_cache
 
     # -------------------------------------------------- subgraph path ------
-    def _sub_adjacency(self, sub_nodes: np.ndarray,
-                       sub_edges: np.ndarray) -> Dict[str, frdc.FRDCMatrix]:
-        """Per-family subgraph FRDC matrices carrying FULL-graph factorization
-        vectors, so seed-row aggregation is identical to the full graph."""
-        fam = self.plan.family
-        ns = sub_nodes.size
-        if fam == "gcn":
-            loops = np.arange(ns, dtype=np.int64)
-            r = np.concatenate([sub_edges[0], loops])
-            c = np.concatenate([sub_edges[1], loops])
-            dinv = self.graph.dinv_gcn[sub_nodes]
-            return {
-                "adj": frdc.from_coo(r, c, ns, ns, row_scale=dinv,
-                                     col_scale=dinv),
-                "bin": frdc.from_coo(sub_edges[0], sub_edges[1], ns, ns),
-            }
-        if fam == "sage":
-            return {"mean": frdc.from_coo(
-                sub_edges[0], sub_edges[1], ns, ns,
-                row_scale=self.graph.dinv_mean[sub_nodes])}
-        return {"sum": frdc.from_coo(sub_edges[0], sub_edges[1], ns, ns)}
-
-    @property
-    def _node_cap(self) -> int:
-        return self._adj_full[next(iter(self._adj_full))].n_tile_rows \
-            * frdc.TILE
-
     def _extract(self, uniq_seeds: np.ndarray):
         """Host-side k-hop extraction + subgraph FRDC build (no device work
         — also used by warmup to probe steady-state shapes cheaply)."""
         sub_nodes, sub_edges, seed_pos = sampling.khop_subgraph(
             self.graph.csr, uniq_seeds, self.khop)
-        return sub_nodes, self._sub_adjacency(sub_nodes, sub_edges), seed_pos
+        fam = self.plan.family
+        dinv = self.graph.dinv_for(fam)
+        mats = session_core.sub_adjacency(
+            fam, sub_nodes.size, sub_edges,
+            None if dinv is None else dinv[sub_nodes])
+        return sub_nodes, mats, seed_pos
+
+    def _serve_batch(self, uniq_seeds: np.ndarray) -> np.ndarray:
+        """One extraction + bucketed forward for <= max_batch unique seeds,
+        against the CURRENT features and frozen calibration (no sync)."""
+        sub_nodes, mats, seed_pos = self._extract(uniq_seeds)
+        return self.core.run(self.graph.data.x[sub_nodes], mats, seed_pos,
+                             self.bn)
 
     def serve_subgraph(self, seeds: np.ndarray) -> np.ndarray:
         """Micro-batched node-level inference: k-hop extraction -> bucket
@@ -356,27 +288,7 @@ class CompiledGraphSession:
         self.sync()
         seeds = np.asarray(seeds, np.int64)
         uniq, inverse = np.unique(seeds, return_inverse=True)
-        sub_nodes, mats, seed_pos = self._extract(uniq)
-
-        n_pad = bucket_pow2(max(sub_nodes.size, self._n_water),
-                            self.NODE_BUCKET_FLOOR, self._node_cap)
-        self._n_water = n_pad
-        adjs = {}
-        for k, m in mats.items():
-            wkey = (n_pad, k)
-            g_pad = max(self._g_water.get(wkey, 0),
-                        bucket_pow2(m.n_groups, self.GROUP_BUCKET_FLOOR))
-            self._g_water[wkey] = g_pad
-            adjs[k] = _frdc_arrays(frdc.pad_frdc(m, n_pad, n_groups=g_pad))
-
-        x_pad = np.zeros((n_pad, self.graph.data.x.shape[1]), np.float32)
-        x_pad[:sub_nodes.size] = self.graph.data.x[sub_nodes]
-        pos_pad = np.zeros((self.max_batch,), np.int32)
-        pos_pad[:seed_pos.size] = seed_pos
-
-        out = self._jit_serve(jnp.asarray(x_pad), self.bn, adjs,
-                              jnp.asarray(pos_pad))
-        return np.asarray(out)[:uniq.size][inverse]
+        return self._serve_batch(uniq)[inverse]
 
     def warmup(self, rng: Optional[np.random.Generator] = None,
                probes: int = 16, margin: float = 1.125) -> int:
@@ -389,7 +301,7 @@ class CompiledGraphSession:
         recompile by exceeding the margined pow2 bucket — and the monotone
         water then absorbs it after one compile. Returns compiles triggered."""
         rng = rng or np.random.default_rng(0)
-        before = self._n_traces
+        before = self.core.compile_count
         self.sync()
         n = self.graph.data.n_nodes
         n_max, g_max = 0, {}
@@ -399,15 +311,9 @@ class CompiledGraphSession:
             n_max = max(n_max, sub_nodes.size)
             for k, m in mats.items():
                 g_max[k] = max(g_max.get(k, 0), m.n_groups)
-        n_pad = bucket_pow2(min(int(n_max * margin), self._node_cap),
-                            self.NODE_BUCKET_FLOOR, self._node_cap)
-        self._n_water = max(self._n_water, n_pad)
-        for k, g in g_max.items():
-            wkey = (self._n_water, k)
-            g_pad = bucket_pow2(int(g * margin), self.GROUP_BUCKET_FLOOR)
-            self._g_water[wkey] = max(self._g_water.get(wkey, 0), g_pad)
+        self.core.preset_water(n_max, g_max, margin)
         self.serve_subgraph(rng.integers(0, n, size=self.max_batch))
-        return self._n_traces - before
+        return self.core.compile_count - before
 
     # ------------------------------------------------------- artifact ------
     def _state(self) -> dict:
@@ -415,7 +321,7 @@ class CompiledGraphSession:
         # (qparams, features) and the first sync() after load recomputes
         # them in the same full-graph pass that fills the logits cache.
         return {"qparams": self.qparams,
-                "adj": {k: _frdc_arrays(m)
+                "adj": {k: session_core.frdc_arrays(m)
                         for k, m in self._adj_full.items()}}
 
     def fingerprint(self) -> dict:
@@ -436,7 +342,8 @@ class CompiledGraphSession:
 
     @classmethod
     def load(cls, directory: Path, graph: GraphEntry, model: ModelEntry,
-             khop: Optional[int] = None, max_batch: Optional[int] = None
+             khop: Optional[int] = None, max_batch: Optional[int] = None,
+             use_pallas: bool = False, incremental: bool = False,
              ) -> Optional["CompiledGraphSession"]:
         """Restore a session artifact; returns None on any mismatch (missing
         files, different graph/model/features, or a khop/max_batch that
@@ -458,18 +365,21 @@ class CompiledGraphSession:
         if _session_fingerprint(graph, model) != sidecar["fingerprint"]:
             return None
         plan = SessionPlan.from_json(sidecar["plan"])
-        like = {"qparams": _quantize(model.family, model.params),
-                "adj": _adj_like(model.family)}
+        like = {"qparams": session_core.quantize_family(model.family,
+                                                        model.params),
+                "adj": session_core.adj_like(model.family)}
         try:
             state = Checkpointer(directory, keep=1).restore(None, like)
         except (FileNotFoundError, AssertionError):
             return None
         dims = sidecar["adj_dims"]
-        adj_full = {k: _frdc_rebuild(v, *dims[k])
+        adj_full = {k: session_core.frdc_rebuild(v, *dims[k])
                     for k, v in state["adj"].items()}
-        return cls(graph, model, plan, _coerce_quant(state["qparams"]),
+        return cls(graph, model, plan,
+                   session_core.coerce_quant(state["qparams"]),
                    khop=sidecar["khop"], max_batch=sidecar["max_batch"],
-                   adj_full=adj_full)
+                   adj_full=adj_full, use_pallas=use_pallas,
+                   incremental=incremental)
 
 
 # ---------------------------------------------------------------------------
@@ -480,13 +390,17 @@ class GraphStore:
     """Registry of graphs + models producing cached compiled sessions."""
 
     def __init__(self, cache_dir: Optional[str] = None, khop: int = 2,
-                 max_batch: int = 32):
+                 max_batch: int = 32, use_pallas: bool = False,
+                 incremental: bool = False):
         self.cache_dir = Path(cache_dir) if cache_dir else None
         self.khop = khop
         self.max_batch = max_batch
+        self.use_pallas = use_pallas
+        self.incremental = incremental
         self.graphs: Dict[str, GraphEntry] = {}
         self.models: Dict[str, ModelEntry] = {}
         self._sessions: Dict[Tuple[str, str], CompiledGraphSession] = {}
+        self._sharded_sessions: Dict[Tuple[str, str, int], object] = {}
 
     # -------------------------------------------------------- registry ----
     def register_graph(self, name: str, data: GraphData) -> GraphEntry:
@@ -502,16 +416,23 @@ class GraphStore:
         return entry
 
     def update_features(self, name: str, x: np.ndarray) -> None:
-        """Swap node features in place; sessions recalibrate + drop their
-        full-graph caches on next use (version-based invalidation)."""
+        """Swap node features in place; sessions recalibrate or patch their
+        caches on next use (version-based invalidation). In incremental mode
+        the CHANGED rows are diffed and recorded (the refresh changelog) —
+        the O(n*F) compare and the retained id arrays are only paid when a
+        session will actually consume them."""
         entry = self.graphs[name]
         x = np.asarray(x, np.float32)
         if x.shape != entry.data.x.shape:
             raise ValueError(f"feature shape {x.shape} != "
                              f"{entry.data.x.shape} (graph structure and "
                              f"feature width are fixed per registration)")
+        changed = (np.nonzero((entry.data.x != x).any(axis=1))[0]
+                   if self.incremental else None)
         entry.data.x = x
         entry.version += 1
+        if changed is not None:
+            entry.record_change(changed)
 
     # --------------------------------------------------------- compile ----
     def session(self, graph: str, model: str, tune: bool = False,
@@ -525,69 +446,57 @@ class GraphStore:
         sess_dir = (self.cache_dir / f"{graph}__{model}"
                     if self.cache_dir else None)
         if sess_dir is not None:
-            sess = CompiledGraphSession.load(sess_dir, g, m, khop=self.khop,
-                                             max_batch=self.max_batch)
+            sess = CompiledGraphSession.load(
+                sess_dir, g, m, khop=self.khop, max_batch=self.max_batch,
+                use_pallas=self.use_pallas, incremental=self.incremental)
         if sess is None:
-            qparams = _quantize(m.family, m.params)
-            plan = (self._tune_plan(g, m, qparams, repeats=tune_repeats)
-                    if tune else self._default_plan(m.family))
-            sess = CompiledGraphSession(g, m, plan, qparams, khop=self.khop,
-                                        max_batch=self.max_batch)
+            qparams = session_core.quantize_family(m.family, m.params)
+            plan = (session_core.tune_plan(g.data, m.family, qparams,
+                                           repeats=tune_repeats)
+                    if tune else session_core.default_plan(m.family))
+            sess = CompiledGraphSession(
+                g, m, plan, qparams, khop=self.khop,
+                max_batch=self.max_batch, use_pallas=self.use_pallas,
+                incremental=self.incremental)
             sess.sync()
             if sess_dir is not None:
                 sess.save(sess_dir)
         self._sessions[key] = sess
         return sess
 
-    @staticmethod
-    def _default_plan(family: str) -> SessionPlan:
-        if family == "gcn":
-            return SessionPlan(family, "bin",
-                               layer_variants=_GCN_SCHEME_VARIANTS["bin"])
-        return SessionPlan(family, "fixed")
+    def sharded_session(self, graph: str, model: str, n_shards: int,
+                        tune: bool = False, tune_repeats: int = 2,
+                        mesh=None):
+        """Compile (or restore) a partitioned session serving ``graph``
+        from ``n_shards`` shards. See :mod:`repro.serve.sharded`."""
+        from repro.serve.sharded import ShardedGraphSession, ShardPlanner
+        key = (graph, model, int(n_shards))
+        if key in self._sharded_sessions:
+            sess = self._sharded_sessions[key]
+            if mesh is not None:       # caller asked for a specific transport
+                sess.set_mesh(mesh)
+            return sess
+        g, m = self.graphs[graph], self.models[model]
 
-    def _tune_plan(self, g: GraphEntry, m: ModelEntry, qparams,
-                   repeats: int = 2) -> SessionPlan:
-        """Time the legal end-to-end variant assignments on the actual graph
-        (paper §3.4) and pick the fastest."""
-        x = jnp.asarray(g.data.x)
-        if m.family == "gcn":
-            adj, adj_bin = g.data.adjacency("gcn"), g.data.adjacency("binary")
-            cands = [
-                tuner.Candidate(_GCN_SCHEME_VARIANTS["full"], "s3_two_popc"),
-                tuner.Candidate(_GCN_SCHEME_VARIANTS["bin"], "s3_two_popc"),
-                tuner.Candidate(_GCN_SCHEME_VARIANTS["bin"], "s2_and_andnot"),
-            ]
-
-            def build(cand):
-                scheme = ("bin" if cand.layer_variants[0][0] == "BMM.FBB"
-                          else "full")
-                def fwd(xx):
-                    return gnn.gcn_forward_bitgnn(
-                        qparams, xx, adj, adj_bin, scheme=scheme,
-                        trinary_mode=cand.trinary_mode)
-                return fwd
-        else:
-            adj = g.data.adjacency(
-                "mean" if m.family == "sage" else "binary")
-            fwd_fn = (gnn.sage_forward_bitgnn if m.family == "sage"
-                      else gnn.saint_forward_bitgnn)
-            cands = [tuner.Candidate(_FIXED_VARIANTS, TRINARY_DEFAULT)]
-
-            def build(cand):
-                def fwd(xx):
-                    return fwd_fn(qparams, xx, adj)
-                return fwd
-
-        results = tuner.tune(build, (x,), cands, repeats=repeats)
-        best = results[0]
-        scheme = "fixed"
-        if m.family == "gcn":
-            scheme = ("bin" if best.candidate.layer_variants[0][0] ==
-                      "BMM.FBB" else "full")
-        return SessionPlan(
-            family=m.family, scheme=scheme,
-            trinary_mode=best.candidate.trinary_mode,
-            layer_variants=best.candidate.layer_variants,
-            tuned_latency_s=best.latency_s,
-            output_delta=best.output_delta)
+        sess = None
+        sess_dir = (self.cache_dir / f"{graph}__{model}__P{n_shards}"
+                    if self.cache_dir else None)
+        if sess_dir is not None:
+            sess = ShardedGraphSession.load(
+                sess_dir, g, m, khop=self.khop, max_batch=self.max_batch,
+                use_pallas=self.use_pallas, mesh=mesh)
+        if sess is None:
+            qparams = session_core.quantize_family(m.family, m.params)
+            plan = (session_core.tune_plan(g.data, m.family, qparams,
+                                           repeats=tune_repeats)
+                    if tune else session_core.default_plan(m.family))
+            shard_plan = ShardPlanner(n_shards).plan(g.data, m.family)
+            sess = ShardedGraphSession(
+                g, m, plan, qparams, shard_plan, khop=self.khop,
+                max_batch=self.max_batch, use_pallas=self.use_pallas,
+                mesh=mesh)
+            sess.sync()
+            if sess_dir is not None:
+                sess.save(sess_dir)
+        self._sharded_sessions[key] = sess
+        return sess

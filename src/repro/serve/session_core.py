@@ -1,0 +1,359 @@
+"""Shared compile/calibrate/serve machinery of the GNN serving sessions.
+
+This module is the seam between the single-host :class:`CompiledGraphSession`
+(:mod:`repro.serve.gnn_session`) and the partitioned
+:class:`ShardedGraphSession` (:mod:`repro.serve.sharded`): everything that is
+NOT about who owns the graph lives here —
+
+  * :class:`SessionPlan` + the tuner-driven plan selection (paper §3.4);
+  * family-dispatched bitgnn forwards (optionally routed through the Pallas
+    kernels, see :func:`family_forward`);
+  * :class:`ServeCore`, the bucket-shaped jitted subgraph forward with the
+    HIGH-WATER pow2 shape buckets and the jit trace counter (the
+    zero-steady-state-recompiles verification counter);
+  * subgraph FRDC construction carrying FULL-graph factorization vectors, so
+    a k-hop forward reproduces the full-graph computation for the seed rows
+    exactly — on one host or on the seed's owning shard;
+  * FRDC array (de)serialization helpers shared by both artifact formats.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import frdc, tuner
+from repro.core.bspmm import TRINARY_DEFAULT
+from repro.kernels import ops as kernel_ops
+from repro.models import gnn
+
+FAMILIES = ("gcn", "sage", "saint")
+
+# layer_variants of the two legal GCN end-to-end schemes (paper Table 3);
+# SAGE/SAINT run the fixed Fig. 2 pipeline (BMM.BBF branches + BSpMM.FBF).
+GCN_SCHEME_VARIANTS = {
+    "full": (("BMM.BBF", "BSpMM.FBF"), ("BMM.BBF", "BSpMM.FBF")),
+    "bin": (("BMM.FBB", "BSpMM.BBB"), ("BMM.BBF", "BSpMM.FBF")),
+}
+FIXED_VARIANTS = (("BMM.BBF", "BSpMM.FBF"), ("BMM.BBF", "BSpMM.FBF"))
+
+# adjacency kinds each family's packed forward consumes
+FAMILY_ADJ_KINDS = {"gcn": ("adj", "bin"), "sage": ("mean",), "saint": ("sum",)}
+
+# number of aggregation layers per family: the k of the k-hop closure a
+# served node needs, and the hop count of the out-neighborhood a feature
+# update invalidates.
+FAMILY_AGG_LAYERS = {"gcn": 2, "sage": 2, "saint": 2}
+
+
+def bucket_pow2(n: int, floor: int, cap: Optional[int] = None) -> int:
+    """Round up to the power-of-two bucket grid (>= floor, <= cap)."""
+    b = floor
+    while b < n:
+        b *= 2
+    return b if cap is None else min(b, cap)
+
+
+@dataclasses.dataclass
+class SessionPlan:
+    """Tuner-selected execution plan of one compiled session."""
+    family: str
+    scheme: str                       # gcn: "full" | "bin"; else "fixed"
+    trinary_mode: str = TRINARY_DEFAULT
+    layer_variants: tuple = FIXED_VARIANTS
+    tuned_latency_s: float = float("nan")
+    output_delta: float = float("nan")
+
+    def name(self) -> str:
+        layers = ";".join(f"{m}+{s}" for m, s in self.layer_variants)
+        return f"{self.family}/{self.scheme}[{layers}|{self.trinary_mode}]"
+
+    def to_json(self) -> dict:
+        return dict(family=self.family, scheme=self.scheme,
+                    trinary_mode=self.trinary_mode,
+                    layer_variants=[list(v) for v in self.layer_variants],
+                    tuned_latency_s=self.tuned_latency_s,
+                    output_delta=self.output_delta)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "SessionPlan":
+        return cls(family=d["family"], scheme=d["scheme"],
+                   trinary_mode=d["trinary_mode"],
+                   layer_variants=tuple(tuple(v) for v in d["layer_variants"]),
+                   tuned_latency_s=d.get("tuned_latency_s", float("nan")),
+                   output_delta=d.get("output_delta", float("nan")))
+
+
+def quantize_family(family: str, params):
+    return {"gcn": gnn.quantize_gcn, "sage": gnn.quantize_sage,
+            "saint": gnn.quantize_saint}[family](params)
+
+
+def family_forward(plan: SessionPlan, qparams, x,
+                   adjs: Dict[str, frdc.FRDCMatrix],
+                   use_pallas: bool = False, **kw):
+    """Dispatch the family's packed forward under ``plan``.
+
+    ``use_pallas`` routes the BSpMM aggregations through the Pallas kernels
+    (:func:`repro.kernels.ops.serve_kernels`) — native on TPU, and a no-op
+    fallback to the reference jnp path off-TPU. The flag is consulted at jit
+    TRACE time, so a session built with it bakes the kernel calls into its
+    compiled executables.
+    """
+    with kernel_ops.serve_kernels(use_pallas):
+        if plan.family == "gcn":
+            return gnn.gcn_forward_bitgnn(
+                qparams, x, adjs["adj"], adjs["bin"], scheme=plan.scheme,
+                trinary_mode=plan.trinary_mode, **kw)
+        if plan.family == "sage":
+            return gnn.sage_forward_bitgnn(qparams, x, adjs["mean"], **kw)
+        return gnn.saint_forward_bitgnn(qparams, x, adjs["sum"], **kw)
+
+
+# ---------------------------------------------------------------------------
+# FRDC array (de)serialization — shared by both artifact formats
+# ---------------------------------------------------------------------------
+
+def frdc_arrays(m: frdc.FRDCMatrix) -> dict:
+    out = dict(tiles=m.tiles, col_idx=m.col_idx, group_row=m.group_row,
+               group_first=m.group_first, grp_ptr=m.grp_ptr)
+    if m.row_scale is not None:
+        out["row_scale"] = m.row_scale
+    if m.col_scale is not None:
+        out["col_scale"] = m.col_scale
+    return out
+
+
+def frdc_rebuild(arrs: dict, n_rows: int, n_cols: int,
+                 nnz: int = 0) -> frdc.FRDCMatrix:
+    return frdc.FRDCMatrix(
+        tiles=arrs["tiles"], col_idx=arrs["col_idx"],
+        group_row=arrs["group_row"], group_first=arrs["group_first"],
+        grp_ptr=arrs["grp_ptr"], n_rows=int(n_rows), n_cols=int(n_cols),
+        nnz=int(nnz), row_scale=arrs.get("row_scale"),
+        col_scale=arrs.get("col_scale"))
+
+
+# FRDC array fields per adjacency kind of each family — the (deterministic)
+# pytree structure of a saved artifact, so load() can build the restore
+# template without encoding any adjacency.
+FRDC_BASE_FIELDS = ("tiles", "col_idx", "group_row", "group_first", "grp_ptr")
+ADJ_SCALE_FIELDS = {
+    "gcn": {"adj": ("row_scale", "col_scale"), "bin": ()},
+    "sage": {"mean": ("row_scale",)},
+    "saint": {"sum": ()},
+}
+
+
+def adj_like(family: str) -> dict:
+    return {kind: {f: np.zeros(0) for f in FRDC_BASE_FIELDS + extra}
+            for kind, extra in ADJ_SCALE_FIELDS[family].items()}
+
+
+def coerce_quant(q):
+    """Re-type a checkpoint-restored quantized param tree: the static ``n``
+    field of each BinTensor round-trips through npz as a 0-d array and must
+    come back as a python int (it participates in jit-static shape logic)."""
+    from repro.core.binarize import BinTensor
+    return type(q)(*(BinTensor(packed=jnp.asarray(t.packed),
+                               scale=jnp.asarray(t.scale), n=int(t.n))
+                     for t in q))
+
+
+def feature_fingerprint(x: np.ndarray) -> str:
+    return hashlib.sha1(np.ascontiguousarray(x).tobytes()).hexdigest()[:16]
+
+
+def session_fingerprint(graph, model) -> dict:
+    """Identity of a (graph, model) pair a serving artifact was compiled
+    for — THE match key of every artifact restore path (single-host
+    ``plan.json`` and sharded ``routing.json`` alike), so it lives here
+    once. ``graph``/``model`` are the store's registry entries."""
+    d = graph.data
+    return dict(graph=graph.name, model=model.name, family=model.family,
+                n_nodes=int(d.n_nodes), n_edges=int(d.n_edges),
+                features=feature_fingerprint(d.x))
+
+
+# ---------------------------------------------------------------------------
+# Subgraph adjacency construction (full-graph factorization vectors)
+# ---------------------------------------------------------------------------
+
+def sub_adjacency(family: str, n_sub: int, sub_edges: np.ndarray,
+                  dinv_sub: Optional[np.ndarray]
+                  ) -> Dict[str, frdc.FRDCMatrix]:
+    """Per-family subgraph FRDC matrices. ``dinv_sub`` is the FULL-graph
+    factorization vector gathered at the subgraph's nodes (GCN: D^-1/2 with
+    self-loops; SAGE: D^-1 mean; SAINT: None) so seed-row aggregation is
+    identical to the full graph no matter which host gathered it."""
+    if family == "gcn":
+        loops = np.arange(n_sub, dtype=np.int64)
+        r = np.concatenate([sub_edges[0], loops])
+        c = np.concatenate([sub_edges[1], loops])
+        return {
+            "adj": frdc.from_coo(r, c, n_sub, n_sub, row_scale=dinv_sub,
+                                 col_scale=dinv_sub),
+            "bin": frdc.from_coo(sub_edges[0], sub_edges[1], n_sub, n_sub),
+        }
+    if family == "sage":
+        return {"mean": frdc.from_coo(sub_edges[0], sub_edges[1], n_sub,
+                                      n_sub, row_scale=dinv_sub)}
+    return {"sum": frdc.from_coo(sub_edges[0], sub_edges[1], n_sub, n_sub)}
+
+
+def dinv_for_family(family: str, degrees: np.ndarray) -> Optional[np.ndarray]:
+    """Full-graph factorization vector from full-graph receiver degrees."""
+    if family == "gcn":
+        return 1.0 / np.sqrt(degrees + 1.0)          # self-loops included
+    if family == "sage":
+        return 1.0 / np.maximum(degrees.astype(np.float64), 1.0)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# ServeCore — the bucket-shaped jitted subgraph forward
+# ---------------------------------------------------------------------------
+
+class ServeCore:
+    """One jitted bucketed subgraph forward + its high-water shape buckets.
+
+    Node and FRDC group counts are padded up to pow2 marks that only ever
+    grow (capped at ``node_cap``), so the jitted forward converges to one
+    steady padded shape after a short warmup and never recompiles in steady
+    state. ``compile_count`` counts jit traces (python side effect on trace)
+    and IS the verification counter. Both the single-host session and every
+    shard of a sharded session own exactly one of these.
+    """
+
+    NODE_BUCKET_FLOOR = 64
+    GROUP_BUCKET_FLOOR = 16
+
+    def __init__(self, plan: SessionPlan, qparams, max_batch: int,
+                 node_cap: int, use_pallas: bool = False):
+        self.plan = plan
+        self.qparams = qparams
+        self.max_batch = max_batch
+        self.node_cap = node_cap
+        self.use_pallas = use_pallas
+        self._n_traces = 0
+        # high-water shape buckets: node and group pads only ever GROW (in
+        # pow2 steps, capped at node_cap), so serving stops recompiling —
+        # warmup is a handful of max-width batches, not a shape sweep.
+        self._n_water = 0
+        self._g_water: Dict[Tuple[int, str], int] = {}
+        self._jit_serve = jax.jit(self._serve)
+
+    @property
+    def compile_count(self) -> int:
+        return self._n_traces
+
+    def _serve(self, x, bn, adjs, seeds):
+        self._n_traces += 1
+        n_pad = x.shape[0]
+        mats = {k: frdc_rebuild(v, n_pad, n_pad) for k, v in adjs.items()}
+        out = family_forward(self.plan, self.qparams, x, mats,
+                             use_pallas=self.use_pallas, bn_stats=bn)
+        return out[seeds]
+
+    def _pad_mats(self, mats: Dict[str, frdc.FRDCMatrix], n_sub: int):
+        n_pad = bucket_pow2(max(n_sub, self._n_water),
+                            self.NODE_BUCKET_FLOOR, self.node_cap)
+        self._n_water = n_pad
+        adjs = {}
+        for k, m in mats.items():
+            wkey = (n_pad, k)
+            g_pad = max(self._g_water.get(wkey, 0),
+                        bucket_pow2(m.n_groups, self.GROUP_BUCKET_FLOOR))
+            self._g_water[wkey] = g_pad
+            adjs[k] = frdc_arrays(frdc.pad_frdc(m, n_pad, n_groups=g_pad))
+        return n_pad, adjs
+
+    def run(self, x_sub: np.ndarray, mats: Dict[str, frdc.FRDCMatrix],
+            seed_pos: np.ndarray, bn: tuple) -> np.ndarray:
+        """Bucket-pad one extracted subgraph and run the jitted forward.
+
+        ``x_sub``: (n_sub, F) features of the subgraph nodes (global order);
+        ``seed_pos``: positions of the seeds inside the subgraph. Returns
+        (len(seed_pos), n_out) logits.
+        """
+        n_pad, adjs = self._pad_mats(mats, x_sub.shape[0])
+        x_pad = np.zeros((n_pad, x_sub.shape[1]), np.float32)
+        x_pad[:x_sub.shape[0]] = x_sub
+        pos_pad = np.zeros((self.max_batch,), np.int32)
+        pos_pad[:seed_pos.size] = seed_pos
+        out = self._jit_serve(jnp.asarray(x_pad), bn, adjs,
+                              jnp.asarray(pos_pad))
+        return np.asarray(out)[:seed_pos.size]
+
+    def preset_water(self, n_max: int, g_max: Dict[str, int],
+                     margin: float) -> None:
+        """Set the water marks ``margin`` above probed maxima (pow2-rounded);
+        a workload batch can only recompile by exceeding the margined bucket,
+        and the monotone water then absorbs it after one compile."""
+        n_pad = bucket_pow2(min(int(n_max * margin), self.node_cap),
+                            self.NODE_BUCKET_FLOOR, self.node_cap)
+        self._n_water = max(self._n_water, n_pad)
+        for k, g in g_max.items():
+            wkey = (self._n_water, k)
+            g_pad = bucket_pow2(int(g * margin), self.GROUP_BUCKET_FLOOR)
+            self._g_water[wkey] = max(self._g_water.get(wkey, 0), g_pad)
+
+
+# ---------------------------------------------------------------------------
+# Plan selection (default + tuner; paper §3.4)
+# ---------------------------------------------------------------------------
+
+def default_plan(family: str) -> SessionPlan:
+    if family == "gcn":
+        return SessionPlan(family, "bin",
+                           layer_variants=GCN_SCHEME_VARIANTS["bin"])
+    return SessionPlan(family, "fixed")
+
+
+def tune_plan(data, family: str, qparams, repeats: int = 2) -> SessionPlan:
+    """Time the legal end-to-end variant assignments on the actual graph
+    (paper §3.4) and pick the fastest. ``data``: the host GraphData."""
+    x = jnp.asarray(data.x)
+    if family == "gcn":
+        adj, adj_bin = data.adjacency("gcn"), data.adjacency("binary")
+        cands = [
+            tuner.Candidate(GCN_SCHEME_VARIANTS["full"], "s3_two_popc"),
+            tuner.Candidate(GCN_SCHEME_VARIANTS["bin"], "s3_two_popc"),
+            tuner.Candidate(GCN_SCHEME_VARIANTS["bin"], "s2_and_andnot"),
+        ]
+
+        def build(cand):
+            scheme = ("bin" if cand.layer_variants[0][0] == "BMM.FBB"
+                      else "full")
+            def fwd(xx):
+                return gnn.gcn_forward_bitgnn(
+                    qparams, xx, adj, adj_bin, scheme=scheme,
+                    trinary_mode=cand.trinary_mode)
+            return fwd
+    else:
+        adj = data.adjacency("mean" if family == "sage" else "binary")
+        fwd_fn = (gnn.sage_forward_bitgnn if family == "sage"
+                  else gnn.saint_forward_bitgnn)
+        cands = [tuner.Candidate(FIXED_VARIANTS, TRINARY_DEFAULT)]
+
+        def build(cand):
+            def fwd(xx):
+                return fwd_fn(qparams, xx, adj)
+            return fwd
+
+    results = tuner.tune(build, (x,), cands, repeats=repeats)
+    best = results[0]
+    scheme = "fixed"
+    if family == "gcn":
+        scheme = ("bin" if best.candidate.layer_variants[0][0] == "BMM.FBB"
+                  else "full")
+    return SessionPlan(
+        family=family, scheme=scheme,
+        trinary_mode=best.candidate.trinary_mode,
+        layer_variants=best.candidate.layer_variants,
+        tuned_latency_s=best.latency_s,
+        output_delta=best.output_delta)

@@ -1,0 +1,26 @@
+"""Sharded serving subsystem: partitioned graph sessions with cross-shard
+k-hop routing and halo exchange.
+
+``planner``  — ShardPlanner: per-shard intra FRDC + bit-packed halo
+               adjacency + routing table (reuses graphs/partition.py).
+``routing``  — RoutingTable + routed k-hop extraction (bit-identical to the
+               single-host ``sampling.khop_subgraph``).
+``halo``     — shard-boundary row exchange: host loopback + mesh collectives
+               (``shard_map``/``ppermute``), packed payloads where the math
+               allows, byte accounting throughout.
+``session``  — ShardedGraphSession: per-shard bucketed serve cores +
+               distributed layer-wise full pass + checkpointer artifacts.
+``engine``   — ShardedServeEngine: the micro-batching scheduler routed over
+               partitioned sessions.
+"""
+from .engine import ShardedServeEngine
+from .halo import HaloStats, build_mesh_plan, gather_rows, mesh_exchange
+from .planner import ShardPart, ShardPlan, ShardPlanner
+from .routing import RoutingTable, ShardedCSR
+from .session import ShardedGraphSession
+
+__all__ = [
+    "ShardedServeEngine", "ShardedGraphSession", "ShardPlanner", "ShardPlan",
+    "ShardPart", "RoutingTable", "ShardedCSR", "HaloStats", "gather_rows",
+    "mesh_exchange", "build_mesh_plan",
+]

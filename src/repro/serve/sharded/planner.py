@@ -1,0 +1,161 @@
+"""Shard planning: cut a graph into P serving shards.
+
+``ShardPlanner`` reuses :mod:`repro.graphs.partition`'s edge-balanced
+tile-row-aligned boundaries and builds, per shard:
+
+  * an **intra-shard FRDC adjacency** per adjacency kind the family's packed
+    forward needs (rows AND columns local to the shard);
+  * a **halo FRDC adjacency** per kind: the boundary edges (local row, remote
+    column), columns re-indexed into the shard's sorted ``halo_nodes`` list —
+    the bit-packed structure the layer-wise halo exchange aggregates over;
+  * the shard's rows of the graph CSR (global column ids) for routed k-hop
+    extraction;
+  * the shard's slice of the FULL-graph factorization vector (GCN D^-1/2 /
+    SAGE D^-1), so subgraph adjacencies assembled from any mix of shards
+    normalize exactly like the full graph.
+
+Every edge of the input lands in exactly one shard's intra OR halo
+adjacency (the conservation property tested in
+``tests/test_partition_properties.py``); self-loops added by the GCN
+normalization are intra by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import frdc
+from repro.graphs import partition, sampling
+from repro.graphs.datasets import GraphData
+from repro.serve import session_core
+from .routing import RoutingTable, ShardedCSR
+
+
+@dataclasses.dataclass
+class ShardPart:
+    """Everything one shard owns."""
+    index: int
+    row_start: int
+    row_end: int
+    halo_nodes: np.ndarray                    # sorted global ids, may be empty
+    intra: Dict[str, frdc.FRDCMatrix]         # kind -> (n_local, n_local)
+    halo: Dict[str, frdc.FRDCMatrix]          # kind -> (n_local, max(n_halo,1))
+    indptr: np.ndarray                        # local CSR rows -> global cols
+    indices: np.ndarray
+    dinv: Optional[np.ndarray]                # factorization rows [lo, hi)
+
+    @property
+    def n_local(self) -> int:
+        return self.row_end - self.row_start
+
+    @property
+    def n_halo(self) -> int:
+        return int(self.halo_nodes.size)
+
+
+@dataclasses.dataclass
+class ShardPlan:
+    family: str
+    routing: RoutingTable
+    parts: List[ShardPart]
+    n_nodes: int
+    n_edges: int
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.parts)
+
+    def sharded_csr(self) -> ShardedCSR:
+        return ShardedCSR.from_arrays(
+            self.routing, [p.indptr for p in self.parts],
+            [p.indices for p in self.parts])
+
+    def stats(self) -> dict:
+        intra = np.array([sum(m.nnz for m in p.intra.values())
+                          for p in self.parts], np.float64)
+        cut = np.array([sum(m.nnz for m in p.halo.values())
+                        for p in self.parts], np.float64)
+        kinds = len(self.parts[0].intra)
+        total = max(float(intra.sum() + cut.sum()), 1.0)
+        return dict(
+            n_shards=self.n_shards, n_nodes=self.n_nodes,
+            n_edges=self.n_edges,
+            edge_cut_fraction=float(cut.sum()) / total,
+            halo_nodes=[p.n_halo for p in self.parts],
+            local_nodes=[p.n_local for p in self.parts],
+            imbalance=float((intra + cut).max()
+                            / max((intra + cut).mean(), 1.0)),
+            adjacency_kinds=kinds,
+        )
+
+
+class ShardPlanner:
+    """Plan P serving shards for one (graph, model family) pair."""
+
+    def __init__(self, n_shards: int):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.n_shards = n_shards
+
+    def plan(self, data: GraphData, family: str) -> ShardPlan:
+        if family not in session_core.FAMILIES:
+            raise ValueError(f"unknown family {family!r}")
+        rows = np.asarray(data.edges[0], np.int64)
+        cols = np.asarray(data.edges[1], np.int64)
+        n = data.n_nodes
+        bounds = partition.shard_node_bounds(rows, n, self.n_shards)
+        routing = RoutingTable(bounds=bounds)
+        deg = np.bincount(rows, minlength=n)
+        dinv = session_core.dinv_for_family(family, deg)
+
+        parts = []
+        for s in range(self.n_shards):
+            lo, hi = routing.shard_range(s)
+            n_local = max(hi - lo, 1)
+            rmask = (rows >= lo) & (rows < hi)
+            rs, cs = rows[rmask] - lo, cols[rmask]
+            # local CSR over GLOBAL columns (same stable sort as the
+            # single-host CSR -> identical per-row neighbor order)
+            csr = sampling.to_csr(np.stack([rs, cs]), n_local)
+            cmask = (cs >= lo) & (cs < hi)
+            ir, ic = rs[cmask], cs[cmask] - lo
+            hr, hc_global = rs[~cmask], cs[~cmask]
+            halo_nodes = np.unique(hc_global)
+            hc = np.searchsorted(halo_nodes, hc_global)
+            n_halo = max(halo_nodes.size, 1)
+            # degenerate dims (empty shard / no halo) keep unit scales so the
+            # FRDC scale vectors always match the padded matrix dims
+            rsc = None if dinv is None else (
+                dinv[lo:hi] if hi > lo else np.ones(n_local))
+            hcsc = (dinv[halo_nodes] if dinv is not None and halo_nodes.size
+                    else np.ones(n_halo))
+
+            intra: Dict[str, frdc.FRDCMatrix] = {}
+            halo_m: Dict[str, frdc.FRDCMatrix] = {}
+            if family == "gcn":
+                loops = np.arange(hi - lo, dtype=np.int64)
+                intra["adj"] = frdc.from_coo(
+                    np.concatenate([ir, loops]), np.concatenate([ic, loops]),
+                    n_local, n_local, row_scale=rsc, col_scale=rsc)
+                halo_m["adj"] = frdc.from_coo(
+                    hr, hc, n_local, n_halo, row_scale=rsc, col_scale=hcsc)
+                intra["bin"] = frdc.from_coo(ir, ic, n_local, n_local)
+                halo_m["bin"] = frdc.from_coo(hr, hc, n_local, n_halo)
+            elif family == "sage":
+                intra["mean"] = frdc.from_coo(ir, ic, n_local, n_local,
+                                              row_scale=rsc)
+                halo_m["mean"] = frdc.from_coo(hr, hc, n_local, n_halo,
+                                               row_scale=rsc)
+            else:
+                intra["sum"] = frdc.from_coo(ir, ic, n_local, n_local)
+                halo_m["sum"] = frdc.from_coo(hr, hc, n_local, n_halo)
+
+            parts.append(ShardPart(
+                index=s, row_start=lo, row_end=hi, halo_nodes=halo_nodes,
+                intra=intra, halo=halo_m, indptr=csr.indptr,
+                indices=csr.indices,
+                dinv=None if dinv is None else dinv[lo:hi]))
+        return ShardPlan(family=family, routing=routing, parts=parts,
+                         n_nodes=n, n_edges=int(rows.size))

@@ -1,0 +1,508 @@
+"""ShardedGraphSession: one (graph, model) serving artifact split over P shards.
+
+Compared with the single-host :class:`~repro.serve.gnn_session.
+CompiledGraphSession`, the graph state is partitioned (contiguous
+tile-row-aligned node ranges, :mod:`.planner`): each shard owns its feature
+rows, its block of the CSR, an intra-shard FRDC adjacency and a bit-packed
+halo adjacency over the boundary edges. Serving has two paths:
+
+  * **routed subgraph** (the scale path): a k-hop query is answered by its
+    seed's OWNING shard — the frontier is routed across shard boundaries
+    (:mod:`.routing`), remote features and factorization-vector entries are
+    fetched through the halo transport, and the owning shard's
+    :class:`~repro.serve.session_core.ServeCore` runs the same bucketed
+    jitted forward as the single-host session with the same frozen BN stats.
+    Because the assembled subgraph, adjacency, features and calibration are
+    identical, the outputs are bit-exact against single-host serving.
+
+  * **distributed full pass**: layer-wise per-shard aggregation — each shard
+    computes its output rows from ``intra @ local + halo @ remote``, where
+    the remote operand arrives via halo exchange (:mod:`.halo`); for the
+    binary-aggregation layer of the GCN "bin" scheme the exchanged rows are
+    bit-PACKED (uint32 words, 32x smaller than fp) and the partial popc
+    counts add exactly. This pass fills the per-shard full-logits caches and
+    is the path whose halo bytes the benchmark reports. Its fp aggregations
+    reassociate across the intra/halo split, so it matches single-host
+    full-graph logits to fp tolerance (binary layers: exactly).
+
+BN calibration runs one full-graph pass through the shared
+:func:`~repro.serve.session_core.family_forward` (bit-identical to the
+single-host session's calibration — the invariant behind the exactness
+guarantee above); sharded/sampled calibration for beyond-memory graphs is a
+ROADMAP item.
+
+Artifacts (per-shard FRDC + CSR + routing table) serialize through the
+checkpointer with a ``routing.json`` sidecar; a restore re-builds the
+session without re-partitioning or re-tuning.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core import bitops, frdc
+from repro.core.binarize import BinTensor
+from repro.core.bmm import bmm, quantize_act
+from repro.core.bspmm import _pad_rows, _spmm_bits, bspmm
+from repro.models import gnn
+from repro.serve import session_core
+from repro.serve.session_core import ServeCore, SessionPlan
+from . import halo as halo_mod
+from .planner import ShardPart, ShardPlan
+from .routing import RoutingTable, ShardedCSR
+from .routing import khop_subgraph as routed_khop_subgraph
+
+
+def _binarize_counts(counts: jax.Array, n_feat: int) -> BinTensor:
+    """Sign-binarize summed trinary counts — the BSpMM.BBB output stage
+    (``out_scale=False``: positive scales are elided by the consumer)."""
+    counts = counts.astype(jnp.float32)
+    if counts.shape[-1] > n_feat:
+        counts = counts[:, :n_feat]
+    return BinTensor(packed=bitops.sign_bits(counts, axis=-1),
+                     scale=jnp.ones((counts.shape[0], 1), counts.dtype),
+                     n=n_feat)
+
+
+class ShardedGraphSession:
+    """Partitioned compiled serving artifact. See module docstring."""
+
+    def __init__(self, graph, model, plan: SessionPlan, qparams,
+                 shard_plan: ShardPlan, khop: int = 2, max_batch: int = 32,
+                 use_pallas: bool = False, mesh=None):
+        if shard_plan.family != plan.family:
+            raise ValueError(f"shard plan family {shard_plan.family!r} != "
+                             f"session family {plan.family!r}")
+        self.graph = graph
+        self.model = model
+        self.plan = plan
+        self.qparams = qparams
+        self.shard_plan = shard_plan
+        self.routing: RoutingTable = shard_plan.routing
+        self.khop = khop
+        self.max_batch = max_batch
+        self.use_pallas = use_pallas
+        self.mesh = mesh
+        self.key = f"{graph.name}__{model.name}__P{shard_plan.n_shards}"
+        self.feature_version = -1
+        self.bn: Optional[tuple] = None
+        self.halo_stats = halo_mod.HaloStats()
+        self._caches: Optional[List[np.ndarray]] = None
+        self._assembled: Optional[np.ndarray] = None
+        self._invalidations = 0
+        self._scsr: ShardedCSR = shard_plan.sharded_csr()
+        self._adj_full: Optional[Dict[str, frdc.FRDCMatrix]] = None
+        self._jit_calibrate = None
+        self._mesh_plan = None
+        # one bucketed serve core per shard; a routed subgraph can span the
+        # whole graph, so every core's node cap is the full padded graph
+        node_cap = -(-shard_plan.n_nodes // frdc.TILE) * frdc.TILE
+        self.cores = [ServeCore(plan, qparams, max_batch, node_cap,
+                                use_pallas=use_pallas)
+                      for _ in range(shard_plan.n_shards)]
+
+    # ------------------------------------------------------------ state ----
+    @property
+    def n_shards(self) -> int:
+        return self.shard_plan.n_shards
+
+    @property
+    def parts(self) -> List[ShardPart]:
+        return self.shard_plan.parts
+
+    @property
+    def compile_count(self) -> int:
+        """Total jit traces across the per-shard bucketed forwards."""
+        return sum(c.compile_count for c in self.cores)
+
+    @property
+    def compile_count_by_shard(self) -> List[int]:
+        return [c.compile_count for c in self.cores]
+
+    @property
+    def invalidations(self) -> int:
+        return self._invalidations
+
+    def _x_blocks(self) -> List[np.ndarray]:
+        x = self.graph.data.x
+        return [x[p.row_start:p.row_end] for p in self.parts]
+
+    def _dinv_blocks(self) -> Optional[List[np.ndarray]]:
+        if self.parts[0].dinv is None:
+            return None
+        return [p.dinv for p in self.parts]
+
+    def _use_mesh(self) -> bool:
+        return (self.mesh is not None
+                and self.mesh.shape.get("data", 0) == self.n_shards)
+
+    def set_mesh(self, mesh) -> None:
+        """Swap the halo transport (None = host loopback). Numerics are
+        transport-independent; only the exchange mechanism changes."""
+        if mesh is not self.mesh:
+            self.mesh = mesh
+            self._mesh_plan = None
+
+    # ------------------------------------------------------- calibrate -----
+    def _calibrate_fn(self):
+        """The shared full-graph calibration forward — the SAME jitted
+        computation the single-host session freezes its BN stats from, so a
+        sharded and a single-host session over one graph agree bit-for-bit
+        on the calibration constants."""
+        if self._jit_calibrate is None:
+            d = self.graph.data
+            fam = self.plan.family
+            if fam == "gcn":
+                adjs = {"adj": d.adjacency("gcn"),
+                        "bin": d.adjacency("binary")}
+            elif fam == "sage":
+                adjs = {"mean": d.adjacency("mean")}
+            else:
+                adjs = {"sum": d.adjacency("binary")}
+            self._adj_full = adjs
+            plan, qparams, use_pallas = self.plan, self.qparams, \
+                self.use_pallas
+
+            def full(x):
+                return session_core.family_forward(
+                    plan, qparams, x, adjs, use_pallas=use_pallas,
+                    return_bn_stats=True)
+
+            self._jit_calibrate = jax.jit(full)
+        return self._jit_calibrate
+
+    def sync(self) -> None:
+        """Adopt the store's current features: recalibrate BN (full-graph
+        pass through the shared forward) and refresh the per-shard logits
+        caches through the DISTRIBUTED layer-wise pass. No-op when current."""
+        if self.feature_version == self.graph.version:
+            return
+        invalidated = self.feature_version >= 0
+        _, bn = self._calibrate_fn()(jnp.asarray(self.graph.data.x))
+        self.bn = bn
+        self._caches = self._sharded_full_pass()
+        self._assembled = None
+        self.feature_version = self.graph.version
+        if invalidated:
+            self._invalidations += 1
+
+    # ----------------------------------------------------- full pass -------
+    def _exchange(self, blocks: List[np.ndarray], tag: str
+                  ) -> List[np.ndarray]:
+        """Fetch every shard's halo rows of a per-shard row-block operand —
+        device collectives over the mesh when one is attached, host loopback
+        otherwise. Returns per-shard (max(n_halo,1), F) operands (zero-padded
+        so degenerate halo matrices aggregate exact zeros)."""
+        blocks = [np.asarray(b) for b in blocks]
+        if self._use_mesh():
+            if self._mesh_plan is None:
+                self._mesh_plan = halo_mod.build_mesh_plan(
+                    self.routing, [p.halo_nodes for p in self.parts])
+            gathered = halo_mod.mesh_exchange(
+                self.mesh, blocks, self._mesh_plan,
+                stats=self.halo_stats, tag=tag)
+        else:
+            gathered = [
+                halo_mod.gather_rows(blocks, self.routing, p.halo_nodes,
+                                     home=p.index, stats=self.halo_stats,
+                                     tag=tag)
+                for p in self.parts]
+        out = []
+        for p, g in zip(self.parts, gathered):
+            buf = np.zeros((max(p.n_halo, 1),) + blocks[0].shape[1:],
+                           blocks[0].dtype)
+            buf[:p.n_halo] = g
+            out.append(buf)
+        return out
+
+    def _partial_fbf(self, kind: str, blocks: List, tag: str) -> List:
+        """out_s = intra_s @ local_s + halo_s @ (exchanged remote rows) —
+        the distributed BSpMM.FBF. The halo operand crosses the wire in fp.
+        A shard that owns no nodes (edge-balanced cuts on extreme skew)
+        contributes an empty row block — its phantom 1-row FRDC placeholder
+        must not run, it would gather from the 0-row operand."""
+        halo_in = self._exchange(blocks, tag)
+        out = []
+        for p, loc, rem in zip(self.parts, blocks, halo_in):
+            if p.n_local == 0:
+                out.append(jnp.zeros((0, np.asarray(loc).shape[1]),
+                                     jnp.float32))
+                continue
+            y = bspmm(p.intra[kind], jnp.asarray(loc), "FBF")
+            y = y + bspmm(p.halo[kind], jnp.asarray(rem), "FBF")
+            out.append(y)
+        return out
+
+    def _partial_bbb(self, kind: str, packed_blocks: List[np.ndarray],
+                     n_feat: int, tag: str) -> List[BinTensor]:
+        """Distributed BSpMM.BBB: per-shard trinary popc counts over the
+        intra bits plus the halo bits — integer partial sums, so the split
+        is EXACT — then one sign binarization. The exchanged operand is the
+        bit-packed activation block (uint32 words, 32x smaller than fp)."""
+        halo_in = self._exchange(packed_blocks, tag)
+        mode = self.plan.trinary_mode
+        out = []
+        for p, loc, rem in zip(self.parts, packed_blocks, halo_in):
+            if p.n_local == 0:
+                out.append(BinTensor(
+                    packed=jnp.zeros((0, np.asarray(loc).shape[1]),
+                                     jnp.uint32),
+                    scale=jnp.ones((0, 1), jnp.float32), n=n_feat))
+                continue
+            counts = _spmm_bits(p.intra[kind],
+                                _pad_rows(jnp.asarray(loc), frdc.TILE), mode)
+            counts = counts + _spmm_bits(
+                p.halo[kind], _pad_rows(jnp.asarray(rem), frdc.TILE), mode)
+            out.append(_binarize_counts(counts, n_feat))
+        return out
+
+    def _sharded_full_pass(self) -> List[np.ndarray]:
+        """Layer-wise distributed inference with frozen BN stats; returns the
+        per-shard logits blocks."""
+        fam, q, bn = self.plan.family, self.qparams, self.bn
+        xs = [jnp.asarray(b) for b in self._x_blocks()]
+        if fam == "gcn" and self.plan.scheme == "bin":
+            z = [gnn.batch_norm(x, stats=bn[0]) for x in xs]
+            hb = [bmm(zz, q.w1, "FBB", out_scale=False) for zz in z]
+            n_hidden = hb[0].n
+            h1 = self._partial_bbb("bin", [np.asarray(t.packed) for t in hb],
+                                   n_hidden, tag="layer1/packed")
+            h2 = [bmm(t, q.w2, "BBF") for t in h1]
+            out = self._partial_fbf("adj", h2, tag="layer2/fp")
+        elif fam == "gcn":
+            z1 = [quantize_act(gnn.batch_norm(x, stats=bn[0])) for x in xs]
+            t1 = [bmm(zz, q.w1, "BBF") for zz in z1]
+            h = [jax.nn.relu(y)
+                 for y in self._partial_fbf("adj", t1, tag="layer1/fp")]
+            z2 = [quantize_act(gnn.batch_norm(hh, stats=bn[1])) for hh in h]
+            t2 = [bmm(zz, q.w2, "BBF") for zz in z2]
+            out = self._partial_fbf("adj", t2, tag="layer2/fp")
+        elif fam == "sage":
+            xq = [quantize_act(gnn.batch_norm(x, stats=bn[0])) for x in xs]
+            a1 = [bmm(v, q.w1_agg, "BBF") for v in xq]
+            agg1 = self._partial_fbf("mean", a1, tag="layer1/fp")
+            h = [jax.nn.relu(bmm(v, q.w1_self, "BBF") + g)
+                 for v, g in zip(xq, agg1)]
+            hq = [quantize_act(gnn.batch_norm(hh, stats=bn[1])) for hh in h]
+            a2 = [bmm(v, q.w2_agg, "BBF") for v in hq]
+            agg2 = self._partial_fbf("mean", a2, tag="layer2/fp")
+            out = [bmm(v, q.w2_self, "BBF") + g for v, g in zip(hq, agg2)]
+        else:                                                   # saint
+            xq = [quantize_act(gnn.batch_norm(x, stats=bn[0])) for x in xs]
+            a1 = [bmm(v, q.w1_agg, "BBF") for v in xq]
+            agg1 = self._partial_fbf("sum", a1, tag="layer1/fp")
+            h = [jax.nn.relu(bmm(v, q.w1_self, "BBF") + g)
+                 for v, g in zip(xq, agg1)]
+            hq = [quantize_act(gnn.batch_norm(hh, stats=bn[1])) for hh in h]
+            a2 = [bmm(v, q.w2_agg, "BBF") for v in hq]
+            agg2 = self._partial_fbf("sum", a2, tag="layer2/fp")
+            h2 = [jax.nn.relu(bmm(v, q.w2_self, "BBF") + g)
+                  for v, g in zip(hq, agg2)]
+            out = [bmm(quantize_act(gnn.batch_norm(hh, stats=bn[2])),
+                       q.w_fc, "BBF") for hh in h2]
+        return [np.asarray(o) for o in out]
+
+    # ------------------------------------------------------ full path ------
+    def full_logits(self) -> np.ndarray:
+        """Full-graph logits assembled from the per-shard caches (each
+        filled by the distributed pass). The concatenation is memoized per
+        feature version — the full-cache serve path gathers from it every
+        tick."""
+        self.sync()
+        if self._assembled is None:
+            self._assembled = np.concatenate(self._caches, axis=0)
+        return self._assembled
+
+    # -------------------------------------------------- subgraph path ------
+    def _extract(self, uniq_seeds: np.ndarray):
+        """Routed k-hop extraction + subgraph FRDC build for one owner's
+        seed group (host-side; also used by warmup shape probing)."""
+        sub_nodes, sub_edges, seed_pos = routed_khop_subgraph(
+            self._scsr, uniq_seeds, self.khop)
+        dinv_blocks = self._dinv_blocks()
+        dinv_sub = None
+        if dinv_blocks is not None:
+            dinv_sub = halo_mod.gather_rows(dinv_blocks, self.routing,
+                                            sub_nodes)
+        mats = session_core.sub_adjacency(self.plan.family, sub_nodes.size,
+                                          sub_edges, dinv_sub)
+        return sub_nodes, mats, seed_pos
+
+    def _serve_owner_batch(self, owner: int,
+                           uniq_seeds: np.ndarray) -> np.ndarray:
+        """Answer one owner shard's routed seed group: extract the (possibly
+        boundary-crossing) k-hop subgraph, fetch remote feature rows through
+        the halo transport, and run the owner's bucketed jitted forward."""
+        sub_nodes, mats, seed_pos = self._extract(uniq_seeds)
+        x_sub = halo_mod.gather_rows(self._x_blocks(), self.routing,
+                                     sub_nodes, home=owner,
+                                     stats=self.halo_stats, tag="serve/x")
+        return self.cores[owner].run(x_sub, mats, seed_pos, self.bn)
+
+    def serve_subgraph(self, seeds: np.ndarray) -> np.ndarray:
+        """Micro-batched node-level inference across shards: group the batch
+        by owning shard (routing table), answer each group on its owner, and
+        merge the logits back into request order."""
+        self.sync()
+        seeds = np.asarray(seeds, np.int64)
+        uniq, inverse = np.unique(seeds, return_inverse=True)
+        owners = self.routing.owner(uniq)
+        out = np.zeros((uniq.size,) + self._out_shape(), np.float32)
+        for s in np.unique(owners):
+            sel = owners == s
+            out[sel] = self._serve_owner_batch(int(s), uniq[sel])
+        return out[inverse]
+
+    def _out_shape(self) -> tuple:
+        if self._caches is not None:
+            return self._caches[0].shape[1:]
+        q = self.qparams
+        last = q[-2] if self.plan.family == "sage" else q[-1]
+        # BinTensor of W.T: packed rows = out features
+        return (last.packed.shape[0],)
+
+    def warmup(self, rng: Optional[np.random.Generator] = None,
+               probes: int = 16, margin: float = 1.125) -> int:
+        """Per-shard high-water warmup: probe ``probes`` max-width batches
+        host-side, route each probe's seeds to their owners to find every
+        shard's steady node/group maxima, preset the water marks, then run
+        one real forward per shard. Returns compiles triggered."""
+        rng = rng or np.random.default_rng(0)
+        before = self.compile_count
+        self.sync()
+        n = self.shard_plan.n_nodes
+        n_max = [0] * self.n_shards
+        g_max: List[Dict[str, int]] = [{} for _ in range(self.n_shards)]
+        for _ in range(probes):
+            seeds = np.unique(rng.integers(0, n, size=self.max_batch))
+            owners = self.routing.owner(seeds)
+            for s in np.unique(owners):
+                sub_nodes, mats, _ = self._extract(seeds[owners == s])
+                n_max[s] = max(n_max[s], sub_nodes.size)
+                for k, m in mats.items():
+                    g_max[s][k] = max(g_max[s].get(k, 0), m.n_groups)
+        for s, core in enumerate(self.cores):
+            if n_max[s] == 0:
+                continue
+            core.preset_water(n_max[s], g_max[s], margin)
+        self.serve_subgraph(rng.integers(0, n, size=self.max_batch))
+        return self.compile_count - before
+
+    # ------------------------------------------------------- artifact ------
+    def fingerprint(self) -> dict:
+        return session_core.session_fingerprint(self.graph, self.model)
+
+    def _state(self) -> dict:
+        shards = []
+        for p in self.parts:
+            shards.append({
+                "intra": {k: session_core.frdc_arrays(m)
+                          for k, m in p.intra.items()},
+                "halo": {k: session_core.frdc_arrays(m)
+                         for k, m in p.halo.items()},
+                "halo_nodes": p.halo_nodes,
+                "indptr": p.indptr, "indices": p.indices,
+                **({} if p.dinv is None else {"dinv": p.dinv}),
+            })
+        return {"qparams": self.qparams, "shards": shards}
+
+    def save(self, directory: Path) -> None:
+        """Serialize per-shard FRDC + CSR + routing table via the
+        checkpointer; plan/fingerprint/dims in the ``routing.json`` sidecar
+        (format documented in the README next to ``plan.json``)."""
+        self.sync()
+        directory = Path(directory)
+        ckpt = Checkpointer(directory, keep=1)
+        ckpt.save(0, self._state(), blocking=True)
+        sidecar = dict(
+            plan=self.plan.to_json(), fingerprint=self.fingerprint(),
+            khop=self.khop, max_batch=self.max_batch,
+            n_shards=self.n_shards,
+            routing=self.routing.to_json(),
+            shards=[dict(
+                row_start=p.row_start, row_end=p.row_end, n_halo=p.n_halo,
+                intra_dims={k: [m.n_rows, m.n_cols, m.nnz]
+                            for k, m in p.intra.items()},
+                halo_dims={k: [m.n_rows, m.n_cols, m.nnz]
+                           for k, m in p.halo.items()},
+            ) for p in self.parts])
+        (directory / "routing.json").write_text(json.dumps(sidecar))
+
+    @classmethod
+    def load(cls, directory: Path, graph, model, khop: Optional[int] = None,
+             max_batch: Optional[int] = None, use_pallas: bool = False,
+             mesh=None) -> Optional["ShardedGraphSession"]:
+        """Restore a sharded artifact WITHOUT re-partitioning or re-tuning;
+        returns None on any mismatch so the caller replans."""
+        directory = Path(directory)
+        sidecar_path = directory / "routing.json"
+        if not sidecar_path.exists():
+            return None
+        sidecar = json.loads(sidecar_path.read_text())
+        if khop is not None and sidecar["khop"] != khop:
+            return None
+        if max_batch is not None and sidecar["max_batch"] != max_batch:
+            return None
+        plan = SessionPlan.from_json(sidecar["plan"])
+        if session_core.session_fingerprint(graph, model) \
+                != sidecar["fingerprint"]:
+            return None
+        fam = model.family
+        has_dinv = fam in ("gcn", "sage")
+        kinds = session_core.FAMILY_ADJ_KINDS[fam]
+        scale_extra = session_core.ADJ_SCALE_FIELDS[fam]
+
+        def frdc_like(kind):
+            # halo matrices carry the same scale fields as intra ones
+            return {f: np.zeros(0)
+                    for f in session_core.FRDC_BASE_FIELDS
+                    + scale_extra[kind]}
+
+        like_shards = []
+        for sd in sidecar["shards"]:
+            like_shards.append({
+                "intra": {k: frdc_like(k) for k in kinds},
+                "halo": {k: frdc_like(k) for k in kinds},
+                "halo_nodes": np.zeros(0, np.int64),
+                "indptr": np.zeros(0, np.int64),
+                "indices": np.zeros(0, np.int64),
+                **({"dinv": np.zeros(0)} if has_dinv else {}),
+            })
+        like = {"qparams": session_core.quantize_family(fam, model.params),
+                "shards": like_shards}
+        try:
+            state = Checkpointer(directory, keep=1).restore(None, like)
+        except (FileNotFoundError, AssertionError):
+            return None
+
+        routing = RoutingTable.from_json(sidecar["routing"])
+        parts = []
+        for s, (sd, st) in enumerate(zip(sidecar["shards"],
+                                         state["shards"])):
+            intra = {k: session_core.frdc_rebuild(st["intra"][k],
+                                                  *sd["intra_dims"][k])
+                     for k in kinds}
+            halo_m = {k: session_core.frdc_rebuild(st["halo"][k],
+                                                   *sd["halo_dims"][k])
+                      for k in kinds}
+            parts.append(ShardPart(
+                index=s, row_start=int(sd["row_start"]),
+                row_end=int(sd["row_end"]),
+                halo_nodes=np.asarray(st["halo_nodes"], np.int64),
+                intra=intra, halo=halo_m,
+                indptr=np.asarray(st["indptr"], np.int64),
+                indices=np.asarray(st["indices"], np.int64),
+                dinv=(np.asarray(st["dinv"]) if has_dinv else None)))
+        shard_plan = ShardPlan(family=fam, routing=routing, parts=parts,
+                               n_nodes=int(graph.data.n_nodes),
+                               n_edges=int(graph.data.n_edges))
+        return cls(graph, model, plan,
+                   session_core.coerce_quant(state["qparams"]), shard_plan,
+                   khop=sidecar["khop"], max_batch=sidecar["max_batch"],
+                   use_pallas=use_pallas, mesh=mesh)

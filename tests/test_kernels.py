@@ -101,3 +101,35 @@ def test_bspmm_empty_rows_prefill():
     np.testing.assert_array_equal(np.asarray(counts[4:]), 0)
     bits = bspmm_kernel.bspmm_bits(adj, xp, f, binarize=True)
     np.testing.assert_array_equal(np.asarray(bits[4:]), 0xFFFFFFFF)
+
+
+def test_bspmm_kernel_bucket_padded_frdc():
+    """pad_frdc bucket padding appends all-zero groups mapped to tile-row 0
+    WITHOUT a first-of-row reset. The kernel's flush schedule must neither
+    let a pad group close row 0 with a stale accumulator nor hide row 0's
+    real last group behind the pads (both bugs existed): padded and
+    unpadded results must agree, including the row-0-only corner."""
+    # corner: the ONLY real group is in tile-row 0, pads follow in row 0
+    m = frdc.pad_frdc(frdc.from_coo([0], [0], 1, 1), 64, n_groups=16)
+    x = jnp.ones((64, 5), jnp.float32)
+    got = np.asarray(bspmm_kernel.bspmm_fp(m, x))[:1]
+    np.testing.assert_array_equal(got, [[1.0] * 5])
+
+    rng = np.random.default_rng(3)
+    a = (rng.random((30, 30)) < 0.2).astype(np.float32)
+    adj = frdc.from_dense(a)
+    xf = jnp.asarray(rng.standard_normal((30, 32)), jnp.float32)
+    want_fp = np.asarray(bspmm_kernel.bspmm_fp(adj, xf))[:30]
+    padded = frdc.pad_frdc(adj, 64, n_groups=adj.n_groups + 7)
+    xf_pad = jnp.zeros((64, 32)).at[:30].set(xf)
+    got_fp = np.asarray(bspmm_kernel.bspmm_fp(padded, xf_pad))[:30]
+    np.testing.assert_allclose(got_fp, want_fp, rtol=1e-5, atol=1e-5)
+
+    act = rng.choice([-1.0, 1.0], size=(30, 32))
+    xp = bitops.pack_bits(act > 0)
+    want_c = np.asarray(bspmm_kernel.bspmm_bits(adj, xp, 32,
+                                                binarize=False))[:30]
+    xp_pad = jnp.zeros((64, 1), jnp.uint32).at[:30].set(xp)
+    got_c = np.asarray(bspmm_kernel.bspmm_bits(padded, xp_pad, 32,
+                                               binarize=False))[:30]
+    np.testing.assert_array_equal(got_c, want_c)

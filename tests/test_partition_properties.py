@@ -1,0 +1,177 @@
+"""Property tests for graph partitioning (graphs/partition.py + the shard
+planner built on it): every node assigned to exactly one shard, edge-cut +
+intra-shard edges conserve the input edge set, and planning is deterministic
+under the seed (and invariant to edge-list permutation).
+
+The structural properties run as plain deterministic tests (always);
+randomized sweeps additionally run under hypothesis when it is installed.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.core import frdc
+from repro.graphs import partition
+from repro.graphs.datasets import make_dataset
+from repro.serve.sharded import ShardPlanner
+
+jax.config.update("jax_platform_name", "cpu")
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _random_graph(n, e, seed):
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, n, size=e)
+    cols = rng.integers(0, n, size=e)
+    return rows.astype(np.int64), cols.astype(np.int64)
+
+
+def _edge_set(rows, cols):
+    return set(zip(rows.tolist(), cols.tolist()))
+
+
+def _plan_edge_set(plan, kind):
+    """Reconstruct the global edge set a plan's intra + halo matrices hold."""
+    edges = set()
+    for p in plan.parts:
+        dense = np.array(frdc.to_dense(p.intra[kind], apply_scales=False))
+        if kind == "adj":        # drop the self-loops the GCN kind adds
+            np.fill_diagonal(dense, 0.0)
+        r, c = np.nonzero(dense[:p.n_local, :p.n_local])
+        edges |= _edge_set(r + p.row_start, c + p.row_start)
+        if p.n_halo:
+            dh = np.asarray(frdc.to_dense(p.halo[kind], apply_scales=False))
+            r, c = np.nonzero(dh[:p.n_local, :p.n_halo])
+            edges |= _edge_set(r + p.row_start, p.halo_nodes[c])
+    return edges
+
+
+# ------------------------------------------------------ plain (always) ------
+
+@pytest.mark.parametrize("n_shards", [1, 2, 3, 4])
+def test_every_node_assigned_exactly_once(n_shards):
+    rows, _ = _random_graph(130, 700, seed=1)
+    bounds = partition.shard_node_bounds(rows, 130, n_shards)
+    assert bounds[0] == 0 and bounds[-1] == 130
+    assert (np.diff(bounds) >= 0).all()
+    owner_count = np.zeros(130, np.int64)
+    for s in range(n_shards):
+        owner_count[bounds[s]:bounds[s + 1]] += 1
+    np.testing.assert_array_equal(owner_count, 1)
+    # interior boundaries are tile-row aligned
+    assert all(b % frdc.TILE == 0 for b in bounds[:-1])
+
+
+@pytest.mark.parametrize("family,kind", [("gcn", "bin"), ("sage", "mean"),
+                                         ("saint", "sum")])
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_planner_conserves_edge_set(family, kind, n_shards):
+    """Union of intra + halo edges (mapped back to global ids) == input."""
+    data = make_dataset("cora", seed=0, scale=0.05)
+    plan = ShardPlanner(n_shards).plan(data, family)
+    want = _edge_set(data.edges[0], data.edges[1])
+    assert _plan_edge_set(plan, kind) == want
+    # every edge is intra XOR halo: totals add up exactly
+    n_intra = sum(p.intra[kind].nnz for p in plan.parts)
+    n_halo = sum(p.halo[kind].nnz for p in plan.parts)
+    assert n_intra + n_halo == data.n_edges
+
+
+def test_gcn_normalized_kind_conserves_with_self_loops():
+    data = make_dataset("cora", seed=0, scale=0.05)
+    plan = ShardPlanner(3).plan(data, "gcn")
+    # "adj" kind = edges + one self-loop per node, all loops intra
+    n_intra = sum(p.intra["adj"].nnz for p in plan.parts)
+    n_halo = sum(p.halo["adj"].nnz for p in plan.parts)
+    assert n_intra + n_halo == data.n_edges + data.n_nodes
+    assert _plan_edge_set(plan, "adj") == _edge_set(data.edges[0],
+                                                    data.edges[1])
+
+
+def test_partition_rows_conserves_edges():
+    rows, cols = _random_graph(97, 500, seed=3)
+    shards = partition.partition_rows(rows, cols, 97, 3, kind="binary")
+    got = set()
+    for sh in shards:
+        dense = np.asarray(frdc.to_dense(sh.adj, apply_scales=False))
+        r, c = np.nonzero(dense[: sh.row_end - sh.row_start])
+        got |= _edge_set(r + sh.row_start, c)
+    assert got == _edge_set(rows, cols)
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_plan_deterministic_under_seed(n_shards):
+    """Same seed -> identical plan; permuted edge order -> identical
+    boundaries, halo sets and adjacency structure (FRDC bits)."""
+    d1 = make_dataset("cora", seed=0, scale=0.05)
+    d2 = make_dataset("cora", seed=0, scale=0.05)
+    p1 = ShardPlanner(n_shards).plan(d1, "gcn")
+    p2 = ShardPlanner(n_shards).plan(d2, "gcn")
+    np.testing.assert_array_equal(p1.routing.bounds, p2.routing.bounds)
+    for a, b in zip(p1.parts, p2.parts):
+        np.testing.assert_array_equal(a.halo_nodes, b.halo_nodes)
+        for k in a.intra:
+            np.testing.assert_array_equal(np.asarray(a.intra[k].tiles),
+                                          np.asarray(b.intra[k].tiles))
+            np.testing.assert_array_equal(np.asarray(a.halo[k].col_idx),
+                                          np.asarray(b.halo[k].col_idx))
+        np.testing.assert_array_equal(a.indices, b.indices)
+
+    # permutation invariance of the structure (CSR neighbor order may
+    # legally differ; the adjacency MATRICES may not)
+    d3 = make_dataset("cora", seed=0, scale=0.05)
+    perm = np.random.default_rng(7).permutation(d3.n_edges)
+    d3.edges = d3.edges[:, perm]
+    p3 = ShardPlanner(n_shards).plan(d3, "gcn")
+    np.testing.assert_array_equal(p3.routing.bounds, p1.routing.bounds)
+    for a, b in zip(p1.parts, p3.parts):
+        np.testing.assert_array_equal(a.halo_nodes, b.halo_nodes)
+        for k in a.intra:
+            np.testing.assert_array_equal(np.asarray(a.intra[k].tiles),
+                                          np.asarray(b.intra[k].tiles))
+            np.testing.assert_array_equal(np.asarray(a.halo[k].tiles),
+                                          np.asarray(b.halo[k].tiles))
+
+
+def test_different_seed_different_graph_still_conserves():
+    for seed in (1, 2):
+        rows, cols = _random_graph(64, 300, seed=seed)
+        bounds = partition.shard_node_bounds(rows, 64, 2)
+        b2 = partition.shard_node_bounds(rows, 64, 2)
+        np.testing.assert_array_equal(bounds, b2)   # deterministic
+
+
+# ------------------------------------------------- hypothesis (optional) ----
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.integers(8, 120), st.integers(1, 6), st.integers(0, 2**31))
+    @settings(max_examples=20, deadline=None)
+    def test_bounds_partition_nodes_hyp(n, n_shards, seed):
+        rows, _ = _random_graph(n, 4 * n, seed)
+        bounds = partition.shard_node_bounds(rows, n, n_shards)
+        assert bounds[0] == 0 and bounds[-1] == n
+        assert (np.diff(bounds) >= 0).all()
+        covered = np.concatenate(
+            [np.arange(bounds[s], bounds[s + 1]) for s in range(n_shards)])
+        np.testing.assert_array_equal(covered, np.arange(n))
+
+    @given(st.integers(16, 80), st.integers(2, 4), st.integers(0, 2**31))
+    @settings(max_examples=10, deadline=None)
+    def test_split_conserves_edges_hyp(n, n_shards, seed):
+        rows, cols = _random_graph(n, 3 * n, seed)
+        bounds = partition.shard_node_bounds(rows, n, n_shards)
+        total = 0
+        for s in range(n_shards):
+            lo, hi = bounds[s], bounds[s + 1]
+            m = (rows >= lo) & (rows < hi)
+            total += int(m.sum())
+            cmask = (cols[m] >= lo) & (cols[m] < hi)
+            # intra + halo of this shard == its row slice
+            assert int(cmask.sum()) + int((~cmask).sum()) == int(m.sum())
+        assert total == rows.size

@@ -175,6 +175,86 @@ def test_feature_update_invalidates_sessions(data):
         st.update_features("g", x2[:, :10])   # feature width is fixed
 
 
+def test_incremental_update_matches_full_recompute(data):
+    """Incremental mode patches ONLY the k-hop out-neighborhood (reverse-edge
+    closure) of the changed rows under frozen BN stats — and the patched
+    cache equals a full recompute with the same frozen stats."""
+    st = GraphStore(max_batch=BATCH, incremental=True)
+    d2 = make_dataset("cora", seed=0, scale=0.1)
+    st.register_graph("g", d2)
+    st.register_model("gcn", "gcn",
+                      gnn.init_gcn(jax.random.PRNGKey(0), d2.x.shape[1],
+                                   HIDDEN, d2.n_classes))
+    sess = st.session("g", "gcn")
+    before = sess.full_logits().copy()
+    bn0 = sess.bn
+
+    changed = np.array([3, 17, 40])
+    x2 = d2.x.copy()
+    x2[changed] += 1.0
+    st.update_features("g", x2)
+    inc = sess.full_logits()
+    assert sess.incremental_refreshes == 1
+    # BN calibration stayed frozen (that is the incremental-mode contract)
+    for a, b in zip(bn0, sess.bn):
+        np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+
+    # the oracle: a FULL recompute with the same frozen stats
+    ref = np.asarray(sess._jit_full_frozen(jnp.asarray(x2), bn0))
+    affected = sampling.khop_nodes(sess.graph.csr_rev, changed, 2)
+    unaffected = np.setdiff1d(np.arange(d2.n_nodes), affected)
+    assert 0 < affected.size < d2.n_nodes
+    np.testing.assert_array_equal(inc[unaffected], ref[unaffected])
+    np.testing.assert_array_equal(inc[unaffected], before[unaffected])
+    np.testing.assert_allclose(inc[affected], ref[affected],
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.argmax(inc, -1), np.argmax(ref, -1))
+
+    # a second, larger update takes the frozen-stats full-pass patch branch
+    x3 = x2.copy()
+    x3[: d2.n_nodes // 2] -= 0.5
+    st.update_features("g", x3)
+    inc3 = sess.full_logits()
+    ref3 = np.asarray(sess._jit_full_frozen(jnp.asarray(x3), bn0))
+    np.testing.assert_allclose(inc3, ref3, rtol=1e-5, atol=1e-5)
+    assert sess.incremental_refreshes == 2
+
+
+def test_serve_with_pallas_kernels_flag(data):
+    """use_pallas routes the bucketed forward's BSpMM through the Pallas
+    kernels (interpret mode on CPU under force_kernels; silent fallback to
+    the reference path otherwise) — answers must not change."""
+    from repro.kernels import ops
+    tiny = make_dataset("cora", seed=0, scale=0.03)
+    key = jax.random.PRNGKey(0)
+    params = gnn.init_gcn(key, tiny.x.shape[1], 8, tiny.n_classes)
+    nodes = np.arange(4)
+
+    st_ref = GraphStore(max_batch=4)
+    st_ref.register_graph("t", tiny)
+    st_ref.register_model("gcn", "gcn", params)
+    ref = st_ref.session("t", "gcn").serve_subgraph(nodes)
+
+    # off-TPU without force_kernels the flag is a documented no-op
+    st_fb = GraphStore(max_batch=4, use_pallas=True)
+    st_fb.register_graph("t", tiny)
+    st_fb.register_model("gcn", "gcn", params)
+    np.testing.assert_array_equal(
+        st_fb.session("t", "gcn").serve_subgraph(nodes), ref)
+
+    # force_kernels actually exercises the kernels (bucket-padded FRDC)
+    ops.force_kernels(True)
+    try:
+        st_k = GraphStore(max_batch=4, use_pallas=True)
+        st_k.register_graph("t", tiny)
+        st_k.register_model("gcn", "gcn", params)
+        got = st_k.session("t", "gcn").serve_subgraph(nodes)
+    finally:
+        ops.force_kernels(False)
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.argmax(got, -1), np.argmax(ref, -1))
+
+
 def test_session_artifact_roundtrip(tmp_path, data):
     """save/load through the checkpointer reproduces plan + outputs; a
     feature change invalidates the artifact (fingerprint mismatch)."""
