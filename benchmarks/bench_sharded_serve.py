@@ -9,12 +9,24 @@ columns measure the ORCHESTRATION overhead of sharding, and the halo-bytes
 columns the communication volume a real deployment would pay — the number
 the paper's bit-packing shrinks 32x on the binary-aggregation layer.
 
+Two additional sections per family x P:
+
+  * ``full_pass_latency`` — host-orchestrated vs SPMD executor wall time of
+    one distributed full pass (``--executor`` picks which executor the
+    ENGINE benches use; the comparison always runs both when the host can
+    expose P devices — forced via ``ensure_host_devices`` when this module
+    runs standalone — and records SPMD/host bit-equality);
+  * ``bn_calibration_drift`` — distributed BN calibration (psum moments
+    from the pass itself) vs the single-host anchor: max |logit delta| and
+    argmax agreement.
+
 Emits CSV rows like every other section plus
 ``results/BENCH_sharded_serve.json``.
 """
 from __future__ import annotations
 
 import json
+import time
 from pathlib import Path
 
 import jax
@@ -32,6 +44,43 @@ FAMILY_INITS = {
     "gcn": gnn.init_gcn, "sage": gnn.init_sage, "saint": gnn.init_saint,
 }
 SHARD_COUNTS = (2, 4)
+
+
+def _time_full_pass(sess, repeats: int) -> float:
+    sess.run_distributed_pass()                       # warm the programs
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        sess.run_distributed_pass()
+    return (time.perf_counter() - t0) / repeats
+
+
+def _executor_compare(store, fam: str, p: int, spmd_ok: bool,
+                      repeats: int) -> dict:
+    """Host-vs-SPMD full-pass latency + SPMD bit-equality check."""
+    host = store.sharded_session("bench", fam, p)
+    out = dict(host_full_pass_s=_time_full_pass(host, repeats),
+               spmd_full_pass_s=None, spmd_bit_exact=None,
+               spmd_layer_compiles=None)
+    if spmd_ok:
+        spmd = store.sharded_session("bench", fam, p, executor="spmd")
+        out["spmd_full_pass_s"] = _time_full_pass(spmd, repeats)
+        out["spmd_bit_exact"] = bool(np.array_equal(spmd.full_logits(),
+                                                    host.full_logits()))
+        out["spmd_layer_compiles"] = spmd.executor_compile_count
+    return out
+
+
+def _bn_drift(store, fam: str, p: int, executor: str) -> dict:
+    """Distributed-BN serving drift vs the single-host calibration."""
+    anchor = store.session("bench", fam).full_logits()
+    dist = store.sharded_session("bench", fam, p, executor=executor,
+                                 bn_mode="distributed")
+    got = dist.full_logits()
+    return dict(
+        executor=executor,
+        max_abs_logit_delta=float(np.abs(got - anchor).max()),
+        argmax_agreement=float((np.argmax(got, -1)
+                                == np.argmax(anchor, -1)).mean()))
 
 
 def _serve_wave(engine, graph: str, model: str, nodes: np.ndarray,
@@ -52,12 +101,24 @@ def _bench_engine(engine, fam: str, nodes: np.ndarray, batch: int) -> dict:
     return snap
 
 
-def run(full: bool = False) -> dict:
+def run(full: bool = False, executor: str = "host") -> dict:
+    # the SPMD comparison needs P host devices; only effective when jax has
+    # not initialized a backend yet (standalone runs) — otherwise the SPMD
+    # columns degrade to None and the host columns still emit. The CPU pin
+    # must precede ensure_host_devices (it initializes the backend).
     jax.config.update("jax_platform_name", "cpu")
+    from repro.launch.mesh import ensure_host_devices
+    spmd_ok = ensure_host_devices(max(SHARD_COUNTS))
+    if executor == "spmd" and not spmd_ok:
+        print("# bench_sharded_serve: --executor spmd needs "
+              f"{max(SHARD_COUNTS)} devices, have {len(jax.devices())}; "
+              "falling back to host for the engine benches")
+        executor = "host"
     scale = 1.0 if full else 0.15
     n_queries = 600 if full else 120
     batch = 32 if full else 16
     hidden = 64 if full else 32
+    pass_repeats = 5 if full else 2
 
     d = make_dataset("cora", seed=0, scale=scale)
     store = GraphStore(max_batch=batch)
@@ -70,6 +131,7 @@ def run(full: bool = False) -> dict:
     summary: dict = dict(dataset="cora", scale=scale, n_nodes=d.n_nodes,
                          n_edges=d.n_edges, n_queries=n_queries,
                          batch=batch, shard_counts=list(SHARD_COUNTS),
+                         engine_executor=executor, spmd_available=spmd_ok,
                          families={})
     rng = np.random.default_rng(0)
     nodes = rng.integers(0, d.n_nodes, size=n_queries)
@@ -87,26 +149,40 @@ def run(full: bool = False) -> dict:
                 f"p99_ms={single['latency']['p99_ms']:.2f}")
         for p in SHARD_COUNTS:
             engine = ShardedServeEngine(store, p, max_batch=batch,
-                                        mode="subgraph")
+                                        mode="subgraph", executor=executor)
             snap = _bench_engine(engine, fam, nodes, batch)
-            sess = store.sharded_session("bench", fam, p)
+            sess = store.sharded_session("bench", fam, p,
+                                         executor=executor)
             snap["plan_stats"] = sess.shard_plan.stats()
             # the distributed full pass ran once per calibration: its tags
             # are the per-layer halo volume of full-graph inference
             snap["full_pass_halo_bytes"] = {
                 t: b for t, b in sess.halo_stats.bytes_by_tag.items()
                 if t.startswith("layer")}
+            snap["full_pass_latency"] = _executor_compare(
+                store, fam, p, spmd_ok, pass_repeats)
+            snap["bn_calibration_drift"] = _bn_drift(
+                store, fam, p, "spmd" if spmd_ok else "host")
             fam_out[f"P{p}"] = snap
             halo = ";".join(f"{t.replace('/', '_')}={b}"
                             for t, b in
                             sorted(snap["full_pass_halo_bytes"].items()))
+            lat = snap["full_pass_latency"]
+            spmd_s = lat["spmd_full_pass_s"]
+            drift = snap["bn_calibration_drift"]
             csv_row(f"sharded_serve/{fam}/P{p}",
                     1e6 / max(snap["qps"], 1e-9),
                     f"qps={snap['qps']:.1f};"
                     f"p50_ms={snap['latency']['p50_ms']:.2f};"
                     f"p99_ms={snap['latency']['p99_ms']:.2f};"
                     f"halo_bytes={snap['halo_bytes']};{halo};"
-                    f"steady_compiles={snap['steady_state_compiles']}")
+                    f"steady_compiles={snap['steady_state_compiles']};"
+                    f"host_pass_ms={lat['host_full_pass_s']*1e3:.2f};"
+                    f"spmd_pass_ms="
+                    f"{'n/a' if spmd_s is None else f'{spmd_s*1e3:.2f}'};"
+                    f"spmd_bit_exact={lat['spmd_bit_exact']};"
+                    f"bn_drift_max={drift['max_abs_logit_delta']:.2e};"
+                    f"bn_argmax_agree={drift['argmax_agreement']:.4f}")
         summary["families"][fam] = fam_out
 
     RESULTS.mkdir(parents=True, exist_ok=True)
@@ -120,4 +196,8 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    run(full=ap.parse_args().full)
+    ap.add_argument("--executor", choices=("host", "spmd"), default="host",
+                    help="executor the sharded ENGINE benches run with; "
+                    "the host-vs-SPMD full-pass comparison always emits")
+    args = ap.parse_args()
+    run(full=args.full, executor=args.executor)

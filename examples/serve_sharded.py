@@ -14,11 +14,16 @@ Walkthrough:
   4. the ShardedServeEngine routes micro-batched queries to their owning
      shards (per-owner FIFO queues) and serves them with ZERO steady-state
      recompiles per shard; answers are bit-exact vs single-host serving;
-  5. artifacts (per-shard FRDC + routing.json) roundtrip through the
-     checkpointer without re-partitioning.
+  5. with enough devices, the SPMD layer executor re-runs the full pass as
+     one shard_map program per layer (fused halo exchange) — bit-identical
+     to the host-orchestrated pass — and the distributed BN calibration
+     (psum moments, no single-host anchor pass) is compared to it;
+  6. artifacts (per-shard FRDC + routing.json, incl. the ``spmd`` plan)
+     roundtrip through the checkpointer without re-partitioning.
 
 Run with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to move the
-halo exchange onto real per-shard devices (shard_map + ppermute collectives).
+halo exchange onto real per-shard devices (shard_map + ppermute collectives)
+and enable the SPMD executor section.
 """
 from __future__ import annotations
 
@@ -94,7 +99,34 @@ def main() -> None:
               f"serve halo {snap['halo_bytes_by_tag'].get('serve/x', 0)} B")
         assert engine.compile_count == c0, "steady-state recompile!"
 
-        # 5. sanity vs single host + artifact restore -----------------------
+        # 5. SPMD executor + distributed BN calibration ---------------------
+        if mesh is not None:
+            spmd = store.sharded_session("cora", "gcn", args.shards,
+                                         executor="spmd")
+            spmd.run_distributed_pass()        # warm: compile the programs
+            sess.run_distributed_pass()
+            t0 = time.perf_counter()
+            spmd.run_distributed_pass()
+            dt_spmd = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            sess.run_distributed_pass()
+            dt_host = time.perf_counter() - t0
+            exact = np.array_equal(spmd.full_logits(), sess.full_logits())
+            print(f"SPMD executor: full pass {dt_spmd*1e3:.1f}ms vs host "
+                  f"{dt_host*1e3:.1f}ms | bit-exact={exact} | "
+                  f"{spmd.executor_compile_count} compiles for "
+                  f"{len(spmd.program)} layer programs")
+            dist = store.sharded_session("cora", "gcn", args.shards,
+                                         executor="spmd",
+                                         bn_mode="distributed")
+            da, aa = dist.full_logits(), sess.full_logits()
+            print(f"distributed BN calibration: max|logit delta| "
+                  f"{np.abs(da-aa).max():.2e}, argmax agreement "
+                  f"{(np.argmax(da,-1)==np.argmax(aa,-1)).mean():.2%}")
+        else:
+            print("(< P devices: SPMD executor section skipped)")
+
+        # 6. sanity vs single host + artifact restore -----------------------
         single = store.session("cora", "gcn")
         sample = nodes[: args.batch]
         owners = sess.routing.owner(sample)

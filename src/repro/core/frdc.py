@@ -232,6 +232,56 @@ def pad_frdc(m: FRDCMatrix, n_rows: int, n_cols: Optional[int] = None,
     )
 
 
+def align_tile(n: int) -> int:
+    """Round up to the tile grid (min one tile) — the per-shard uniform dims
+    of the SPMD layer executor are tile-aligned so every shard's padded FRDC
+    block and operand rows share one static shape."""
+    return -(-max(int(n), 1) // TILE) * TILE
+
+
+def pad_frdc_uniform(mats, n_rows: int, n_cols: int,
+                     n_groups: int) -> list:
+    """Pad a per-shard family of FRDC matrices to ONE static shape.
+
+    All three dims are shared: ``(n_rows, n_cols)`` must be tile-aligned
+    covers of every matrix and ``n_groups`` a cover of every group count —
+    the preconditions of :func:`stack_frdc`. Padding is exact for the
+    serving variants (see :func:`pad_frdc`)."""
+    if n_rows % TILE or n_cols % TILE:
+        raise ValueError(f"uniform dims ({n_rows},{n_cols}) must be "
+                         f"TILE({TILE})-aligned")
+    return [pad_frdc(m, n_rows, n_cols, n_groups=n_groups) for m in mats]
+
+
+def stack_frdc(mats) -> dict:
+    """Stack uniformly padded FRDC matrices along a new leading shard axis.
+
+    Returns the field dict (``tiles``/``col_idx``/``group_row``/
+    ``group_first``/``grp_ptr`` + present scale vectors), each ``(P, ...)``
+    — the operand layout a ``shard_map`` program consumes with a
+    ``P('data')`` spec; slicing off the leading axis inside the program and
+    rebuilding with the shared static dims recovers each shard's matrix."""
+    m0 = mats[0]
+    for m in mats[1:]:
+        if (m.n_rows, m.n_cols, m.n_groups) != (m0.n_rows, m0.n_cols,
+                                                m0.n_groups):
+            raise ValueError(
+                f"stack_frdc needs uniformly padded matrices, got "
+                f"({m.n_rows},{m.n_cols},g{m.n_groups}) vs "
+                f"({m0.n_rows},{m0.n_cols},g{m0.n_groups})")
+        for f in ("row_scale", "col_scale"):
+            if (getattr(m, f) is None) != (getattr(m0, f) is None):
+                raise ValueError(f"stack_frdc: {f} present on some shards "
+                                 "but not others")
+    out = {f: jnp.stack([getattr(m, f) for m in mats])
+           for f in ("tiles", "col_idx", "group_row", "group_first",
+                     "grp_ptr")}
+    for f in ("row_scale", "col_scale"):
+        if getattr(m0, f) is not None:
+            out[f] = jnp.stack([getattr(m, f) for m in mats])
+    return out
+
+
 def to_dense(m: FRDCMatrix, dtype=jnp.float32, apply_scales: bool = True):
     """Decode to a dense matrix — the oracle used by every BSpMM test."""
     tiles = np.asarray(m.tiles)

@@ -120,3 +120,54 @@ def bspmm_fp(adj: FRDCMatrix, x: jax.Array) -> jax.Array:
     if _use_kernels():
         return _serve_fp_backend(adj, x)
     return bspmm_core.bspmm(adj, x, "FBF")
+
+
+# ---------------------------------------------------------------------------
+# Explicit-backend serve aggregations (shard_map-safe)
+# ---------------------------------------------------------------------------
+# The ``serve_kernels`` context mutates module globals, which is fine for
+# the single jit trace of a ServeCore forward but fragile inside shard_map
+# bodies (the SPMD layer executor traces P-way programs whose retraces are
+# not under the session's control). These two entry points take the backend
+# choice as an ARGUMENT instead, so a shard_map body is a pure function of
+# its inputs; Pallas runs natively per shard on TPU and in interpret mode
+# elsewhere (the callers must build their shard_map with ``check_vma=False``
+# when routing through the kernels — pallas_call has no replication rule).
+
+def serve_fp(adj: FRDCMatrix, x: jax.Array,
+             use_pallas: bool = False) -> jax.Array:
+    """BSpMM.FBF for the layer executors: exact scaled fp aggregation."""
+    if use_pallas and _use_kernels():
+        return _serve_fp_backend(adj, x)
+    return bspmm_core.bspmm(adj, x, "FBF")
+
+
+def serve_counts(adj: FRDCMatrix, x_packed: jax.Array,
+                 trinary_mode: str = bspmm_core.TRINARY_DEFAULT,
+                 use_pallas: bool = False) -> jax.Array:
+    """BSpMM.BB? raw trinary counts for the layer executors — the integer
+    partial sums of the distributed binary-aggregation layer (they add
+    EXACTLY across the intra/halo split)."""
+    xp = bspmm_core._pad_rows(x_packed, TILE)
+    if use_pallas and _use_kernels():
+        return _serve_bits_backend(adj, xp, trinary_mode)
+    return bspmm_core._spmm_bits(adj, xp, trinary_mode)
+
+
+def serve_fp_pair(intra: FRDCMatrix, halo: FRDCMatrix, x_local: jax.Array,
+                  x_remote: jax.Array, use_pallas: bool = False
+                  ) -> jax.Array:
+    """Distributed FBF layer aggregation:
+    ``(intra_raw @ x_local + halo_raw @ x_remote) * row_scale``.
+
+    Both matrices share the owning shard's row scale, and XLA's algebraic
+    simplifier factors ``a*r + b*r`` into ``(a+b)*r`` inside fused programs
+    — which changes fp rounding vs two eagerly-scaled partials. Applying
+    the (identical) row scale ONCE after the add writes the factored form
+    explicitly, so the eager host executor and the fused SPMD layer
+    programs stay bit-identical."""
+    y = serve_fp(intra._replace(row_scale=None), x_local, use_pallas) \
+        + serve_fp(halo._replace(row_scale=None), x_remote, use_pallas)
+    if intra.row_scale is not None:
+        y = y * intra.row_scale[:, None].astype(y.dtype)
+    return y

@@ -45,6 +45,21 @@ def make_shard_mesh(n_shards: int):
     return jax.sharding.Mesh(np.asarray(devs[:n_shards]), ("data",))
 
 
+def ensure_host_devices(n: int) -> bool:
+    """Best-effort: expose >= ``n`` host (CPU) devices for the SPMD shard
+    executor. Only effective BEFORE the jax backend initializes — appends
+    the XLA host-platform flag to ``XLA_FLAGS`` (the same mechanism the CI
+    multi-device job uses); once a backend exists the flag is inert and the
+    caller must fall back (e.g. to the host-orchestrated executor). Returns
+    whether ``n`` devices are actually available afterwards."""
+    import os
+    flag = "--xla_force_host_platform_device_count"
+    flags = os.environ.get("XLA_FLAGS", "")
+    if flag not in flags:
+        os.environ["XLA_FLAGS"] = f"{flags} {flag}={int(n)}".strip()
+    return len(jax.devices()) >= n
+
+
 def dp_axes(mesh: jax.sharding.Mesh):
     """The data-parallel mesh axes (includes "pod" when present)."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -466,11 +466,15 @@ class GraphStore:
 
     def sharded_session(self, graph: str, model: str, n_shards: int,
                         tune: bool = False, tune_repeats: int = 2,
-                        mesh=None):
+                        mesh=None, executor: str = "host",
+                        bn_mode: str = "single_host"):
         """Compile (or restore) a partitioned session serving ``graph``
-        from ``n_shards`` shards. See :mod:`repro.serve.sharded`."""
+        from ``n_shards`` shards. ``executor``/``bn_mode`` select the
+        distributed-pass implementation and the BN calibration source
+        (sessions differing in either coexist — they are part of the cache
+        key). See :mod:`repro.serve.sharded`."""
         from repro.serve.sharded import ShardedGraphSession, ShardPlanner
-        key = (graph, model, int(n_shards))
+        key = (graph, model, int(n_shards), executor, bn_mode)
         if key in self._sharded_sessions:
             sess = self._sharded_sessions[key]
             if mesh is not None:       # caller asked for a specific transport
@@ -484,7 +488,8 @@ class GraphStore:
         if sess_dir is not None:
             sess = ShardedGraphSession.load(
                 sess_dir, g, m, khop=self.khop, max_batch=self.max_batch,
-                use_pallas=self.use_pallas, mesh=mesh)
+                use_pallas=self.use_pallas, mesh=mesh, executor=executor,
+                bn_mode=bn_mode)
         if sess is None:
             qparams = session_core.quantize_family(m.family, m.params)
             plan = (session_core.tune_plan(g.data, m.family, qparams,
@@ -494,7 +499,7 @@ class GraphStore:
             sess = ShardedGraphSession(
                 g, m, plan, qparams, shard_plan, khop=self.khop,
                 max_batch=self.max_batch, use_pallas=self.use_pallas,
-                mesh=mesh)
+                mesh=mesh, executor=executor, bn_mode=bn_mode)
             sess.sync()
             if sess_dir is not None:
                 sess.save(sess_dir)

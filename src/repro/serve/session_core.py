@@ -15,18 +15,26 @@ NOT about who owns the graph lives here —
     a k-hop forward reproduces the full-graph computation for the seed rows
     exactly — on one host or on the seed's owning shard;
   * FRDC array (de)serialization helpers shared by both artifact formats.
+  * the :class:`LayerExecutor` seam of the DISTRIBUTED full pass: a family
+    forward is decomposed into :class:`LayerStep`\\ s (BN site -> per-shard
+    transform -> halo exchange -> aggregation -> combine) by
+    :func:`build_layer_program`; an executor (host-orchestrated or SPMD,
+    :mod:`repro.serve.sharded.executor`) runs the same program either as
+    eager per-shard stages or as one ``shard_map`` program per layer.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import frdc, tuner
+from repro.core import bitops, frdc, tuner
+from repro.core.binarize import BinTensor
+from repro.core.bmm import bmm, quantize_act
 from repro.core.bspmm import TRINARY_DEFAULT
 from repro.kernels import ops as kernel_ops
 from repro.models import gnn
@@ -212,6 +220,203 @@ def dinv_for_family(family: str, degrees: np.ndarray) -> Optional[np.ndarray]:
     if family == "sage":
         return 1.0 / np.maximum(degrees.astype(np.float64), 1.0)
     return None
+
+
+# ---------------------------------------------------------------------------
+# Layer programs — the distributed full pass decomposed into executor steps
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerStep:
+    """One step of a family's distributed layer program.
+
+    A step runs per shard as: optional BN (site ``bn_site`` of the frozen
+    calibration tuple — or, in calibrate mode, distributed moments computed
+    across shards) -> ``pre`` (dense per-shard transform producing the
+    exchange operand + any aux state ``post`` needs) -> halo exchange of the
+    operand (bit-packed uint32 words when ``packed``) -> aggregation
+    ``intra @ operand + halo @ exchanged`` over adjacency ``kind`` (trinary
+    popc counts when ``packed`` — integer partial sums, exact across the
+    split) -> ``post(aux, y)`` producing the next carried state. Steps with
+    ``kind=None`` skip the exchange/aggregation and feed ``pre``'s operand
+    straight to ``post`` (SAINT's trailing FC).
+
+    The carried state between steps is a single array (fp activations, or
+    the packed uint32 words of the GCN "bin" scheme's binarized hidden
+    layer) so it crosses SPMD program boundaries without pytree gymnastics.
+
+    ``payload_cols``/``payload_itemsize`` describe the exchange operand's
+    static row width — the wire-byte schedule of the step
+    (``MeshHaloPlan.payload_bytes``), recorded by the executors OUTSIDE any
+    trace so jitted steady-state passes account correctly.
+    """
+    name: str
+    kind: Optional[str]
+    packed: bool
+    bn_site: Optional[int]
+    pre: Callable
+    post: Callable
+    payload_cols: int = 0
+    payload_itemsize: int = 4
+
+    @property
+    def tag(self) -> str:
+        """Halo byte-accounting tag (stable across PR 2's benchmark keys)."""
+        return f"{self.name}/{'packed' if self.packed else 'fp'}"
+
+
+def binarize_counts(counts: jax.Array, n_feat: int) -> BinTensor:
+    """Sign-binarize summed trinary counts — the BSpMM.BBB output stage
+    (``out_scale=False``: positive scales are elided by the consumer)."""
+    counts = counts.astype(jnp.float32)
+    if counts.shape[-1] > n_feat:
+        counts = counts[:, :n_feat]
+    return BinTensor(packed=bitops.sign_bits(counts, axis=-1),
+                     scale=jnp.ones((counts.shape[0], 1), counts.dtype),
+                     n=n_feat)
+
+
+def build_layer_program(plan: SessionPlan, q) -> Tuple[LayerStep, ...]:
+    """Decompose ``plan``'s family forward into executor layer steps.
+
+    Executing the program per shard with the single-host BN constants is
+    arithmetically IDENTICAL to the family's ``*_forward_bitgnn`` over the
+    whole graph wherever the aggregation split is exact (binary layers) and
+    fp-reassociation-close elsewhere — the same invariant the PR 2
+    host-orchestrated pass relied on, now stated once and shared by both
+    executors.
+    """
+    fam = plan.family
+    if fam == "gcn" and plan.scheme == "bin":
+        n_hidden = int(q.w1.packed.shape[0])
+        n_out = int(q.w2.packed.shape[0])
+
+        def pre1(z):
+            hb = bmm(z, q.w1, "FBB", out_scale=False)
+            return hb.packed, None
+
+        def post1(aux, counts):
+            return binarize_counts(counts, n_hidden).packed
+
+        def pre2(st):
+            h1 = BinTensor(packed=st,
+                           scale=jnp.ones((st.shape[0], 1), jnp.float32),
+                           n=n_hidden)
+            return bmm(h1, q.w2, "BBF"), None
+
+        return (
+            LayerStep("layer1", "bin", True, 0, pre1, post1,
+                      payload_cols=-(-n_hidden // 32)),
+            LayerStep("layer2", "adj", False, None, pre2,
+                      lambda aux, y: y, payload_cols=n_out),
+        )
+    if fam == "gcn":
+        n_hidden = int(q.w1.packed.shape[0])
+        n_out = int(q.w2.packed.shape[0])
+
+        def pre_l(w):
+            def pre(z):
+                return bmm(quantize_act(z), w, "BBF"), None
+            return pre
+
+        return (
+            LayerStep("layer1", "adj", False, 0, pre_l(q.w1),
+                      lambda aux, y: jax.nn.relu(y), payload_cols=n_hidden),
+            LayerStep("layer2", "adj", False, 1, pre_l(q.w2),
+                      lambda aux, y: y, payload_cols=n_out),
+        )
+
+    # sage / saint: self + aggregated branch merged by ADD per layer
+    kind = "mean" if fam == "sage" else "sum"
+
+    def branch_pre(w_agg):
+        def pre(z):
+            xq = quantize_act(z)
+            return bmm(xq, w_agg, "BBF"), xq
+        return pre
+
+    def branch_post(w_self, relu):
+        def post(xq, agg):
+            h = bmm(xq, w_self, "BBF") + agg
+            return jax.nn.relu(h) if relu else h
+        return post
+
+    steps = [
+        LayerStep("layer1", kind, False, 0, branch_pre(q.w1_agg),
+                  branch_post(q.w1_self, True),
+                  payload_cols=int(q.w1_agg.packed.shape[0])),
+        LayerStep("layer2", kind, False, 1, branch_pre(q.w2_agg),
+                  branch_post(q.w2_self, fam == "saint"),
+                  payload_cols=int(q.w2_agg.packed.shape[0])),
+    ]
+    if fam == "saint":
+        steps.append(LayerStep(
+            "fc", None, False, 2,
+            lambda z: (bmm(quantize_act(z), q.w_fc, "BBF"), None),
+            lambda aux, y: y))
+    return tuple(steps)
+
+
+def apply_bn(x: jax.Array, mu: jax.Array, sd: jax.Array) -> jax.Array:
+    """Frozen-stats batch norm in the executors' bit-stable form.
+
+    XLA CPU compiles an EAGER broadcast division ``x / sd`` and the same
+    division inside a jitted program to differently-rounded code (~1 ulp),
+    which would break host-vs-SPMD bit-exactness at every BN site; the
+    multiply-by-reciprocal form is bit-stable across both, so both layer
+    executors normalize through this helper."""
+    return (x - mu) * (1.0 / sd)
+
+
+# the eps of gnn.bn_stats — shared by BOTH distributed-calibration
+# implementations (host partial sums below, SPMD psum moments in
+# serve/sharded/executor.py) so the two formulas cannot silently diverge.
+BN_EPS = 1e-5
+
+
+def moments_from_sums(s1, s2, cnt, eps: float = BN_EPS) -> tuple:
+    """(mu, sd) from sum / sum-of-squares / count partials — THE formula of
+    distributed BN calibration, shared by the host executor (python-summed
+    partials) and the SPMD executor (psum-combined partials)."""
+    mu = s1 / cnt
+    sd = jnp.sqrt(jnp.maximum(s2 / cnt - mu * mu, 0.0)) + eps
+    return mu, sd
+
+
+def distributed_moments(blocks: List[jax.Array],
+                        eps: float = BN_EPS) -> tuple:
+    """Per-feature (mu, sd) over the GLOBAL node axis from per-shard row
+    blocks — the host-side twin of the SPMD executor's psum moments (sum /
+    sum-of-squares partials combined across shards), so both executors'
+    "distributed" BN calibrations agree to reduction-order tolerance."""
+    cnt = float(sum(int(b.shape[0]) for b in blocks))
+    s1 = sum(jnp.sum(b, axis=0, keepdims=True) for b in blocks)
+    s2 = sum(jnp.sum(b * b, axis=0, keepdims=True) for b in blocks)
+    return moments_from_sums(s1, s2, cnt, eps)
+
+
+class LayerExecutor:
+    """Executes a layer program over per-shard feature blocks.
+
+    ``run_pass(program, xs, bn, calibrate=False)`` takes the per-shard
+    UNPADDED feature blocks and either the frozen BN tuple (site-indexed) or
+    ``calibrate=True`` to compute the stats from the pass itself; returns
+    ``(per-shard output blocks, collected stats or None)``. Implementations:
+    :class:`repro.serve.sharded.executor.HostLayerExecutor` (eager per-shard
+    stages, PR 2 semantics — the bit-exactness reference) and
+    :class:`repro.serve.sharded.executor.SpmdLayerExecutor` (one
+    ``shard_map`` program per layer, fused halo exchange, psum BN moments).
+    """
+    name = "?"
+
+    @property
+    def compile_count(self) -> int:
+        """Traces of the executor's jitted layer programs — constant after
+        the first pass (zero steady-state recompiles)."""
+        return 0
+
+    def run_pass(self, program, xs, bn, calibrate: bool = False):
+        raise NotImplementedError
 
 
 # ---------------------------------------------------------------------------

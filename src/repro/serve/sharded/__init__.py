@@ -8,19 +8,26 @@ k-hop routing and halo exchange.
 ``halo``     — shard-boundary row exchange: host loopback + mesh collectives
                (``shard_map``/``ppermute``), packed payloads where the math
                allows, byte accounting throughout.
+``executor`` — the distributed-pass LayerExecutor implementations: the
+               host-orchestrated reference and the SPMD path (each layer as
+               ONE shard_map program over uniformly padded stacked shards,
+               halo exchange fused in, psum BN calibration).
 ``session``  — ShardedGraphSession: per-shard bucketed serve cores +
                distributed layer-wise full pass + checkpointer artifacts.
 ``engine``   — ShardedServeEngine: the micro-batching scheduler routed over
                partitioned sessions.
 """
 from .engine import ShardedServeEngine
-from .halo import HaloStats, build_mesh_plan, gather_rows, mesh_exchange
-from .planner import ShardPart, ShardPlan, ShardPlanner
+from .executor import HostLayerExecutor, SpmdLayerExecutor
+from .halo import (HaloStats, MeshHaloPlan, build_mesh_plan, gather_rows,
+                   mesh_exchange, ring_scatter)
+from .planner import ShardPart, ShardPlan, ShardPlanner, SpmdPlan
 from .routing import RoutingTable, ShardedCSR
 from .session import ShardedGraphSession
 
 __all__ = [
     "ShardedServeEngine", "ShardedGraphSession", "ShardPlanner", "ShardPlan",
-    "ShardPart", "RoutingTable", "ShardedCSR", "HaloStats", "gather_rows",
-    "mesh_exchange", "build_mesh_plan",
+    "ShardPart", "SpmdPlan", "RoutingTable", "ShardedCSR", "HaloStats",
+    "MeshHaloPlan", "gather_rows", "mesh_exchange", "build_mesh_plan",
+    "ring_scatter", "HostLayerExecutor", "SpmdLayerExecutor",
 ]

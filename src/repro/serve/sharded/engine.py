@@ -30,7 +30,8 @@ class ShardedServeEngine(GNNServeEngine):
     def __init__(self, store: GraphStore, n_shards: int,
                  max_batch=None, mode: str = "subgraph",
                  full_cache_max_nodes: int = 200_000,
-                 keep_finished: int = 100_000, mesh=None):
+                 keep_finished: int = 100_000, mesh=None,
+                 executor: str = "host", bn_mode: str = "single_host"):
         super().__init__(store, max_batch=max_batch, mode=mode,
                          full_cache_max_nodes=full_cache_max_nodes,
                          keep_finished=keep_finished)
@@ -38,11 +39,15 @@ class ShardedServeEngine(GNNServeEngine):
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
         self.n_shards = n_shards
         self.mesh = mesh
+        self.executor = executor
+        self.bn_mode = bn_mode
         self._routing_cache = {}
 
     def _get_session(self, key: Tuple[str, ...]):
         return self.store.sharded_session(*key[:2], self.n_shards,
-                                          mesh=self.mesh)
+                                          mesh=self.mesh,
+                                          executor=self.executor,
+                                          bn_mode=self.bn_mode)
 
     def _queue_key(self, graph: str, model: str, node: int) -> tuple:
         """One FIFO per (graph, model, owning shard): every served
@@ -63,8 +68,9 @@ class ShardedServeEngine(GNNServeEngine):
         return (graph, model, owner)
 
     def _sessions(self):
-        return (s for (g, m, p), s in self.store._sharded_sessions.items()
-                if p == self.n_shards)
+        return (s for k, s in self.store._sharded_sessions.items()
+                if k[2] == self.n_shards and k[3] == self.executor
+                and k[4] == self.bn_mode)
 
     @property
     def compile_count_by_shard(self):
@@ -84,5 +90,8 @@ class ShardedServeEngine(GNNServeEngine):
                 total += b
         snap.update(n_shards=self.n_shards, halo_bytes=total,
                     halo_bytes_by_tag=halo,
-                    compiles_by_shard=self.compile_count_by_shard)
+                    compiles_by_shard=self.compile_count_by_shard,
+                    executor=self.executor, bn_mode=self.bn_mode,
+                    executor_compiles=sum(s.executor_compile_count
+                                          for s in self._sessions()))
         return snap

@@ -86,23 +86,55 @@ class MeshHaloPlan:
     ``send_idx[d-1]``: (P, m_d) local row ids shard ``t`` sends to shard
     ``(t+d) % P`` (padded with 0 — masked out by the receiver's positions).
     ``recv_pos[d-1]``: (P, m_d) positions in the RECEIVER's halo buffer
-    (padded with ``n_halo_max``, an overflow slot sliced off afterwards).
+    (padded with ``n_halo_buf``, an overflow slot sliced off afterwards).
+
+    ``n_halo_buf`` is the receive-buffer row count — ``n_halo_max`` by
+    default, or the SPMD executor's uniform tile-aligned halo pad.
+
+    ``payload_bytes`` is THE byte-accounting source for every transport that
+    runs this schedule: it is a pure function of the static plan, so jitted
+    steady-state passes record exactly one schedule's bytes per exchange —
+    never trace-time-captured counters (which would freeze at whatever the
+    first trace saw and then under-/over-count).
     """
     n_shards: int
     n_halo_max: int
     halo_sizes: List[int]
     send_idx: List[np.ndarray]
     recv_pos: List[np.ndarray]
+    n_halo_buf: Optional[int] = None
+
+    @property
+    def buf_rows(self) -> int:
+        return self.n_halo_max if self.n_halo_buf is None else self.n_halo_buf
 
     def payload_bytes(self, width: int, itemsize: int) -> int:
         """Wire bytes of one exchange (padded payloads included)."""
         return sum(int(si.size) * width * itemsize for si in self.send_idx)
 
+    def to_json(self) -> dict:
+        return dict(n_shards=self.n_shards, n_halo_max=self.n_halo_max,
+                    n_halo_buf=self.buf_rows, halo_sizes=self.halo_sizes,
+                    send_idx=[si.tolist() for si in self.send_idx],
+                    recv_pos=[rp.tolist() for rp in self.recv_pos])
 
-def build_mesh_plan(routing: RoutingTable,
-                    halo_nodes: List[np.ndarray]) -> MeshHaloPlan:
+    @classmethod
+    def from_json(cls, d: dict) -> "MeshHaloPlan":
+        return cls(n_shards=int(d["n_shards"]),
+                   n_halo_max=int(d["n_halo_max"]),
+                   halo_sizes=[int(h) for h in d["halo_sizes"]],
+                   send_idx=[np.asarray(a, np.int32) for a in d["send_idx"]],
+                   recv_pos=[np.asarray(a, np.int32) for a in d["recv_pos"]],
+                   n_halo_buf=int(d["n_halo_buf"]))
+
+
+def build_mesh_plan(routing: RoutingTable, halo_nodes: List[np.ndarray],
+                    n_halo_buf: Optional[int] = None) -> MeshHaloPlan:
     p = routing.n_shards
     n_halo_max = max([h.size for h in halo_nodes] + [1])
+    buf = n_halo_max if n_halo_buf is None else int(n_halo_buf)
+    if buf < n_halo_max:
+        raise ValueError(f"n_halo_buf {buf} < n_halo_max {n_halo_max}")
     send_idx, recv_pos = [], []
     for d in range(1, p):
         pair_send, pair_recv = [], []
@@ -115,7 +147,7 @@ def build_mesh_plan(routing: RoutingTable,
             pair_recv.append(np.nonzero(m)[0])
         width = max([a.size for a in pair_send] + [1])
         si = np.zeros((p, width), np.int32)
-        rp = np.full((p, width), n_halo_max, np.int32)    # overflow slot
+        rp = np.full((p, width), buf, np.int32)           # overflow slot
         for t in range(p):
             si[t, :pair_send[t].size] = pair_send[t]
             s = (t + d) % p
@@ -124,7 +156,33 @@ def build_mesh_plan(routing: RoutingTable,
         recv_pos.append(rp)
     return MeshHaloPlan(n_shards=p, n_halo_max=n_halo_max,
                         halo_sizes=[int(h.size) for h in halo_nodes],
-                        send_idx=send_idx, recv_pos=recv_pos)
+                        send_idx=send_idx, recv_pos=recv_pos,
+                        n_halo_buf=buf)
+
+
+def ring_perms(p: int) -> List[List[tuple]]:
+    """The P-1 ring-shift permutations of the exchange (shift d sends
+    shard t's payload to shard (t+d) % P)."""
+    return [[(t, (t + d) % p) for t in range(p)] for d in range(1, p)]
+
+
+def ring_scatter(x_block, send_idx, recv_pos, perms, n_buf: int,
+                 axis: str = "data"):
+    """Traced body of the ring halo exchange — shared by the standalone
+    :func:`mesh_exchange` transport and the SPMD layer executor's fused
+    per-layer programs.
+
+    ``x_block``: this shard's (n_local_pad, F) operand; ``send_idx`` /
+    ``recv_pos``: this shard's slices of the static schedule (one (m_d,)
+    pair per shift); returns the (n_buf, F) halo operand (rows in
+    ``halo_nodes`` order, padded rows zero — the overflow slot at
+    ``n_buf`` absorbs schedule padding and is sliced off here)."""
+    halo = jnp.zeros((n_buf + 1,) + x_block.shape[1:], x_block.dtype)
+    for sidx, rpos, perm in zip(send_idx, recv_pos, perms):
+        payload = x_block[sidx]
+        recv = jax.lax.ppermute(payload, axis, perm)
+        halo = halo.at[rpos].set(recv)
+    return halo[:n_buf]
 
 
 def mesh_exchange(mesh, blocks: List[np.ndarray], plan: MeshHaloPlan,
@@ -142,17 +200,12 @@ def mesh_exchange(mesh, blocks: List[np.ndarray], plan: MeshHaloPlan,
     stacked = np.zeros((p, n_local_max, width), dtype)
     for s, b in enumerate(blocks):
         stacked[s, :b.shape[0]] = b
-    perms = [[(t, (t + d) % p) for t in range(p)] for d in range(1, p)]
+    perms = ring_perms(p)
 
     def body(x, *sched):
-        xb = x[0]
-        halo = jnp.zeros((plan.n_halo_max + 1, width), xb.dtype)
-        for i in range(p - 1):
-            sidx, rpos = sched[2 * i][0], sched[2 * i + 1][0]
-            payload = xb[sidx]
-            recv = jax.lax.ppermute(payload, "data", perms[i])
-            halo = halo.at[rpos].set(recv)
-        return halo[None]
+        sidx = [sched[2 * i][0] for i in range(p - 1)]
+        rpos = [sched[2 * i + 1][0] for i in range(p - 1)]
+        return ring_scatter(x[0], sidx, rpos, perms, plan.buf_rows)[None]
 
     sched = []
     for i in range(p - 1):

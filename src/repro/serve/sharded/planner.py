@@ -30,7 +30,65 @@ from repro.core import frdc
 from repro.graphs import partition, sampling
 from repro.graphs.datasets import GraphData
 from repro.serve import session_core
+from .halo import MeshHaloPlan, build_mesh_plan
 from .routing import RoutingTable, ShardedCSR
+
+
+@dataclasses.dataclass
+class SpmdPlan:
+    """Uniform padded dims + halo schedule of the SPMD layer executor.
+
+    Every shard's FRDC operands are padded to ONE static shape —
+    ``(n_local_pad, n_local_pad)`` intra / ``(n_local_pad, n_halo_pad)``
+    halo, per-kind shared group counts — following the bit-tensor-core
+    batching insight (arXiv:2006.16578) that uniform bit-packed tiles are
+    what let a whole layer run as a single program: stacked along a leading
+    shard axis they become ``shard_map`` operands, and the ring exchange
+    schedule (``mesh_plan``, overflow slot at ``n_halo_pad``) is fused into
+    the same program. Serialized as the ``spmd`` field of ``routing.json``;
+    artifacts predating the field rebuild it from the shard parts.
+    """
+    n_shards: int
+    n_local_pad: int
+    n_halo_pad: int
+    intra_groups: Dict[str, int]
+    halo_groups: Dict[str, int]
+    mesh_plan: MeshHaloPlan
+
+    def to_json(self) -> dict:
+        return dict(n_shards=self.n_shards, n_local_pad=self.n_local_pad,
+                    n_halo_pad=self.n_halo_pad,
+                    intra_groups=dict(self.intra_groups),
+                    halo_groups=dict(self.halo_groups),
+                    mesh_plan=self.mesh_plan.to_json())
+
+    @classmethod
+    def from_json(cls, d: dict) -> "SpmdPlan":
+        return cls(n_shards=int(d["n_shards"]),
+                   n_local_pad=int(d["n_local_pad"]),
+                   n_halo_pad=int(d["n_halo_pad"]),
+                   intra_groups={k: int(v)
+                                 for k, v in d["intra_groups"].items()},
+                   halo_groups={k: int(v)
+                                for k, v in d["halo_groups"].items()},
+                   mesh_plan=MeshHaloPlan.from_json(d["mesh_plan"]))
+
+
+def build_spmd_plan(routing: RoutingTable, parts: List["ShardPart"]
+                    ) -> SpmdPlan:
+    """Derive the uniform SPMD dims + padded halo schedule from shard parts
+    (tile-aligned covers of every shard's local/halo/group extents)."""
+    n_local_pad = max(frdc.align_tile(p.n_local) for p in parts)
+    n_halo_pad = max(frdc.align_tile(p.n_halo) for p in parts)
+    kinds = list(parts[0].intra)
+    intra_groups = {k: max(p.intra[k].n_groups for p in parts)
+                    for k in kinds}
+    halo_groups = {k: max(p.halo[k].n_groups for p in parts) for k in kinds}
+    mesh_plan = build_mesh_plan(routing, [p.halo_nodes for p in parts],
+                                n_halo_buf=n_halo_pad)
+    return SpmdPlan(n_shards=len(parts), n_local_pad=n_local_pad,
+                    n_halo_pad=n_halo_pad, intra_groups=intra_groups,
+                    halo_groups=halo_groups, mesh_plan=mesh_plan)
 
 
 @dataclasses.dataclass
@@ -62,10 +120,18 @@ class ShardPlan:
     parts: List[ShardPart]
     n_nodes: int
     n_edges: int
+    spmd: Optional[SpmdPlan] = None
 
     @property
     def n_shards(self) -> int:
         return len(self.parts)
+
+    def spmd_plan(self) -> SpmdPlan:
+        """The uniform-dims SPMD execution plan (built on demand for plans
+        restored from pre-``spmd`` artifacts, recorded otherwise)."""
+        if self.spmd is None:
+            self.spmd = build_spmd_plan(self.routing, self.parts)
+        return self.spmd
 
     def sharded_csr(self) -> ShardedCSR:
         return ShardedCSR.from_arrays(
@@ -157,5 +223,7 @@ class ShardPlanner:
                 intra=intra, halo=halo_m, indptr=csr.indptr,
                 indices=csr.indices,
                 dinv=None if dinv is None else dinv[lo:hi]))
-        return ShardPlan(family=family, routing=routing, parts=parts,
+        plan = ShardPlan(family=family, routing=routing, parts=parts,
                          n_nodes=n, n_edges=int(rows.size))
+        plan.spmd_plan()            # record the uniform dims + halo schedule
+        return plan

@@ -25,15 +25,30 @@ halo adjacency over the boundary edges. Serving has two paths:
     reassociate across the intra/halo split, so it matches single-host
     full-graph logits to fp tolerance (binary layers: exactly).
 
-BN calibration runs one full-graph pass through the shared
-:func:`~repro.serve.session_core.family_forward` (bit-identical to the
-single-host session's calibration — the invariant behind the exactness
-guarantee above); sharded/sampled calibration for beyond-memory graphs is a
-ROADMAP item.
+The pass itself is delegated to a :class:`~repro.serve.session_core.
+LayerExecutor` running the family's layer program (``executor=``):
+
+  * ``"host"`` — PR 2's host-orchestrated per-shard stages (the
+    bit-exactness reference, runs on any device count);
+  * ``"spmd"`` — each layer as ONE ``shard_map`` program over uniformly
+    padded stacked shards with the halo exchange fused in
+    (:mod:`.executor`); requires a mesh with a ``data`` axis of exactly P
+    devices and matches the host executor bit-for-bit under shared BN
+    constants.
+
+BN calibration (``bn_mode=``): ``"single_host"`` runs one full-graph pass
+through the shared :func:`~repro.serve.session_core.family_forward`
+(bit-identical to the single-host session's calibration — the invariant
+behind the exactness guarantee above); ``"distributed"`` computes each BN
+site's (mu, sd) from the distributed pass itself (psum moments across
+shards) so no host ever needs the whole graph — serving drift vs the anchor
+is quantified in ``benchmarks/bench_sharded_serve.py``.
 
 Artifacts (per-shard FRDC + CSR + routing table) serialize through the
-checkpointer with a ``routing.json`` sidecar; a restore re-builds the
-session without re-partitioning or re-tuning.
+checkpointer with a ``routing.json`` sidecar (now carrying the ``spmd``
+uniform-dims/schedule field; older artifacts without it still load and
+rebuild it); a restore re-builds the session without re-partitioning or
+re-tuning.
 """
 from __future__ import annotations
 
@@ -46,28 +61,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
-from repro.core import bitops, frdc
-from repro.core.binarize import BinTensor
-from repro.core.bmm import bmm, quantize_act
-from repro.core.bspmm import _pad_rows, _spmm_bits, bspmm
-from repro.models import gnn
+from repro.core import frdc
+from repro.launch.mesh import make_shard_mesh
 from repro.serve import session_core
 from repro.serve.session_core import ServeCore, SessionPlan
 from . import halo as halo_mod
-from .planner import ShardPart, ShardPlan
+from .executor import HostLayerExecutor, SpmdLayerExecutor
+from .planner import ShardPart, ShardPlan, SpmdPlan
 from .routing import RoutingTable, ShardedCSR
 from .routing import khop_subgraph as routed_khop_subgraph
 
-
-def _binarize_counts(counts: jax.Array, n_feat: int) -> BinTensor:
-    """Sign-binarize summed trinary counts — the BSpMM.BBB output stage
-    (``out_scale=False``: positive scales are elided by the consumer)."""
-    counts = counts.astype(jnp.float32)
-    if counts.shape[-1] > n_feat:
-        counts = counts[:, :n_feat]
-    return BinTensor(packed=bitops.sign_bits(counts, axis=-1),
-                     scale=jnp.ones((counts.shape[0], 1), counts.dtype),
-                     n=n_feat)
+EXECUTORS = ("host", "spmd")
+BN_MODES = ("single_host", "distributed")
 
 
 class ShardedGraphSession:
@@ -75,10 +80,16 @@ class ShardedGraphSession:
 
     def __init__(self, graph, model, plan: SessionPlan, qparams,
                  shard_plan: ShardPlan, khop: int = 2, max_batch: int = 32,
-                 use_pallas: bool = False, mesh=None):
+                 use_pallas: bool = False, mesh=None,
+                 executor: str = "host", bn_mode: str = "single_host"):
         if shard_plan.family != plan.family:
             raise ValueError(f"shard plan family {shard_plan.family!r} != "
                              f"session family {plan.family!r}")
+        if executor not in EXECUTORS:
+            raise ValueError(f"unknown executor {executor!r}; "
+                             f"have {EXECUTORS}")
+        if bn_mode not in BN_MODES:
+            raise ValueError(f"unknown bn_mode {bn_mode!r}; have {BN_MODES}")
         self.graph = graph
         self.model = model
         self.plan = plan
@@ -89,6 +100,8 @@ class ShardedGraphSession:
         self.max_batch = max_batch
         self.use_pallas = use_pallas
         self.mesh = mesh
+        self.executor = executor
+        self.bn_mode = bn_mode
         self.key = f"{graph.name}__{model.name}__P{shard_plan.n_shards}"
         self.feature_version = -1
         self.bn: Optional[tuple] = None
@@ -99,7 +112,8 @@ class ShardedGraphSession:
         self._scsr: ShardedCSR = shard_plan.sharded_csr()
         self._adj_full: Optional[Dict[str, frdc.FRDCMatrix]] = None
         self._jit_calibrate = None
-        self._mesh_plan = None
+        self._executor_obj: Optional[session_core.LayerExecutor] = None
+        self.program = session_core.build_layer_program(plan, qparams)
         # one bucketed serve core per shard; a routed subgraph can span the
         # whole graph, so every core's node cap is the full padded graph
         node_cap = -(-shard_plan.n_nodes // frdc.TILE) * frdc.TILE
@@ -147,7 +161,43 @@ class ShardedGraphSession:
         transport-independent; only the exchange mechanism changes."""
         if mesh is not self.mesh:
             self.mesh = mesh
-            self._mesh_plan = None
+            self._executor_obj = None
+
+    # ------------------------------------------------------- executor ------
+    @property
+    def layer_executor(self) -> session_core.LayerExecutor:
+        """The distributed-pass executor (built lazily; rebuilt on
+        ``set_mesh``). ``executor="spmd"`` auto-builds a shard mesh when
+        none was attached and raises when the host cannot supply one."""
+        if self._executor_obj is None:
+            if self.executor == "spmd":
+                mesh = self.mesh if self._use_mesh() else \
+                    make_shard_mesh(self.n_shards)
+                if mesh is None:
+                    raise RuntimeError(
+                        f"executor='spmd' needs {self.n_shards} devices "
+                        f"(have {len(jax.devices())}); force them with "
+                        f"XLA_FLAGS=--xla_force_host_platform_device_count")
+                self.mesh = mesh
+                self._executor_obj = SpmdLayerExecutor(
+                    self.parts, self.shard_plan.spmd_plan(), self.plan,
+                    self.halo_stats, mesh, use_pallas=self.use_pallas)
+            else:
+                self._executor_obj = HostLayerExecutor(
+                    self.parts, self.shard_plan.spmd_plan(), self.plan,
+                    self.halo_stats, self.routing,
+                    mesh=self.mesh if self._use_mesh() else None,
+                    use_pallas=self.use_pallas)
+        return self._executor_obj
+
+    @property
+    def executor_compile_count(self) -> int:
+        """Jit traces of the distributed-pass layer programs — exactly one
+        per (layer program, mode, shapes) in steady state for both
+        executors (the host executor traces a stage + an operand program
+        per exchange layer; SPMD one shard_map program per layer)."""
+        return (0 if self._executor_obj is None
+                else self._executor_obj.compile_count)
 
     # ------------------------------------------------------- calibrate -----
     def _calibrate_fn(self):
@@ -178,135 +228,38 @@ class ShardedGraphSession:
         return self._jit_calibrate
 
     def sync(self) -> None:
-        """Adopt the store's current features: recalibrate BN (full-graph
-        pass through the shared forward) and refresh the per-shard logits
-        caches through the DISTRIBUTED layer-wise pass. No-op when current."""
+        """Adopt the store's current features: recalibrate BN and refresh
+        the per-shard logits caches through the DISTRIBUTED layer-wise pass
+        (the configured executor). ``bn_mode="single_host"`` freezes the
+        stats from the shared full-graph anchor forward first;
+        ``"distributed"`` computes them inside the pass itself (psum
+        moments), so one run both calibrates and fills the caches and no
+        host ever materializes the full graph. No-op when current."""
         if self.feature_version == self.graph.version:
             return
         invalidated = self.feature_version >= 0
-        _, bn = self._calibrate_fn()(jnp.asarray(self.graph.data.x))
-        self.bn = bn
-        self._caches = self._sharded_full_pass()
+        if self.bn_mode == "distributed":
+            self._caches, bn = self.layer_executor.run_pass(
+                self.program, self._x_blocks(), None, calibrate=True)
+            self.bn = bn
+        else:
+            _, bn = self._calibrate_fn()(jnp.asarray(self.graph.data.x))
+            self.bn = bn
+            self._caches, _ = self.layer_executor.run_pass(
+                self.program, self._x_blocks(), self.bn)
         self._assembled = None
         self.feature_version = self.graph.version
         if invalidated:
             self._invalidations += 1
 
     # ----------------------------------------------------- full pass -------
-    def _exchange(self, blocks: List[np.ndarray], tag: str
-                  ) -> List[np.ndarray]:
-        """Fetch every shard's halo rows of a per-shard row-block operand —
-        device collectives over the mesh when one is attached, host loopback
-        otherwise. Returns per-shard (max(n_halo,1), F) operands (zero-padded
-        so degenerate halo matrices aggregate exact zeros)."""
-        blocks = [np.asarray(b) for b in blocks]
-        if self._use_mesh():
-            if self._mesh_plan is None:
-                self._mesh_plan = halo_mod.build_mesh_plan(
-                    self.routing, [p.halo_nodes for p in self.parts])
-            gathered = halo_mod.mesh_exchange(
-                self.mesh, blocks, self._mesh_plan,
-                stats=self.halo_stats, tag=tag)
-        else:
-            gathered = [
-                halo_mod.gather_rows(blocks, self.routing, p.halo_nodes,
-                                     home=p.index, stats=self.halo_stats,
-                                     tag=tag)
-                for p in self.parts]
-        out = []
-        for p, g in zip(self.parts, gathered):
-            buf = np.zeros((max(p.n_halo, 1),) + blocks[0].shape[1:],
-                           blocks[0].dtype)
-            buf[:p.n_halo] = g
-            out.append(buf)
-        return out
-
-    def _partial_fbf(self, kind: str, blocks: List, tag: str) -> List:
-        """out_s = intra_s @ local_s + halo_s @ (exchanged remote rows) —
-        the distributed BSpMM.FBF. The halo operand crosses the wire in fp.
-        A shard that owns no nodes (edge-balanced cuts on extreme skew)
-        contributes an empty row block — its phantom 1-row FRDC placeholder
-        must not run, it would gather from the 0-row operand."""
-        halo_in = self._exchange(blocks, tag)
-        out = []
-        for p, loc, rem in zip(self.parts, blocks, halo_in):
-            if p.n_local == 0:
-                out.append(jnp.zeros((0, np.asarray(loc).shape[1]),
-                                     jnp.float32))
-                continue
-            y = bspmm(p.intra[kind], jnp.asarray(loc), "FBF")
-            y = y + bspmm(p.halo[kind], jnp.asarray(rem), "FBF")
-            out.append(y)
-        return out
-
-    def _partial_bbb(self, kind: str, packed_blocks: List[np.ndarray],
-                     n_feat: int, tag: str) -> List[BinTensor]:
-        """Distributed BSpMM.BBB: per-shard trinary popc counts over the
-        intra bits plus the halo bits — integer partial sums, so the split
-        is EXACT — then one sign binarization. The exchanged operand is the
-        bit-packed activation block (uint32 words, 32x smaller than fp)."""
-        halo_in = self._exchange(packed_blocks, tag)
-        mode = self.plan.trinary_mode
-        out = []
-        for p, loc, rem in zip(self.parts, packed_blocks, halo_in):
-            if p.n_local == 0:
-                out.append(BinTensor(
-                    packed=jnp.zeros((0, np.asarray(loc).shape[1]),
-                                     jnp.uint32),
-                    scale=jnp.ones((0, 1), jnp.float32), n=n_feat))
-                continue
-            counts = _spmm_bits(p.intra[kind],
-                                _pad_rows(jnp.asarray(loc), frdc.TILE), mode)
-            counts = counts + _spmm_bits(
-                p.halo[kind], _pad_rows(jnp.asarray(rem), frdc.TILE), mode)
-            out.append(_binarize_counts(counts, n_feat))
-        return out
-
-    def _sharded_full_pass(self) -> List[np.ndarray]:
-        """Layer-wise distributed inference with frozen BN stats; returns the
-        per-shard logits blocks."""
-        fam, q, bn = self.plan.family, self.qparams, self.bn
-        xs = [jnp.asarray(b) for b in self._x_blocks()]
-        if fam == "gcn" and self.plan.scheme == "bin":
-            z = [gnn.batch_norm(x, stats=bn[0]) for x in xs]
-            hb = [bmm(zz, q.w1, "FBB", out_scale=False) for zz in z]
-            n_hidden = hb[0].n
-            h1 = self._partial_bbb("bin", [np.asarray(t.packed) for t in hb],
-                                   n_hidden, tag="layer1/packed")
-            h2 = [bmm(t, q.w2, "BBF") for t in h1]
-            out = self._partial_fbf("adj", h2, tag="layer2/fp")
-        elif fam == "gcn":
-            z1 = [quantize_act(gnn.batch_norm(x, stats=bn[0])) for x in xs]
-            t1 = [bmm(zz, q.w1, "BBF") for zz in z1]
-            h = [jax.nn.relu(y)
-                 for y in self._partial_fbf("adj", t1, tag="layer1/fp")]
-            z2 = [quantize_act(gnn.batch_norm(hh, stats=bn[1])) for hh in h]
-            t2 = [bmm(zz, q.w2, "BBF") for zz in z2]
-            out = self._partial_fbf("adj", t2, tag="layer2/fp")
-        elif fam == "sage":
-            xq = [quantize_act(gnn.batch_norm(x, stats=bn[0])) for x in xs]
-            a1 = [bmm(v, q.w1_agg, "BBF") for v in xq]
-            agg1 = self._partial_fbf("mean", a1, tag="layer1/fp")
-            h = [jax.nn.relu(bmm(v, q.w1_self, "BBF") + g)
-                 for v, g in zip(xq, agg1)]
-            hq = [quantize_act(gnn.batch_norm(hh, stats=bn[1])) for hh in h]
-            a2 = [bmm(v, q.w2_agg, "BBF") for v in hq]
-            agg2 = self._partial_fbf("mean", a2, tag="layer2/fp")
-            out = [bmm(v, q.w2_self, "BBF") + g for v, g in zip(hq, agg2)]
-        else:                                                   # saint
-            xq = [quantize_act(gnn.batch_norm(x, stats=bn[0])) for x in xs]
-            a1 = [bmm(v, q.w1_agg, "BBF") for v in xq]
-            agg1 = self._partial_fbf("sum", a1, tag="layer1/fp")
-            h = [jax.nn.relu(bmm(v, q.w1_self, "BBF") + g)
-                 for v, g in zip(xq, agg1)]
-            hq = [quantize_act(gnn.batch_norm(hh, stats=bn[1])) for hh in h]
-            a2 = [bmm(v, q.w2_agg, "BBF") for v in hq]
-            agg2 = self._partial_fbf("sum", a2, tag="layer2/fp")
-            h2 = [jax.nn.relu(bmm(v, q.w2_self, "BBF") + g)
-                  for v, g in zip(hq, agg2)]
-            out = [bmm(quantize_act(gnn.batch_norm(hh, stats=bn[2])),
-                       q.w_fc, "BBF") for hh in h2]
-        return [np.asarray(o) for o in out]
+    def run_distributed_pass(self) -> List[np.ndarray]:
+        """One distributed full pass with the CURRENT frozen calibration
+        (no cache mutation) — the benchmark's executor latency probe."""
+        self.sync()
+        blocks, _ = self.layer_executor.run_pass(
+            self.program, self._x_blocks(), self.bn)
+        return blocks
 
     # ------------------------------------------------------ full path ------
     def full_logits(self) -> np.ndarray:
@@ -425,6 +378,7 @@ class ShardedGraphSession:
             khop=self.khop, max_batch=self.max_batch,
             n_shards=self.n_shards,
             routing=self.routing.to_json(),
+            spmd=self.shard_plan.spmd_plan().to_json(),
             shards=[dict(
                 row_start=p.row_start, row_end=p.row_end, n_halo=p.n_halo,
                 intra_dims={k: [m.n_rows, m.n_cols, m.nnz]
@@ -437,9 +391,14 @@ class ShardedGraphSession:
     @classmethod
     def load(cls, directory: Path, graph, model, khop: Optional[int] = None,
              max_batch: Optional[int] = None, use_pallas: bool = False,
-             mesh=None) -> Optional["ShardedGraphSession"]:
+             mesh=None, executor: str = "host",
+             bn_mode: str = "single_host"
+             ) -> Optional["ShardedGraphSession"]:
         """Restore a sharded artifact WITHOUT re-partitioning or re-tuning;
-        returns None on any mismatch so the caller replans."""
+        returns None on any mismatch so the caller replans. ``executor`` /
+        ``bn_mode`` are runtime choices, not artifact properties — any
+        artifact serves under either executor; pre-``spmd``-field sidecars
+        rebuild the uniform-dims plan from the restored parts."""
         directory = Path(directory)
         sidecar_path = directory / "routing.json"
         if not sidecar_path.exists():
@@ -499,10 +458,13 @@ class ShardedGraphSession:
                 indptr=np.asarray(st["indptr"], np.int64),
                 indices=np.asarray(st["indices"], np.int64),
                 dinv=(np.asarray(st["dinv"]) if has_dinv else None)))
+        spmd = (SpmdPlan.from_json(sidecar["spmd"])
+                if "spmd" in sidecar else None)
         shard_plan = ShardPlan(family=fam, routing=routing, parts=parts,
                                n_nodes=int(graph.data.n_nodes),
-                               n_edges=int(graph.data.n_edges))
+                               n_edges=int(graph.data.n_edges), spmd=spmd)
         return cls(graph, model, plan,
                    session_core.coerce_quant(state["qparams"]), shard_plan,
                    khop=sidecar["khop"], max_batch=sidecar["max_batch"],
-                   use_pallas=use_pallas, mesh=mesh)
+                   use_pallas=use_pallas, mesh=mesh, executor=executor,
+                   bn_mode=bn_mode)
