@@ -39,8 +39,10 @@ def _serve_wave(engine: GNNServeEngine, graph: str, model: str,
 
 
 def _bench_mode(store: GraphStore, family: str, mode: str, n_queries: int,
-                n_nodes: int, batch: int, seed: int = 0) -> dict:
-    engine = GNNServeEngine(store, max_batch=batch, mode=mode)
+                n_nodes: int, batch: int, seed: int = 0,
+                pipeline_depth: int = 0) -> dict:
+    engine = GNNServeEngine(store, max_batch=batch, mode=mode,
+                            pipeline_depth=pipeline_depth)
     warm_compiles = engine.warmup("bench", family)
     c0 = engine.compile_count
     nodes = np.random.default_rng(seed).integers(0, n_nodes, size=n_queries)
@@ -48,6 +50,7 @@ def _bench_mode(store: GraphStore, family: str, mode: str, n_queries: int,
     snap = engine.snapshot()
     snap["warmup_compiles"] = warm_compiles
     snap["steady_state_compiles"] = engine.compile_count - c0
+    engine.close()
     return snap
 
 
@@ -84,6 +87,19 @@ def run(full: bool = False) -> dict:
                     f"p99_ms={lat['p99_ms']:.2f};"
                     f"hit_rate={snap['cache_hit_rate']:.2f};"
                     f"steady_compiles={snap['steady_state_compiles']}")
+        # the pipelined subgraph loop: extraction of batch i+1 overlaps the
+        # in-flight forward of batch i (bit-exact vs the serial rows above)
+        snap = _bench_mode(store, fam, "subgraph", n_queries, d.n_nodes,
+                           batch, pipeline_depth=2)
+        fam_out["subgraph_pipelined"] = snap
+        bd = snap["batch_breakdown"]
+        csv_row(f"serve_gnn/{fam}/subgraph_pipelined",
+                1e6 / max(snap["qps"], 1e-9),
+                f"qps={snap['qps']:.1f};"
+                f"overlap={snap['overlap_ratio']:.2f};"
+                f"extract_p50_ms={bd['extract']['p50_ms']:.2f};"
+                f"compute_p50_ms={bd['compute']['p50_ms']:.2f};"
+                f"steady_compiles={snap['steady_state_compiles']}")
         summary["families"][fam] = fam_out
 
     RESULTS.mkdir(parents=True, exist_ok=True)

@@ -18,7 +18,13 @@ Two additional sections per family x P:
     runs standalone — and records SPMD/host bit-equality);
   * ``bn_calibration_drift`` — distributed BN calibration (psum moments
     from the pass itself) vs the single-host anchor: max |logit delta| and
-    argmax agreement.
+    argmax agreement;
+  * ``pipeline`` — the double-buffered extract/compute engine with
+    halo-aware batch formation vs the strict-FIFO serial engine on the
+    identical query stream: overlap ratio, per-stage breakdown, and the
+    MEASURED ``serve/x`` halo bytes saved by co-batching seeds that share
+    halo tiles (``--pipeline`` additionally switches the main engine
+    benches to the pipelined loop).
 
 Emits CSV rows like every other section plus
 ``results/BENCH_sharded_serve.json``.
@@ -98,10 +104,57 @@ def _bench_engine(engine, fam: str, nodes: np.ndarray, batch: int) -> dict:
     snap = engine.snapshot()
     snap["warmup_compiles"] = warm
     snap["steady_state_compiles"] = engine.compile_count - c0
+    engine.close()
     return snap
 
 
-def run(full: bool = False, executor: str = "host") -> dict:
+PIPELINE_DEPTH = 2
+
+
+def _pipeline_compare(store, fam: str, p: int, executor: str,
+                      nodes: np.ndarray, batch: int) -> dict:
+    """Pipelined + halo-aware engine vs the strict-FIFO serial engine on
+    the identical query stream (submitted up-front so batch formation has a
+    real queue to group over): overlap ratio, stage breakdown, and the
+    MEASURED ``serve/x`` halo bytes each run actually gathered — the delta
+    is what halo-aware co-batching saved."""
+    sess = store.sharded_session("bench", fam, p, executor=executor)
+
+    def run_one(halo_aware: bool, depth: int):
+        engine = ShardedServeEngine(store, p, max_batch=batch,
+                                    mode="subgraph", executor=executor,
+                                    halo_aware=halo_aware,
+                                    pipeline_depth=depth)
+        engine.warmup("bench", fam)
+        c0 = engine.compile_count
+        b0 = sess.halo_stats.bytes_by_tag.get("serve/x", 0)
+        engine.submit_many("bench", fam, nodes)
+        engine.run_until_drained()
+        moved = sess.halo_stats.bytes_by_tag.get("serve/x", 0) - b0
+        snap = engine.snapshot()
+        snap["steady_state_compiles"] = engine.compile_count - c0
+        engine.close()
+        return snap, moved
+
+    fifo_snap, fifo_bytes = run_one(False, 0)
+    aware_snap, aware_bytes = run_one(True, PIPELINE_DEPTH)
+    return dict(
+        pipeline_depth=PIPELINE_DEPTH,
+        overlap_ratio=aware_snap["overlap_ratio"],
+        batch_breakdown=aware_snap["batch_breakdown"],
+        qps_fifo_serial=fifo_snap["qps"],
+        qps_pipelined=aware_snap["qps"],
+        serve_x_bytes_fifo=fifo_bytes,
+        serve_x_bytes_halo_aware=aware_bytes,
+        halo_bytes_saved_measured=fifo_bytes - aware_bytes,
+        halo_bytes_saved_est=aware_snap["halo_bytes_saved"],
+        halo_tiles_shared=aware_snap["halo_tiles_shared"],
+        steady_state_compiles=aware_snap["steady_state_compiles"],
+    )
+
+
+def run(full: bool = False, executor: str = "host",
+        pipeline: bool = False) -> dict:
     # the SPMD comparison needs P host devices; only effective when jax has
     # not initialized a backend yet (standalone runs) — otherwise the SPMD
     # columns degrade to None and the host columns still emit. The CPU pin
@@ -128,10 +181,12 @@ def run(full: bool = False, executor: str = "host") -> dict:
         store.register_model(fam, fam, init(key, d.x.shape[1], hidden,
                                             d.n_classes))
 
+    engine_depth = PIPELINE_DEPTH if pipeline else 0
     summary: dict = dict(dataset="cora", scale=scale, n_nodes=d.n_nodes,
                          n_edges=d.n_edges, n_queries=n_queries,
                          batch=batch, shard_counts=list(SHARD_COUNTS),
                          engine_executor=executor, spmd_available=spmd_ok,
+                         engine_pipeline_depth=engine_depth,
                          families={})
     rng = np.random.default_rng(0)
     nodes = rng.integers(0, d.n_nodes, size=n_queries)
@@ -139,7 +194,8 @@ def run(full: bool = False, executor: str = "host") -> dict:
     for fam in FAMILY_INITS:
         fam_out: dict = {}
         single = _bench_engine(
-            GNNServeEngine(store, max_batch=batch, mode="subgraph"),
+            GNNServeEngine(store, max_batch=batch, mode="subgraph",
+                           pipeline_depth=engine_depth),
             fam, nodes, batch)
         fam_out["single"] = single
         csv_row(f"sharded_serve/{fam}/single",
@@ -149,7 +205,8 @@ def run(full: bool = False, executor: str = "host") -> dict:
                 f"p99_ms={single['latency']['p99_ms']:.2f}")
         for p in SHARD_COUNTS:
             engine = ShardedServeEngine(store, p, max_batch=batch,
-                                        mode="subgraph", executor=executor)
+                                        mode="subgraph", executor=executor,
+                                        pipeline_depth=engine_depth)
             snap = _bench_engine(engine, fam, nodes, batch)
             sess = store.sharded_session("bench", fam, p,
                                          executor=executor)
@@ -163,7 +220,19 @@ def run(full: bool = False, executor: str = "host") -> dict:
                 store, fam, p, spmd_ok, pass_repeats)
             snap["bn_calibration_drift"] = _bn_drift(
                 store, fam, p, "spmd" if spmd_ok else "host")
+            snap["pipeline"] = _pipeline_compare(store, fam, p, executor,
+                                                 nodes, batch)
             fam_out[f"P{p}"] = snap
+            pipe = snap["pipeline"]
+            csv_row(f"sharded_serve/{fam}/P{p}/pipeline",
+                    1e6 / max(pipe["qps_pipelined"], 1e-9),
+                    f"qps={pipe['qps_pipelined']:.1f};"
+                    f"overlap={pipe['overlap_ratio']:.2f};"
+                    f"serve_x_fifo={pipe['serve_x_bytes_fifo']};"
+                    f"serve_x_halo_aware="
+                    f"{pipe['serve_x_bytes_halo_aware']};"
+                    f"halo_saved={pipe['halo_bytes_saved_measured']};"
+                    f"steady_compiles={pipe['steady_state_compiles']}")
             halo = ";".join(f"{t.replace('/', '_')}={b}"
                             for t, b in
                             sorted(snap["full_pass_halo_bytes"].items()))
@@ -199,5 +268,10 @@ if __name__ == "__main__":
     ap.add_argument("--executor", choices=("host", "spmd"), default="host",
                     help="executor the sharded ENGINE benches run with; "
                     "the host-vs-SPMD full-pass comparison always emits")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="run the engine benches with the double-buffered "
+                    "extract/compute pipeline (depth "
+                    f"{PIPELINE_DEPTH}); the pipelined-vs-FIFO comparison "
+                    "section always emits")
     args = ap.parse_args()
-    run(full=args.full, executor=args.executor)
+    run(full=args.full, executor=args.executor, pipeline=args.pipeline)

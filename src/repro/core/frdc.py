@@ -66,8 +66,15 @@ class FRDCMatrix(NamedTuple):
 
 def from_coo(rows: np.ndarray, cols: np.ndarray, n_rows: int, n_cols: int,
              row_scale: Optional[np.ndarray] = None,
-             col_scale: Optional[np.ndarray] = None) -> FRDCMatrix:
-    """Build FRDC from an edge list (host-side, numpy)."""
+             col_scale: Optional[np.ndarray] = None,
+             device: bool = True) -> FRDCMatrix:
+    """Build FRDC from an edge list (host-side, numpy).
+
+    ``device=False`` keeps the arrays numpy-backed — the serving EXTRACT
+    stage builds per-batch subgraph matrices with it so extraction stays
+    pure host work (no device puts, no eager-op XLA compiles for every
+    fresh subgraph shape); the jit call boundary converts them on launch.
+    """
     rows = np.asarray(rows, np.int64)
     cols = np.asarray(cols, np.int64)
     if rows.size:
@@ -119,13 +126,16 @@ def from_coo(rows: np.ndarray, cols: np.ndarray, n_rows: int, n_cols: int,
     if g == 0:  # degenerate: single zero group mapped to row 0
         group_first[0] = 1
 
+    xp = jnp if device else np
     return FRDCMatrix(
-        tiles=jnp.asarray(tiles), col_idx=jnp.asarray(col_idx),
-        group_row=jnp.asarray(group_row), group_first=jnp.asarray(group_first),
-        grp_ptr=jnp.asarray(grp_ptr), n_rows=int(n_rows), n_cols=int(n_cols),
+        tiles=xp.asarray(tiles), col_idx=xp.asarray(col_idx),
+        group_row=xp.asarray(group_row), group_first=xp.asarray(group_first),
+        grp_ptr=xp.asarray(grp_ptr), n_rows=int(n_rows), n_cols=int(n_cols),
         nnz=int(rows.size),
-        row_scale=None if row_scale is None else jnp.asarray(row_scale, jnp.float32),
-        col_scale=None if col_scale is None else jnp.asarray(col_scale, jnp.float32),
+        row_scale=(None if row_scale is None
+                   else xp.asarray(row_scale, xp.float32)),
+        col_scale=(None if col_scale is None
+                   else xp.asarray(col_scale, xp.float32)),
     )
 
 
@@ -203,29 +213,35 @@ def pad_frdc(m: FRDCMatrix, n_rows: int, n_cols: Optional[int] = None,
     that mean, so those two variants are NOT padding-invariant on scaled
     adjacencies. Exact for everything the serving plans run: FBF/FBB, BBB,
     and B?F on unscaled (0/1) adjacencies.
+
+    Array-namespace agnostic: a numpy-backed matrix (``from_coo(device=
+    False)``, the serving extract stage) pads with numpy — no device work
+    and no per-shape eager-op compiles on the per-batch hot path; a
+    device-backed matrix pads with jnp exactly as before.
     """
     n_cols = n_rows if n_cols is None else n_cols
     if n_rows < m.n_rows or n_cols < m.n_cols:
         raise ValueError(f"bucket ({n_rows},{n_cols}) smaller than matrix "
                          f"({m.n_rows},{m.n_cols})")
+    xp = np if isinstance(m.tiles, np.ndarray) else jnp
     g = m.n_groups
     n_groups = g if n_groups is None else max(n_groups, g)
     pad_g = n_groups - g
     n_tr = -(-n_rows // TILE)
-    grp_ptr = jnp.concatenate([
+    grp_ptr = xp.concatenate([
         m.grp_ptr,
-        jnp.full((n_tr - m.n_tile_rows,), m.grp_ptr[-1], jnp.int32)])
+        xp.full((n_tr - m.n_tile_rows,), m.grp_ptr[-1], xp.int32)])
 
     def _pad_scale(s, n_old, n_new):
         if s is None:
             return None
-        return jnp.concatenate([s, jnp.ones((n_new - n_old,), s.dtype)])
+        return xp.concatenate([s, xp.ones((n_new - n_old,), s.dtype)])
 
     return FRDCMatrix(
-        tiles=jnp.pad(m.tiles, ((0, pad_g), (0, 0))),
-        col_idx=jnp.pad(m.col_idx, ((0, pad_g), (0, 0))),
-        group_row=jnp.pad(m.group_row, (0, pad_g)),
-        group_first=jnp.pad(m.group_first, (0, pad_g)),
+        tiles=xp.pad(m.tiles, ((0, pad_g), (0, 0))),
+        col_idx=xp.pad(m.col_idx, ((0, pad_g), (0, 0))),
+        group_row=xp.pad(m.group_row, (0, pad_g)),
+        group_first=xp.pad(m.group_first, (0, pad_g)),
         grp_ptr=grp_ptr, n_rows=int(n_rows), n_cols=int(n_cols), nnz=m.nnz,
         row_scale=_pad_scale(m.row_scale, m.n_rows, n_rows),
         col_scale=_pad_scale(m.col_scale, m.n_cols, n_cols),

@@ -109,6 +109,24 @@ def khop_subgraph(csr: CSRGraph, seeds: np.ndarray, k: int
     return sub_nodes, sub_edges, seed_pos
 
 
+class ExtractedSubgraph(NamedTuple):
+    """One extracted k-hop serving subgraph — the unit of work the serve
+    pipeline's EXTRACT stage hands to the compute stage. Pure host arrays:
+    producing one involves no device work, so extraction can run on a
+    background worker while the previous batch's jitted forward is in
+    flight."""
+    sub_nodes: np.ndarray   # (n_sub,) sorted global node ids
+    sub_edges: np.ndarray   # (2, E_sub) edges reindexed into the subgraph
+    seed_pos: np.ndarray    # positions of the seeds inside sub_nodes
+
+
+def extract_khop(csr: CSRGraph, seeds: np.ndarray,
+                 k: int) -> ExtractedSubgraph:
+    """Extraction entry point of the serving pipeline: ``khop_subgraph``
+    bundled into the prepared-batch object the sessions stage from."""
+    return ExtractedSubgraph(*khop_subgraph(csr, seeds, k))
+
+
 def sage_sample(data: GraphData, batch_nodes: np.ndarray, fanouts=(10, 10),
                 seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
     """GraphSAGE fixed-fanout neighbor expansion.

@@ -169,9 +169,44 @@ def _group_last(adj: FRDCMatrix) -> jax.Array:
     return (nonzero & (adj.group_row != nxt_row)).astype(jnp.int32)
 
 
+def _resolve_block(block_shape, f: int, packed_width: bool) -> int:
+    """Validate the (rows, feats) block-shape tunable and return the padded
+    feature width of one grid step's output block.
+
+    The supported grid today is one FRDC tile-row (``TILE`` output rows) per
+    step over the full feature width; ``feats`` pads the feature dimension
+    up to a multiple of the requested block width (exact — zero columns).
+    Multi-row blocks and a feature-block grid are the open TPU tuning
+    directions this seam exists for; asking for them is an explicit error,
+    not a silent fallback. Packed-word paths (``packed_width``) carry their
+    features as 32-bit words, so the block width must be word-aligned there
+    and the kernel keeps its word-native width.
+    """
+    if block_shape is None:
+        return f
+    rows, feats = block_shape
+    if int(rows) != TILE:
+        raise ValueError(
+            f"bspmm block rows must be the FRDC tile-row height {TILE} "
+            f"(got {rows}); multi-row output blocks are the open TPU "
+            f"block-shape tuning direction")
+    if feats is None:
+        return f
+    feats = int(feats)
+    if feats <= 0:
+        raise ValueError(f"block feats must be positive, got {feats}")
+    if packed_width:
+        if feats % WORD:
+            raise ValueError(
+                f"packed BSpMM features are {WORD}-bit words; block feats "
+                f"{feats} must be word-aligned")
+        return f
+    return -(-f // feats) * feats
+
+
 def bspmm_bits(adj: FRDCMatrix, x_packed: jax.Array, n_feat: int | None = None,
                binarize: bool = True, trinary_mode: str = "s3_two_popc",
-               interpret: bool = True) -> jax.Array:
+               interpret: bool = True, block_shape=None) -> jax.Array:
     """FRDC trinary aggregation of packed ±1 activations (Algorithm 1).
 
     ``x_packed``: (N, Wf) uint32. Returns (R4, Wf) uint32 bits when
@@ -181,6 +216,7 @@ def bspmm_bits(adj: FRDCMatrix, x_packed: jax.Array, n_feat: int | None = None,
     """
     n, wf = x_packed.shape
     f = wf * WORD if n_feat is None else int(n_feat)
+    _resolve_block(block_shape, wf * WORD, packed_width=True)
     pad_rows = (-n) % TILE
     x_p = jnp.pad(x_packed, ((0, pad_rows), (0, 0)))
     r4 = adj.n_tile_rows * TILE
@@ -226,18 +262,23 @@ def bspmm_bits(adj: FRDCMatrix, x_packed: jax.Array, n_feat: int | None = None,
     return out
 
 
-def bspmm_fp(adj: FRDCMatrix, x: jax.Array, interpret: bool = True) -> jax.Array:
+def bspmm_fp(adj: FRDCMatrix, x: jax.Array, interpret: bool = True,
+             block_shape=None) -> jax.Array:
     """FRDC aggregation of fp activations via MXU mask-matmul (BSpMM.FB?).
 
     ``x``: (N, F) float. Returns (R4, F) float; caller applies row/col scales
     and crops to n_rows. Col scales must already be folded into ``x``.
+    ``block_shape``: optional (rows, feats) tunable — feats pads the feature
+    dimension to the block-width grid (exact), rows must stay the tile-row
+    height for now (see :func:`_resolve_block`).
     """
     n, f = x.shape
+    f_pad = _resolve_block(block_shape, f, packed_width=False)
     pad_rows = (-n) % TILE
-    x_p = jnp.pad(x, ((0, pad_rows), (0, 0)))
+    x_p = jnp.pad(x, ((0, pad_rows), (0, f_pad - f)))
     r4 = adj.n_tile_rows * TILE
     g = adj.n_groups
-    prefill = jnp.zeros((r4, f), x.dtype)
+    prefill = jnp.zeros((r4, f_pad), x.dtype)
 
     out = pl.pallas_call(
         _fp_kernel,
@@ -249,16 +290,16 @@ def bspmm_fp(adj: FRDCMatrix, x: jax.Array, interpret: bool = True) -> jax.Array
                 pl.BlockSpec(memory_space=pl.ANY),
                 pl.BlockSpec(memory_space=pl.ANY),         # prefill (aliased)
             ],
-            out_specs=pl.BlockSpec((TILE, f), lambda g_, ci, fi, la, ro: (ro[g_], 0)),
+            out_specs=pl.BlockSpec((TILE, f_pad), lambda g_, ci, fi, la, ro: (ro[g_], 0)),
             scratch_shapes=[
-                pltpu.VMEM((TILE, f), x.dtype),
-                pltpu.VMEM((GROUP * TILE, f), x.dtype),
+                pltpu.VMEM((TILE, f_pad), x.dtype),
+                pltpu.VMEM((GROUP * TILE, f_pad), x.dtype),
                 pltpu.SemaphoreType.DMA((GROUP,)),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((r4, f), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((r4, f_pad), x.dtype),
         input_output_aliases={6: 0},
         interpret=interpret,
     )(adj.col_idx, adj.group_first, _group_last(adj), adj.group_row,
       adj.tiles.astype(jnp.int32), x_p, prefill)
-    return out
+    return out[:, :f]

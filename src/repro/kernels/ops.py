@@ -75,13 +75,15 @@ def bspmm_bits(adj: FRDCMatrix, x_packed: jax.Array, n_feat: int,
     return res.packed if binarize else res
 
 
-def _serve_fp_backend(adj: FRDCMatrix, x: jax.Array) -> jax.Array:
+def _serve_fp_backend(adj: FRDCMatrix, x: jax.Array,
+                      block_shape=None) -> jax.Array:
     """core.bspmm fp-stage hook: Pallas BSpMM.FB? with scales applied here
     (the kernel computes raw masked matmuls)."""
     xin = x
     if adj.col_scale is not None:
         xin = xin * adj.col_scale[:, None].astype(x.dtype)
-    out = bspmm_kernel.bspmm_fp(adj, xin, interpret=_interpret())
+    out = bspmm_kernel.bspmm_fp(adj, xin, interpret=_interpret(),
+                                block_shape=block_shape)
     out = out[: adj.n_rows]
     if adj.row_scale is not None:
         out = out * adj.row_scale[:, None].astype(out.dtype)
@@ -89,29 +91,34 @@ def _serve_fp_backend(adj: FRDCMatrix, x: jax.Array) -> jax.Array:
 
 
 def _serve_bits_backend(adj: FRDCMatrix, x_packed: jax.Array,
-                        trinary_mode: str) -> jax.Array:
+                        trinary_mode: str, block_shape=None) -> jax.Array:
     """core.bspmm trinary-counts hook: Pallas BSpMM.BB? raw counts."""
     out = bspmm_kernel.bspmm_bits(adj, x_packed, binarize=False,
                                   trinary_mode=trinary_mode,
-                                  interpret=_interpret())
+                                  interpret=_interpret(),
+                                  block_shape=block_shape)
     return out[: adj.n_rows]
 
 
 @contextlib.contextmanager
-def serve_kernels(enabled: bool = True):
+def serve_kernels(enabled: bool = True, block_shape=None):
     """Route BSpMM aggregation through the Pallas kernels while active.
 
     The serving sessions enter this at jit TRACE time (``use_pallas``
     config flag), so the kernel calls are baked into the compiled serve
     executables. Off-TPU (and without ``force_kernels``) it is a no-op and
     the reference jnp path runs instead — the sessions' documented fallback.
-    Yields whether the kernels are actually active.
+    ``block_shape`` is the session plan's BSpMM block-shape selection
+    (``SessionPlan.bspmm_block``), forwarded to every kernel call the
+    context routes — the TPU block-shape tuning seam; None keeps the
+    kernel-native defaults. Yields whether the kernels are actually active.
     """
     if not (enabled and _use_kernels()):
         yield False
         return
-    with bspmm_core.override_backends(fp=_serve_fp_backend,
-                                      bits=_serve_bits_backend):
+    fp = functools.partial(_serve_fp_backend, block_shape=block_shape)
+    bits = functools.partial(_serve_bits_backend, block_shape=block_shape)
+    with bspmm_core.override_backends(fp=fp, bits=bits):
         yield True
 
 

@@ -1,12 +1,17 @@
 """Serving subsystem.
 
 ``engine``       — transformer continuous-batching serve loop (LLM path).
-``session_core`` — shared compile/calibrate/bucketed-serve machinery.
+``session_core`` — shared compile/calibrate/bucketed-serve machinery,
+                   including the PreparedBatch extract-stage objects.
+``gnn_engine``   — micro-batched node-query engine over compiled sessions:
+                   two-stage extract/compute pipeline (``pipeline_depth``),
+                   heap-based oldest-head scheduling.
 ``gnn_session``  — GraphStore / CompiledGraphSession artifacts (GNN path).
-``gnn_engine``   — micro-batched node-query engine over compiled sessions.
 ``sharded``      — partitioned sessions: cross-shard k-hop routing + halo
-                   exchange (ShardedGraphSession / ShardedServeEngine).
-``metrics``      — latency percentiles / QPS / cache counters.
+                   exchange, halo-aware batch formation
+                   (ShardedGraphSession / ShardedServeEngine).
+``metrics``      — latency percentiles / QPS / cache counters + the
+                   extract/compute breakdown and overlap-ratio gauge.
 """
 from .gnn_engine import GNNServeEngine, NodeQuery
 from .gnn_session import CompiledGraphSession, GraphStore, SessionPlan

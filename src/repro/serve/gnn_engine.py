@@ -2,24 +2,37 @@
 
 Requests (``NodeQuery``: answer node-classification for one node of one
 registered graph under one registered model) join per-session FIFO queues.
-Each engine tick picks the session whose head request has waited longest,
-pops up to ``max_batch`` requests, and answers them through one of two paths:
+The serving hot path is an explicit two-stage pipeline:
 
-  * **full-cache** — the session's cached full-graph inference (computed once
-    per feature version during BN calibration); a pure numpy gather, the
-    steady-state fast path for graphs that fit a full pass;
-  * **micro-batched subgraph** — deterministic k-hop extraction around the
-    batch's seed nodes, shape-bucket padding, one jitted forward. This is the
-    scale path (the full pass is amortized into calibration; per-query cost is
-    neighborhood-sized) and the seam for future sharded serving.
+  * **extract** — queue pick (incremental oldest-head heap) -> batch
+    formation -> deterministic k-hop extraction around the batch's seeds ->
+    subgraph FRDC build -> shape-bucket padding. Pure host work: producing a
+    :class:`~repro.serve.session_core.PreparedBatch` touches no device.
+  * **compute** — launch the jitted bucketed forward (async under jax
+    dispatch), block on the result, gather per-query logits.
 
-``mode="auto"`` uses the full cache below ``full_cache_max_nodes`` and the
-subgraph path above it. Latency is measured submit -> answer, so queueing
-delay is included (p50/p99 are end-to-end).
+With ``pipeline_depth == 0`` (the default) each :meth:`tick` runs both
+stages back-to-back — the serial loop. With ``pipeline_depth >= 1`` the
+extract stage runs on a background worker and up to ``pipeline_depth``
+launched forwards stay in flight, so extraction of batch *i+1* overlaps the
+device computation of batch *i* (double-buffering at depth 1). Both loops
+drive the SAME session stages in the SAME batch order, so their outputs are
+bit-exact — the pipeline changes when work happens, never what is computed.
+
+Two serve paths per batch: **full-cache** (the session's cached full-graph
+inference; a numpy gather, resolved entirely in the extract stage) and
+**micro-batched subgraph** (the prepared-batch path above). ``mode="auto"``
+uses the full cache below ``full_cache_max_nodes`` and the subgraph path
+above it. Latency is measured submit -> answer, so queueing delay is
+included (p50/p99 are end-to-end); per-batch extract/compute stage times
+and the overlap ratio land in :class:`~repro.serve.metrics.ServeMetrics`.
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
+import heapq
+import threading
 import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
@@ -51,12 +64,28 @@ class NodeQuery:
         return self.pred is not None
 
 
+@dataclasses.dataclass
+class _Inflight:
+    """One micro-batch moving through the pipeline: extract-stage output
+    plus the in-flight device handles the compute stage fills in."""
+    key: tuple
+    batch: List[NodeQuery]
+    session: object
+    seeds: np.ndarray
+    prepared: object                  # PreparedBatch, or None = full-cache
+    result: Optional[np.ndarray]      # full-cache answer (extract-resolved)
+    t_start: float
+    extract_s: float
+    t_launch: float = 0.0
+    devs: Optional[list] = None
+
+
 class GNNServeEngine:
     """Micro-batching scheduler over a :class:`GraphStore`'s sessions."""
 
     def __init__(self, store: GraphStore, max_batch: Optional[int] = None,
                  mode: str = "auto", full_cache_max_nodes: int = 200_000,
-                 keep_finished: int = 100_000):
+                 keep_finished: int = 100_000, pipeline_depth: int = 0):
         if mode not in ("auto", "full", "subgraph"):
             raise ValueError(mode)
         self.store = store
@@ -67,13 +96,31 @@ class GNNServeEngine:
                 f"session seed-slot width {store.max_batch}")
         self.mode = mode
         self.full_cache_max_nodes = full_cache_max_nodes
+        self.pipeline_depth = int(pipeline_depth)
         self.metrics = ServeMetrics()
-        self._queues: Dict[Tuple[str, str], Deque[NodeQuery]] = {}
+        self._queues: Dict[tuple, Deque[NodeQuery]] = {}
         self._next_qid = 0
+        # queue-structure guard: the pipelined extract stage (pick + pop)
+        # runs on the background worker concurrently with submit()
+        self._qlock = threading.Lock()
+        # lazy oldest-head heap over queue heads: (head t_submit, seq, key);
+        # stale entries are dropped/refreshed when encountered, so _pick_queue
+        # is O(log #queues) instead of a linear scan per tick
+        self._heap: List[Tuple[float, int, tuple]] = []
+        self._heap_seq = 0
+        # pipeline state: one background extraction + launched batches
+        self._pool: Optional[concurrent.futures.ThreadPoolExecutor] = None
+        self._extract_future = None
+        self._inflight: Deque[_Inflight] = deque()
+        self._last_done = 0.0        # completion clock (compute attribution)
+        self._unanswered = 0         # queued + in-flight (drain condition)
         # bounded: callers hold the authoritative NodeQuery objects from
         # submit(); this is a convenience tail for drain-style use, not an
         # unbounded log of every answer a long-running engine ever produced
         self.finished: Deque[NodeQuery] = deque(maxlen=keep_finished)
+        # served batch compositions (most recent), the replay source for
+        # bit-exactness oracles under reordering batch formation
+        self.batch_log: Deque[List[NodeQuery]] = deque(maxlen=4096)
 
     # ------------------------------------------------------------ intake ----
     def submit(self, graph: str, model: str, node: int) -> NodeQuery:
@@ -93,9 +140,14 @@ class GNNServeEngine:
                              f"{graph!r} with {n} nodes")
         q = NodeQuery(graph=graph, model=model, node=node)
         q.qid, self._next_qid = self._next_qid, self._next_qid + 1
-        q.t_submit = time.perf_counter()
         key = self._queue_key(graph, model, node)
-        self._queues.setdefault(key, deque()).append(q)
+        with self._qlock:
+            q.t_submit = time.perf_counter()
+            dq = self._queues.setdefault(key, deque())
+            dq.append(q)
+            self._unanswered += 1
+            if len(dq) == 1:                  # q became a queue head
+                self._heap_push(key, q.t_submit)
         self.metrics.start_clock()
         return q
 
@@ -111,7 +163,18 @@ class GNNServeEngine:
 
     @property
     def pending(self) -> int:
-        return sum(len(q) for q in self._queues.values())
+        """Queries not yet ANSWERED — queued plus extracted/launched
+        in-flight batches, so the classic ``while engine.pending:
+        engine.tick()`` drain idiom cannot exit with launched batches
+        still unanswered under pipelining."""
+        with self._qlock:
+            return self._unanswered
+
+    def _queued(self) -> int:
+        """Queries still sitting in the queues (the pipeline fill check —
+        in-flight batches are NOT re-extractable)."""
+        with self._qlock:
+            return sum(len(q) for q in self._queues.values())
 
     def _sessions(self):
         """The store sessions this engine class serves from (the sharded
@@ -124,13 +187,47 @@ class GNNServeEngine:
         the 'zero steady-state recompiles' acceptance counter."""
         return sum(s.compile_count for s in self._sessions())
 
-    # ------------------------------------------------------------- serve ----
-    def _pick_queue(self) -> Optional[Tuple[str, str]]:
-        best, best_t = None, float("inf")
-        for key, dq in self._queues.items():
-            if dq and dq[0].t_submit < best_t:
-                best, best_t = key, dq[0].t_submit
-        return best
+    # --------------------------------------------------------- scheduling ---
+    def _heap_push(self, key: tuple, t: float) -> None:
+        self._heap_seq += 1
+        heapq.heappush(self._heap, (t, self._heap_seq, key))
+
+    def _pick_queue(self) -> Optional[tuple]:
+        """Oldest-waiting queue head via the lazy heap (caller holds
+        ``_qlock``). Entries whose recorded head no longer matches (head was
+        served, or batch formation reordered the queue) are dropped and the
+        current head re-pushed, so the top valid entry IS the queue whose
+        head request has waited longest — the same pick the linear scan
+        made, in O(log #queues)."""
+        while self._heap:
+            t, _, key = self._heap[0]
+            dq = self._queues.get(key)
+            if not dq:
+                heapq.heappop(self._heap)
+                continue
+            if dq[0].t_submit != t:
+                heapq.heappop(self._heap)
+                self._heap_push(key, dq[0].t_submit)
+                continue
+            return key
+        return None
+
+    def _pop_batch(self, key: tuple, session) -> List[NodeQuery]:
+        """Batch formation (caller holds ``_qlock``): FIFO pop of up to
+        ``max_batch`` head requests. The sharded engine overrides this with
+        halo-aware formation (``session`` is the already-resolved serving
+        session, so no session work happens under the lock)."""
+        dq = self._queues[key]
+        return [dq.popleft() for _ in range(min(self.max_batch, len(dq)))]
+
+    def _requeue(self, key: tuple, batch: List[NodeQuery]) -> None:
+        """Restore a popped-but-unserved batch to the FRONT of its queue
+        (extract-stage failure path: the queries must not be lost)."""
+        with self._qlock:
+            dq = self._queues.setdefault(key, deque())
+            for q in reversed(batch):
+                dq.appendleft(q)
+            self._heap_push(key, dq[0].t_submit)
 
     def _use_full_cache(self, session) -> bool:
         if self.mode == "full":
@@ -145,45 +242,209 @@ class GNNServeEngine:
         partitioned session instead)."""
         return self.store.session(*key[:2])
 
-    def _serve_logits(self, session, seeds: np.ndarray) -> np.ndarray:
-        if self._use_full_cache(session):
-            self.metrics.full_cache_hits += len(seeds)
-            return session.full_logits()[seeds]
-        self.metrics.subgraph_queries += len(seeds)
-        return session.serve_subgraph(seeds)
+    # ------------------------------------------------------------- stages ---
+    def _extract_stage(self) -> Optional[_Inflight]:
+        """EXTRACT: queue pick -> batch formation -> k-hop extraction ->
+        FRDC build -> bucket pad. Pure host work — the pipelined engine runs
+        this on the background worker while the previous batch's jitted
+        forward is in flight. Full-cache batches resolve entirely here (the
+        cached pass is a numpy gather; there is nothing to overlap).
 
-    def tick(self) -> int:
-        """Serve ONE micro-batch (the oldest-waiting session's head of
-        queue). Returns the number of queries answered."""
-        key = self._pick_queue()
+        Only the queue surgery runs under ``_qlock`` — session resolution
+        (which can compile on first touch) and extraction happen outside
+        it, so submit() never blocks on them. A failure after the pop
+        requeues the batch at the front of its queue before re-raising:
+        queries are never silently lost."""
+        with self._qlock:
+            key = self._pick_queue()
         if key is None:
-            return 0
-        dq = self._queues[key]
-        batch = [dq.popleft() for _ in range(min(self.max_batch, len(dq)))]
+            return None
+        # resolving the session may build/compile it — never under the
+        # lock. The pick stays valid: only this (single) extractor pops,
+        # and new submits are strictly newer than the picked head.
         session = self._get_session(key)
-        t0 = time.perf_counter()
-        seeds = np.asarray([q.node for q in batch], np.int64)
-        logits = self._serve_logits(session, seeds)
+        self._prepare_formation(key, session)
+        with self._qlock:
+            batch = self._pop_batch(key, session)
+        if not batch:
+            return None
+        try:
+            t0 = time.perf_counter()
+            seeds = np.asarray([q.node for q in batch], np.int64)
+            if self._use_full_cache(session):
+                result, prepared = session.full_logits()[seeds], None
+            else:
+                result, prepared = None, session.prepare_batch(seeds)
+            return _Inflight(key=key, batch=batch, session=session,
+                             seeds=seeds, prepared=prepared, result=result,
+                             t_start=t0,
+                             extract_s=time.perf_counter() - t0)
+        except BaseException:
+            self._requeue(key, batch)
+            raise
+
+    def _prepare_formation(self, key: tuple, session) -> None:
+        """Pre-formation hook, called OUTSIDE ``_qlock``: a subclass whose
+        batch formation needs per-request metadata (the sharded engine's
+        halo signatures) warms its caches here so the locked pop does no
+        session work."""
+
+    def _launch_stage(self, inf: _Inflight) -> None:
+        """COMPUTE head: dispatch the jitted forward(s). Async under jax
+        dispatch — returns with the device work in flight."""
+        inf.t_launch = time.perf_counter()
+        if inf.prepared is None:
+            self.metrics.full_cache_hits += len(inf.batch)
+        else:
+            self.metrics.subgraph_queries += len(inf.batch)
+            inf.devs = inf.session.launch_batch(inf.prepared)
+
+    def _complete_stage(self, inf: _Inflight) -> int:
+        """COMPUTE tail: block on the device result, gather per-query
+        answers, record metrics. Returns queries answered.
+
+        The compute-stage time attributed to THIS batch starts at its
+        launch or at the previous batch's completion, whichever is later:
+        completions are sequential, so in a saturated pipeline the span
+        launch -> done would double-count the older batches' device time
+        and inflate the overlap ratio."""
+        if inf.prepared is None:
+            logits = inf.result
+        else:
+            logits = inf.session.finish_batch(inf.prepared, inf.devs)
         t_done = time.perf_counter()
         self.metrics.batches += 1
-        self.metrics.batch_latency.record(t_done - t0)
+        self.metrics.batch_latency.record(t_done - inf.t_start)
+        self.metrics.record_stages(
+            inf.extract_s, t_done - max(inf.t_launch, self._last_done))
+        self._last_done = t_done
         preds = np.argmax(logits, axis=-1)
-        for q, lg, p in zip(batch, logits, preds):
+        for q, lg, p in zip(inf.batch, logits, preds):
             q.logits = np.asarray(lg)
             q.pred = int(p)
             q.t_done = t_done
             self.metrics.queries += 1
             self.metrics.latency.record(q.latency_s)
             self.finished.append(q)
-        return len(batch)
+        self.batch_log.append(list(inf.batch))
+        with self._qlock:
+            self._unanswered -= len(inf.batch)
+        return len(inf.batch)
+
+    # ------------------------------------------------------------- serve ----
+    def _worker(self) -> concurrent.futures.ThreadPoolExecutor:
+        """The single extract worker (one thread: extraction order IS batch
+        order, which the bit-exactness and water-mark guarantees key on)."""
+        if self._pool is None:
+            self._pool = concurrent.futures.ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="serve-extract")
+        return self._pool
+
+    def _pump(self, block: bool) -> int:
+        """Advance the pipeline: keep one extraction on the worker and up to
+        ``pipeline_depth`` launched forwards in flight; complete the oldest
+        batch when the pipeline is full (always, when ``block``)."""
+        while len(self._inflight) < self.pipeline_depth:
+            if self._extract_future is None:
+                if not self._queued():
+                    break
+                self._extract_future = self._worker().submit(
+                    self._extract_stage)
+            try:
+                inf = self._extract_future.result()
+            finally:
+                # a failed extraction must not wedge the pipeline: the
+                # stage already requeued its batch, so clearing the future
+                # lets the next tick retry after the caller sees the error
+                self._extract_future = None
+            if inf is None:
+                break
+            # hand the NEXT extraction to the worker BEFORE launching this
+            # batch, so it overlaps the device time of everything in flight
+            if self._queued():
+                self._extract_future = self._worker().submit(
+                    self._extract_stage)
+            self._compute(inf, launch_only=True)
+            self._inflight.append(inf)
+        # complete the oldest batch when the pipeline is full — or when the
+        # input is drained AND its device result is already available:
+        # light traffic must not strand launched batches behind a depth
+        # gate only more traffic could open, but a momentarily empty queue
+        # must not serialize the pipeline by blocking on in-flight work
+        # the next wave could still overlap.
+        drained_input = (not self._queued()
+                         and self._extract_future is None)
+        if self._inflight and (block
+                               or len(self._inflight) >= self.pipeline_depth
+                               or (drained_input and self._oldest_ready())):
+            return self._compute(self._inflight.popleft(),
+                                 complete_only=True)
+        return 0
+
+    def _oldest_ready(self) -> bool:
+        """Whether the oldest in-flight batch can be completed without
+        blocking (full-cache batches resolved at extract time; device
+        batches via jax's is_ready, conservatively True where absent)."""
+        inf = self._inflight[0]
+        if inf.devs is None:
+            return True
+        try:
+            return all(d.is_ready() for d in inf.devs)
+        except AttributeError:
+            return True
+
+    def _compute(self, inf: _Inflight, launch_only: bool = False,
+                 complete_only: bool = False) -> int:
+        """Run the compute stage (launch and/or complete) with the
+        never-lose-queries guarantee: a failure in either half requeues the
+        batch at the front of its queue before re-raising, mirroring the
+        extract stage's failure path."""
+        try:
+            if not complete_only:
+                self._launch_stage(inf)
+            if launch_only:
+                return 0
+            return self._complete_stage(inf)
+        except BaseException:
+            self._requeue(inf.key, inf.batch)
+            raise
+
+    def _step(self, block: bool) -> int:
+        t0 = time.perf_counter()
+        try:
+            if self.pipeline_depth <= 0:
+                inf = self._extract_stage()
+                if inf is None:
+                    return 0
+                return self._compute(inf)
+            return self._pump(block)
+        finally:
+            self.metrics.serve_wall_s += time.perf_counter() - t0
+
+    def tick(self) -> int:
+        """Serve ONE pipeline step. Serial engine: extract + compute one
+        micro-batch (the oldest-waiting queue's head of line). Pipelined
+        engine: fill the pipeline and complete the oldest batch once it is
+        full — early ticks return 0 while the pipeline ramps; completions
+        then stream one batch per tick. Returns queries answered."""
+        return self._step(block=False)
 
     def run_until_drained(self, max_ticks: int = 100_000) -> List[NodeQuery]:
         ticks = 0
-        while self.pending and ticks < max_ticks:
-            self.tick()
+        while ticks < max_ticks and (
+                self.pending or self._inflight
+                or self._extract_future is not None):
+            self._step(block=True)
             ticks += 1
         self.metrics.stop_clock()
         return list(self.finished)
+
+    def close(self) -> None:
+        """Shut the background extract worker down (idempotent; the engine
+        keeps working — a later pipelined tick restarts it)."""
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
 
     # ------------------------------------------------------------ warmup ----
     def warmup(self, graph: str, model: str, probes: int = 16,
@@ -201,4 +462,4 @@ class GNNServeEngine:
         inval = sum(s.invalidations for s in self._sessions())
         return self.metrics.snapshot(extra=dict(
             compiles=self.compile_count, invalidations=inval,
-            pending=self.pending))
+            pending=self.pending, pipeline_depth=self.pipeline_depth))

@@ -266,14 +266,39 @@ class CompiledGraphSession:
     def _extract(self, uniq_seeds: np.ndarray):
         """Host-side k-hop extraction + subgraph FRDC build (no device work
         — also used by warmup to probe steady-state shapes cheaply)."""
-        sub_nodes, sub_edges, seed_pos = sampling.khop_subgraph(
-            self.graph.csr, uniq_seeds, self.khop)
+        ex = sampling.extract_khop(self.graph.csr, uniq_seeds, self.khop)
         fam = self.plan.family
         dinv = self.graph.dinv_for(fam)
         mats = session_core.sub_adjacency(
-            fam, sub_nodes.size, sub_edges,
-            None if dinv is None else dinv[sub_nodes])
-        return sub_nodes, mats, seed_pos
+            fam, ex.sub_nodes.size, ex.sub_edges,
+            None if dinv is None else dinv[ex.sub_nodes])
+        return ex.sub_nodes, mats, ex.seed_pos
+
+    def prepare_batch(self, seeds: np.ndarray) -> session_core.PreparedBatch:
+        """EXTRACT stage: adopt current features, k-hop extract, build the
+        subgraph FRDC and bucket-pad — pure host work producing the
+        launch-ready :class:`~repro.serve.session_core.PreparedBatch` (the
+        pipelined engine runs this on a background worker while the previous
+        batch's forward is in flight)."""
+        self.sync()
+        seeds = np.asarray(seeds, np.int64)
+        uniq, inverse = np.unique(seeds, return_inverse=True)
+        sub_nodes, mats, seed_pos = self._extract(uniq)
+        staged = self.core.stage(self.graph.data.x[sub_nodes], mats,
+                                 seed_pos)
+        group = session_core.PreparedGroup(
+            core=self.core, sel=np.arange(uniq.size), staged=staged)
+        return session_core.PreparedBatch(n_uniq=uniq.size, inverse=inverse,
+                                          groups=[group], bn=self.bn)
+
+    def launch_batch(self, prepared) -> list:
+        """COMPUTE-stage head: dispatch the jitted forward(s) asynchronously
+        (with the calibration captured when the batch was staged)."""
+        return prepared.launch()
+
+    def finish_batch(self, prepared, devs) -> np.ndarray:
+        """COMPUTE-stage tail: block and reassemble request-order logits."""
+        return prepared.finish(devs)
 
     def _serve_batch(self, uniq_seeds: np.ndarray) -> np.ndarray:
         """One extraction + bucketed forward for <= max_batch unique seeds,
@@ -284,11 +309,11 @@ class CompiledGraphSession:
 
     def serve_subgraph(self, seeds: np.ndarray) -> np.ndarray:
         """Micro-batched node-level inference: k-hop extraction -> bucket
-        padding -> jitted forward -> (len(seeds), n_out) logits."""
-        self.sync()
-        seeds = np.asarray(seeds, np.int64)
-        uniq, inverse = np.unique(seeds, return_inverse=True)
-        return self._serve_batch(uniq)[inverse]
+        padding -> jitted forward -> (len(seeds), n_out) logits. Runs the
+        same prepare/launch/finish stages the pipelined engine drives, just
+        serially — which is what keeps the two loops bit-exact."""
+        prepared = self.prepare_batch(seeds)
+        return self.finish_batch(prepared, self.launch_batch(prepared))
 
     def warmup(self, rng: Optional[np.random.Generator] = None,
                probes: int = 16, margin: float = 1.125) -> int:
@@ -344,6 +369,7 @@ class CompiledGraphSession:
     def load(cls, directory: Path, graph: GraphEntry, model: ModelEntry,
              khop: Optional[int] = None, max_batch: Optional[int] = None,
              use_pallas: bool = False, incremental: bool = False,
+             bspmm_block="unchanged",
              ) -> Optional["CompiledGraphSession"]:
         """Restore a session artifact; returns None on any mismatch (missing
         files, different graph/model/features, or a khop/max_batch that
@@ -365,6 +391,10 @@ class CompiledGraphSession:
         if _session_fingerprint(graph, model) != sidecar["fingerprint"]:
             return None
         plan = SessionPlan.from_json(sidecar["plan"])
+        # the block shape is baked into the compiled executables (trace-time
+        # choice): a store asking for a different one must recompile
+        if bspmm_block != "unchanged" and plan.bspmm_block != bspmm_block:
+            return None
         like = {"qparams": session_core.quantize_family(model.family,
                                                         model.params),
                 "adj": session_core.adj_like(model.family)}
@@ -391,12 +421,18 @@ class GraphStore:
 
     def __init__(self, cache_dir: Optional[str] = None, khop: int = 2,
                  max_batch: int = 32, use_pallas: bool = False,
-                 incremental: bool = False):
+                 incremental: bool = False,
+                 bspmm_block: Optional[Tuple[int, int]] = None):
         self.cache_dir = Path(cache_dir) if cache_dir else None
         self.khop = khop
         self.max_batch = max_batch
         self.use_pallas = use_pallas
         self.incremental = incremental
+        # Pallas BSpMM block-shape selection, recorded in every plan this
+        # store builds (and therefore in plan.json / routing.json); None =
+        # kernel-native defaults. The TPU block-shape tuning seam.
+        self.bspmm_block = (None if bspmm_block is None
+                            else tuple(bspmm_block))
         self.graphs: Dict[str, GraphEntry] = {}
         self.models: Dict[str, ModelEntry] = {}
         self._sessions: Dict[Tuple[str, str], CompiledGraphSession] = {}
@@ -448,12 +484,14 @@ class GraphStore:
         if sess_dir is not None:
             sess = CompiledGraphSession.load(
                 sess_dir, g, m, khop=self.khop, max_batch=self.max_batch,
-                use_pallas=self.use_pallas, incremental=self.incremental)
+                use_pallas=self.use_pallas, incremental=self.incremental,
+                bspmm_block=self.bspmm_block)
         if sess is None:
             qparams = session_core.quantize_family(m.family, m.params)
             plan = (session_core.tune_plan(g.data, m.family, qparams,
                                            repeats=tune_repeats)
                     if tune else session_core.default_plan(m.family))
+            plan = dataclasses.replace(plan, bspmm_block=self.bspmm_block)
             sess = CompiledGraphSession(
                 g, m, plan, qparams, khop=self.khop,
                 max_batch=self.max_batch, use_pallas=self.use_pallas,
@@ -489,12 +527,13 @@ class GraphStore:
             sess = ShardedGraphSession.load(
                 sess_dir, g, m, khop=self.khop, max_batch=self.max_batch,
                 use_pallas=self.use_pallas, mesh=mesh, executor=executor,
-                bn_mode=bn_mode)
+                bn_mode=bn_mode, bspmm_block=self.bspmm_block)
         if sess is None:
             qparams = session_core.quantize_family(m.family, m.params)
             plan = (session_core.tune_plan(g.data, m.family, qparams,
                                            repeats=tune_repeats)
                     if tune else session_core.default_plan(m.family))
+            plan = dataclasses.replace(plan, bspmm_block=self.bspmm_block)
             shard_plan = ShardPlanner(n_shards).plan(g.data, m.family)
             sess = ShardedGraphSession(
                 g, m, plan, qparams, shard_plan, khop=self.khop,

@@ -60,16 +60,50 @@ class LatencyStats:
 
 @dataclasses.dataclass
 class ServeMetrics:
-    """Counters + histograms for one engine (or one session)."""
+    """Counters + histograms for one engine (or one session).
+
+    The per-batch service time is broken into the two pipeline stages:
+    **extract** (queue pick -> k-hop/routed extraction -> FRDC build ->
+    bucket pad; pure host work) and **compute** (jitted forward launch ->
+    device result fetch -> gather). ``batch_latency`` stays the total.
+    ``serve_wall_s`` accumulates the wall time the engine actually spent
+    inside its serve loop, so ``overlap_ratio`` — the fraction of stage time
+    hidden behind the other stage — is ``(extract + compute - wall) /
+    (extract + compute)``: 0 for the serial loop, approaching 0.5 when a
+    double-buffered pipeline fully hides extraction behind the in-flight
+    device computation.
+    """
     latency: LatencyStats = dataclasses.field(default_factory=LatencyStats)
     batch_latency: LatencyStats = dataclasses.field(
+        default_factory=LatencyStats)
+    extract_latency: LatencyStats = dataclasses.field(
+        default_factory=LatencyStats)
+    compute_latency: LatencyStats = dataclasses.field(
         default_factory=LatencyStats)
     queries: int = 0
     batches: int = 0
     full_cache_hits: int = 0       # answered from the cached full-graph pass
     subgraph_queries: int = 0      # answered via the micro-batched k-hop path
+    extract_s: float = 0.0         # summed extract-stage seconds
+    compute_s: float = 0.0         # summed compute-stage seconds
+    serve_wall_s: float = 0.0      # wall seconds inside the serve loop
     started_at: Optional[float] = None
     finished_at: Optional[float] = None
+
+    def record_stages(self, extract_s: float, compute_s: float) -> None:
+        """Record one batch's per-stage breakdown (both histogrammed and
+        summed for the overlap gauge)."""
+        self.extract_latency.record(extract_s)
+        self.compute_latency.record(compute_s)
+        self.extract_s += float(extract_s)
+        self.compute_s += float(compute_s)
+
+    @property
+    def overlap_ratio(self) -> float:
+        stage_s = self.extract_s + self.compute_s
+        if stage_s <= 0.0:
+            return 0.0
+        return max(0.0, stage_s - self.serve_wall_s) / stage_s
 
     def start_clock(self) -> None:
         if self.started_at is None:
@@ -102,6 +136,11 @@ class ServeMetrics:
             elapsed_s=self.elapsed_s,
             latency=self.latency.summary(),
             batch_latency=self.batch_latency.summary(),
+            batch_breakdown=dict(extract=self.extract_latency.summary(),
+                                 compute=self.compute_latency.summary(),
+                                 total=self.batch_latency.summary()),
+            overlap_ratio=self.overlap_ratio,
+            serve_wall_s=self.serve_wall_s,
         )
         if extra:
             out.update(extra)

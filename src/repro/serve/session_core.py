@@ -68,32 +68,48 @@ def bucket_pow2(n: int, floor: int, cap: Optional[int] = None) -> int:
 
 @dataclasses.dataclass
 class SessionPlan:
-    """Tuner-selected execution plan of one compiled session."""
+    """Tuner-selected execution plan of one compiled session.
+
+    ``bspmm_block`` is the Pallas BSpMM block-shape tunable — ``(rows,
+    feats)`` of one kernel grid step's output block, or None for the
+    kernel-native defaults (one FRDC tile-row of ``frdc.TILE`` rows x the
+    full feature width). It rides in ``plan.json`` with the rest of the
+    plan, so a TPU block-shape sweep (ROADMAP open item) records its winner
+    in the same artifact the tuner's variant choice lives in.
+    """
     family: str
     scheme: str                       # gcn: "full" | "bin"; else "fixed"
     trinary_mode: str = TRINARY_DEFAULT
     layer_variants: tuple = FIXED_VARIANTS
     tuned_latency_s: float = float("nan")
     output_delta: float = float("nan")
+    bspmm_block: Optional[Tuple[int, int]] = None
 
     def name(self) -> str:
         layers = ";".join(f"{m}+{s}" for m, s in self.layer_variants)
-        return f"{self.family}/{self.scheme}[{layers}|{self.trinary_mode}]"
+        blk = ("" if self.bspmm_block is None
+               else f"|blk{self.bspmm_block[0]}x{self.bspmm_block[1]}")
+        return f"{self.family}/{self.scheme}[{layers}|{self.trinary_mode}" \
+               f"{blk}]"
 
     def to_json(self) -> dict:
         return dict(family=self.family, scheme=self.scheme,
                     trinary_mode=self.trinary_mode,
                     layer_variants=[list(v) for v in self.layer_variants],
                     tuned_latency_s=self.tuned_latency_s,
-                    output_delta=self.output_delta)
+                    output_delta=self.output_delta,
+                    bspmm_block=(None if self.bspmm_block is None
+                                 else list(self.bspmm_block)))
 
     @classmethod
     def from_json(cls, d: dict) -> "SessionPlan":
+        blk = d.get("bspmm_block")
         return cls(family=d["family"], scheme=d["scheme"],
                    trinary_mode=d["trinary_mode"],
                    layer_variants=tuple(tuple(v) for v in d["layer_variants"]),
                    tuned_latency_s=d.get("tuned_latency_s", float("nan")),
-                   output_delta=d.get("output_delta", float("nan")))
+                   output_delta=d.get("output_delta", float("nan")),
+                   bspmm_block=None if blk is None else tuple(blk))
 
 
 def quantize_family(family: str, params):
@@ -110,9 +126,10 @@ def family_forward(plan: SessionPlan, qparams, x,
     (:func:`repro.kernels.ops.serve_kernels`) — native on TPU, and a no-op
     fallback to the reference jnp path off-TPU. The flag is consulted at jit
     TRACE time, so a session built with it bakes the kernel calls into its
-    compiled executables.
+    compiled executables. ``plan.bspmm_block`` rides along as the kernels'
+    block-shape selection.
     """
-    with kernel_ops.serve_kernels(use_pallas):
+    with kernel_ops.serve_kernels(use_pallas, block_shape=plan.bspmm_block):
         if plan.family == "gcn":
             return gnn.gcn_forward_bitgnn(
                 qparams, x, adjs["adj"], adjs["bin"], scheme=plan.scheme,
@@ -197,20 +214,27 @@ def sub_adjacency(family: str, n_sub: int, sub_edges: np.ndarray,
     """Per-family subgraph FRDC matrices. ``dinv_sub`` is the FULL-graph
     factorization vector gathered at the subgraph's nodes (GCN: D^-1/2 with
     self-loops; SAGE: D^-1 mean; SAINT: None) so seed-row aggregation is
-    identical to the full graph no matter which host gathered it."""
+    identical to the full graph no matter which host gathered it.
+
+    Built NUMPY-backed (``device=False``): this sits in the serving
+    pipeline's extract stage, which must stay pure host work — the jit call
+    boundary converts the staged arrays at launch."""
     if family == "gcn":
         loops = np.arange(n_sub, dtype=np.int64)
         r = np.concatenate([sub_edges[0], loops])
         c = np.concatenate([sub_edges[1], loops])
         return {
             "adj": frdc.from_coo(r, c, n_sub, n_sub, row_scale=dinv_sub,
-                                 col_scale=dinv_sub),
-            "bin": frdc.from_coo(sub_edges[0], sub_edges[1], n_sub, n_sub),
+                                 col_scale=dinv_sub, device=False),
+            "bin": frdc.from_coo(sub_edges[0], sub_edges[1], n_sub, n_sub,
+                                 device=False),
         }
     if family == "sage":
         return {"mean": frdc.from_coo(sub_edges[0], sub_edges[1], n_sub,
-                                      n_sub, row_scale=dinv_sub)}
-    return {"sum": frdc.from_coo(sub_edges[0], sub_edges[1], n_sub, n_sub)}
+                                      n_sub, row_scale=dinv_sub,
+                                      device=False)}
+    return {"sum": frdc.from_coo(sub_edges[0], sub_edges[1], n_sub, n_sub,
+                                 device=False)}
 
 
 def dinv_for_family(family: str, degrees: np.ndarray) -> Optional[np.ndarray]:
@@ -477,22 +501,44 @@ class ServeCore:
             adjs[k] = frdc_arrays(frdc.pad_frdc(m, n_pad, n_groups=g_pad))
         return n_pad, adjs
 
-    def run(self, x_sub: np.ndarray, mats: Dict[str, frdc.FRDCMatrix],
-            seed_pos: np.ndarray, bn: tuple) -> np.ndarray:
-        """Bucket-pad one extracted subgraph and run the jitted forward.
-
-        ``x_sub``: (n_sub, F) features of the subgraph nodes (global order);
-        ``seed_pos``: positions of the seeds inside the subgraph. Returns
-        (len(seed_pos), n_out) logits.
-        """
+    def stage(self, x_sub: np.ndarray, mats: Dict[str, frdc.FRDCMatrix],
+              seed_pos: np.ndarray) -> "StagedBatch":
+        """EXTRACT-stage tail: bucket-pad one extracted subgraph into the
+        launch-ready host arrays. Pure host work (the water-mark update
+        happens here, so staging order — not launch order — is what the
+        zero-recompile guarantee keys on)."""
         n_pad, adjs = self._pad_mats(mats, x_sub.shape[0])
         x_pad = np.zeros((n_pad, x_sub.shape[1]), np.float32)
         x_pad[:x_sub.shape[0]] = x_sub
         pos_pad = np.zeros((self.max_batch,), np.int32)
         pos_pad[:seed_pos.size] = seed_pos
-        out = self._jit_serve(jnp.asarray(x_pad), bn, adjs,
-                              jnp.asarray(pos_pad))
-        return np.asarray(out)[:seed_pos.size]
+        return StagedBatch(x_pad=x_pad, adjs=adjs, pos_pad=pos_pad,
+                           n_seeds=int(seed_pos.size))
+
+    def launch(self, staged: "StagedBatch", bn: tuple) -> jax.Array:
+        """COMPUTE-stage head: dispatch the jitted bucketed forward. Under
+        jax's async dispatch this returns before the device finishes, so the
+        caller can overlap the next batch's extraction with it."""
+        return self._jit_serve(jnp.asarray(staged.x_pad), bn, staged.adjs,
+                               jnp.asarray(staged.pos_pad))
+
+    def finish(self, out_dev: jax.Array, staged: "StagedBatch") -> np.ndarray:
+        """COMPUTE-stage tail: block on the device result and crop the seed
+        rows."""
+        return np.asarray(out_dev)[:staged.n_seeds]
+
+    def run(self, x_sub: np.ndarray, mats: Dict[str, frdc.FRDCMatrix],
+            seed_pos: np.ndarray, bn: tuple) -> np.ndarray:
+        """Serial stage -> launch -> finish of one extracted subgraph.
+
+        ``x_sub``: (n_sub, F) features of the subgraph nodes (global order);
+        ``seed_pos``: positions of the seeds inside the subgraph. Returns
+        (len(seed_pos), n_out) logits. The pipelined engine calls the three
+        stages itself; composing them here keeps serial and pipelined
+        serving bit-exact by construction.
+        """
+        staged = self.stage(x_sub, mats, seed_pos)
+        return self.finish(self.launch(staged, bn), staged)
 
     def preset_water(self, n_max: int, g_max: Dict[str, int],
                      margin: float) -> None:
@@ -506,6 +552,71 @@ class ServeCore:
             wkey = (self._n_water, k)
             g_pad = bucket_pow2(int(g * margin), self.GROUP_BUCKET_FLOOR)
             self._g_water[wkey] = max(self._g_water.get(wkey, 0), g_pad)
+
+
+# ---------------------------------------------------------------------------
+# Prepared batches — the extract-stage output of the serving pipeline
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StagedBatch:
+    """One bucket-padded subgraph, ready for :meth:`ServeCore.launch`."""
+    x_pad: np.ndarray               # (n_pad, F) zero-padded features
+    adjs: Dict[str, dict]           # padded FRDC arrays per adjacency kind
+    pos_pad: np.ndarray             # (max_batch,) seed positions, padded
+    n_seeds: int
+
+
+@dataclasses.dataclass
+class PreparedGroup:
+    """One serve core's share of a prepared batch: the staged subgraph of
+    the uniq-seed subset ``sel`` (single-host sessions have one group; a
+    sharded session one per owning shard)."""
+    core: ServeCore
+    sel: np.ndarray                 # positions inside the batch's uniq seeds
+    staged: StagedBatch
+
+
+@dataclasses.dataclass
+class PreparedBatch:
+    """Extract-stage output for one micro-batch of seeds: everything the
+    compute stage needs, produced WITHOUT any device work — so building one
+    can overlap the previous batch's in-flight jitted forward.
+
+    ``inverse`` maps the uniq-seed rows back to request order;
+    ``out_shape`` is the per-seed logits shape (used when ``groups`` is
+    empty, i.e. zero seeds). ``bn`` is the frozen calibration CAPTURED AT
+    EXTRACT TIME: a pipelined engine may see a feature update (and
+    recalibration) land between staging batch i and launching it, and the
+    launch must use the constants the features were staged under — never
+    the session's live ``bn``."""
+    n_uniq: int
+    inverse: np.ndarray
+    groups: List[PreparedGroup]
+    out_shape: Tuple[int, ...] = ()
+    bn: Optional[tuple] = None
+
+    def launch(self) -> List[jax.Array]:
+        """Dispatch every group's jitted forward (async under jax dispatch)
+        with the CAPTURED calibration; returns the in-flight device results
+        in group order. Deliberately takes no ``bn`` argument — passing the
+        session's live stats here is exactly the staleness bug the capture
+        prevents."""
+        return [g.core.launch(g.staged, self.bn) for g in self.groups]
+
+    def finish(self, devs: List[jax.Array]) -> np.ndarray:
+        """Block on the device results and reassemble request-order logits."""
+        out: Optional[np.ndarray] = None
+        for g, dv in zip(self.groups, devs):
+            logits = g.core.finish(dv, g.staged)
+            if out is None:
+                out = np.zeros((self.n_uniq,) + logits.shape[1:],
+                               logits.dtype)
+            out[g.sel] = logits
+        if out is None:
+            out = np.zeros((self.n_uniq,) + tuple(self.out_shape),
+                           np.float32)
+        return out[self.inverse]
 
 
 # ---------------------------------------------------------------------------

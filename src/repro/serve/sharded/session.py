@@ -62,6 +62,7 @@ import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core import frdc
+from repro.graphs import sampling
 from repro.launch.mesh import make_shard_mesh
 from repro.serve import session_core
 from repro.serve.session_core import ServeCore, SessionPlan
@@ -275,42 +276,75 @@ class ShardedGraphSession:
     # -------------------------------------------------- subgraph path ------
     def _extract(self, uniq_seeds: np.ndarray):
         """Routed k-hop extraction + subgraph FRDC build for one owner's
-        seed group (host-side; also used by warmup shape probing)."""
-        sub_nodes, sub_edges, seed_pos = routed_khop_subgraph(
-            self._scsr, uniq_seeds, self.khop)
+        seed group (host-side; also used by warmup shape probing). Same
+        prepared-subgraph object as the single-host extractor — the routed
+        expansion is bit-identical to ``sampling.khop_subgraph``."""
+        ex = sampling.ExtractedSubgraph(*routed_khop_subgraph(
+            self._scsr, uniq_seeds, self.khop))
         dinv_blocks = self._dinv_blocks()
         dinv_sub = None
         if dinv_blocks is not None:
             dinv_sub = halo_mod.gather_rows(dinv_blocks, self.routing,
-                                            sub_nodes)
-        mats = session_core.sub_adjacency(self.plan.family, sub_nodes.size,
-                                          sub_edges, dinv_sub)
-        return sub_nodes, mats, seed_pos
+                                            ex.sub_nodes)
+        mats = session_core.sub_adjacency(self.plan.family,
+                                          ex.sub_nodes.size, ex.sub_edges,
+                                          dinv_sub)
+        return ex.sub_nodes, mats, ex.seed_pos
 
-    def _serve_owner_batch(self, owner: int,
-                           uniq_seeds: np.ndarray) -> np.ndarray:
-        """Answer one owner shard's routed seed group: extract the (possibly
-        boundary-crossing) k-hop subgraph, fetch remote feature rows through
-        the halo transport, and run the owner's bucketed jitted forward."""
-        sub_nodes, mats, seed_pos = self._extract(uniq_seeds)
-        x_sub = halo_mod.gather_rows(self._x_blocks(), self.routing,
-                                     sub_nodes, home=owner,
-                                     stats=self.halo_stats, tag="serve/x")
-        return self.cores[owner].run(x_sub, mats, seed_pos, self.bn)
-
-    def serve_subgraph(self, seeds: np.ndarray) -> np.ndarray:
-        """Micro-batched node-level inference across shards: group the batch
-        by owning shard (routing table), answer each group on its owner, and
-        merge the logits back into request order."""
+    def prepare_batch(self, seeds: np.ndarray) -> session_core.PreparedBatch:
+        """EXTRACT stage: routed k-hop extraction, halo feature fetch and
+        bucket padding for every owner group in the batch — pure host work
+        (the ``serve/x`` halo bytes are accounted here, where the gather
+        happens). The engine's single-owner queues make this one group per
+        batch in practice; mixed-owner batches stage one group per owner."""
         self.sync()
         seeds = np.asarray(seeds, np.int64)
         uniq, inverse = np.unique(seeds, return_inverse=True)
         owners = self.routing.owner(uniq)
-        out = np.zeros((uniq.size,) + self._out_shape(), np.float32)
+        groups = []
         for s in np.unique(owners):
-            sel = owners == s
-            out[sel] = self._serve_owner_batch(int(s), uniq[sel])
-        return out[inverse]
+            sel = np.nonzero(owners == s)[0]
+            sub_nodes, mats, seed_pos = self._extract(uniq[sel])
+            x_sub = halo_mod.gather_rows(self._x_blocks(), self.routing,
+                                         sub_nodes, home=int(s),
+                                         stats=self.halo_stats, tag="serve/x")
+            staged = self.cores[int(s)].stage(x_sub, mats, seed_pos)
+            groups.append(session_core.PreparedGroup(
+                core=self.cores[int(s)], sel=sel, staged=staged))
+        return session_core.PreparedBatch(n_uniq=uniq.size, inverse=inverse,
+                                          groups=groups,
+                                          out_shape=self._out_shape(),
+                                          bn=self.bn)
+
+    def launch_batch(self, prepared) -> list:
+        """COMPUTE-stage head: dispatch every owner group's jitted forward
+        (with the calibration captured when the batch was staged)."""
+        return prepared.launch()
+
+    def finish_batch(self, prepared, devs) -> np.ndarray:
+        """COMPUTE-stage tail: block and merge owner groups back into
+        request order."""
+        return prepared.finish(devs)
+
+    def serve_subgraph(self, seeds: np.ndarray) -> np.ndarray:
+        """Micro-batched node-level inference across shards: group the batch
+        by owning shard (routing table), answer each group on its owner, and
+        merge the logits back into request order. Serial composition of the
+        same prepare/launch/finish stages the pipelined engine drives."""
+        prepared = self.prepare_batch(seeds)
+        return self.finish_batch(prepared, self.launch_batch(prepared))
+
+    def seed_halo_tiles(self, node: int) -> frozenset:
+        """Cheap per-seed halo signature for halo-aware batch formation: the
+        FRDC tile ids (global node id // TILE) of the seed's REMOTE 1-hop
+        neighbors — a one-CSR-row proxy for which halo tiles the seed's
+        k-hop closure will request over the ``serve/x`` gather. Seeds with
+        overlapping signatures share halo traffic when co-batched."""
+        owner = int(self.routing.owner(np.asarray([node]))[0])
+        lo, hi = self.routing.shard_range(owner)
+        nbrs = self._scsr.shards[owner].neighbors(int(node) - lo)
+        remote = nbrs[(nbrs < lo) | (nbrs >= hi)]
+        return frozenset((remote // frdc.TILE).tolist())
 
     def _out_shape(self) -> tuple:
         if self._caches is not None:
@@ -392,7 +426,7 @@ class ShardedGraphSession:
     def load(cls, directory: Path, graph, model, khop: Optional[int] = None,
              max_batch: Optional[int] = None, use_pallas: bool = False,
              mesh=None, executor: str = "host",
-             bn_mode: str = "single_host"
+             bn_mode: str = "single_host", bspmm_block="unchanged",
              ) -> Optional["ShardedGraphSession"]:
         """Restore a sharded artifact WITHOUT re-partitioning or re-tuning;
         returns None on any mismatch so the caller replans. ``executor`` /
@@ -411,6 +445,9 @@ class ShardedGraphSession:
         plan = SessionPlan.from_json(sidecar["plan"])
         if session_core.session_fingerprint(graph, model) \
                 != sidecar["fingerprint"]:
+            return None
+        # trace-time kernel choice: a different block shape must recompile
+        if bspmm_block != "unchanged" and plan.bspmm_block != bspmm_block:
             return None
         fam = model.family
         has_dinv = fam in ("gcn", "sage")

@@ -1,0 +1,463 @@
+"""Pipelined serving loop + halo-aware batch formation tests.
+
+The acceptance bar of the pipelined engine: for the SAME submitted queries,
+the double-buffered extract/compute pipeline produces BIT-IDENTICAL answers
+to the serial loop — single-host for all three families, sharded at P=2/4 —
+with zero steady-state recompiles across feature updates. Plus: the heap
+queue pick preserves the linear scan's scheduling order, halo-aware
+formation respects the staleness bound and the single-owner invariant, and
+the Pallas BSpMM block-shape tunable rides through ``plan.json``.
+"""
+import time
+
+import numpy as np
+import jax
+import pytest
+
+from repro.graphs.datasets import make_dataset
+from repro.models import gnn
+from repro.serve import GNNServeEngine, GraphStore, ShardedServeEngine
+
+jax.config.update("jax_platform_name", "cpu")
+
+HIDDEN = 16
+BATCH = 8
+PIPELINE_DEPTH = 2
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_dataset("cora", seed=0, scale=0.1)
+
+
+@pytest.fixture(scope="module")
+def store(data):
+    st = GraphStore(max_batch=BATCH)
+    st.register_graph("g", data)
+    key = jax.random.PRNGKey(0)
+    f, c = data.x.shape[1], data.n_classes
+    st.register_model("gcn", "gcn", gnn.init_gcn(key, f, HIDDEN, c))
+    st.register_model("sage", "sage", gnn.init_sage(key, f, HIDDEN, c))
+    st.register_model("saint", "saint", gnn.init_saint(key, f, HIDDEN, c))
+    return st
+
+
+def _drain(engine, model, nodes):
+    engine.warmup("g", model)
+    queries = engine.submit_many("g", model, nodes)
+    engine.run_until_drained()
+    assert all(q.done for q in queries)
+    return np.stack([q.logits for q in queries])
+
+
+# ------------------------------------------------------------ bit-exact ----
+
+@pytest.mark.parametrize("model", ["gcn", "sage", "saint"])
+def test_pipelined_matches_serial_single_host(store, data, model):
+    """pipeline_depth >= 1 overlaps extraction with the in-flight forward
+    but must not change a single bit of any answer."""
+    nodes = np.random.default_rng(1).integers(0, data.n_nodes, size=5 * BATCH)
+    serial = _drain(GNNServeEngine(store, max_batch=BATCH, mode="subgraph"),
+                    model, nodes)
+    pipe_engine = GNNServeEngine(store, max_batch=BATCH, mode="subgraph",
+                                 pipeline_depth=PIPELINE_DEPTH)
+    piped = _drain(pipe_engine, model, nodes)
+    np.testing.assert_array_equal(piped, serial)
+    snap = pipe_engine.snapshot()
+    assert snap["pipeline_depth"] == PIPELINE_DEPTH
+    # both stages were timed for every served batch
+    assert snap["batch_breakdown"]["extract"]["count"] == snap["batches"]
+    assert snap["batch_breakdown"]["compute"]["count"] == snap["batches"]
+    pipe_engine.close()
+
+
+@pytest.mark.parametrize("model", ["gcn", "sage", "saint"])
+@pytest.mark.parametrize("n_shards", (2, 4))
+def test_pipelined_matches_serial_sharded(store, data, model, n_shards):
+    """The sharded engine under pipelining (and halo-aware formation) is
+    bit-exact vs the serial sharded engine AND vs the single-host session
+    replaying its actual batch compositions. Staleness is pinned far above
+    any plausible stall so both runs form identical (purely
+    signature-driven) batches regardless of host timing."""
+    nodes = np.random.default_rng(2).integers(0, data.n_nodes, size=5 * BATCH)
+    serial = _drain(ShardedServeEngine(store, n_shards, max_batch=BATCH,
+                                       mode="subgraph", staleness_s=600.0),
+                    model, nodes)
+    engine = ShardedServeEngine(store, n_shards, max_batch=BATCH,
+                                mode="subgraph", staleness_s=600.0,
+                                pipeline_depth=PIPELINE_DEPTH)
+    piped = _drain(engine, model, nodes)
+    np.testing.assert_array_equal(piped, serial)
+    single = store.session("g", model)
+    for batch in engine.batch_log:
+        want = single.serve_subgraph(np.asarray([q.node for q in batch]))
+        np.testing.assert_array_equal(np.stack([q.logits for q in batch]),
+                                      want)
+    engine.close()
+
+
+def test_full_cache_mode_pipelined(store, data):
+    """The full-cache path resolves in the extract stage; pipelining must
+    reproduce the cached answers exactly."""
+    nodes = np.arange(0, data.n_nodes, 5)[:3 * BATCH]
+    serial = _drain(GNNServeEngine(store, max_batch=BATCH, mode="full"),
+                    "gcn", nodes)
+    piped = _drain(GNNServeEngine(store, max_batch=BATCH, mode="full",
+                                  pipeline_depth=PIPELINE_DEPTH),
+                   "gcn", nodes)
+    np.testing.assert_array_equal(piped, serial)
+
+
+# ---------------------------------------------------------- steady state ---
+
+def test_zero_steady_state_recompiles_pipelined_across_updates(data):
+    """Under pipelining, the jit cache-miss counter must not move in steady
+    state — including across feature updates (recalibration reuses the
+    already-traced full pass; serving reuses the warmed shape buckets)."""
+    st = GraphStore(max_batch=BATCH)
+    d2 = make_dataset("cora", seed=0, scale=0.1)
+    st.register_graph("g", d2)
+    st.register_model("gcn", "gcn",
+                      gnn.init_gcn(jax.random.PRNGKey(0), d2.x.shape[1],
+                                   HIDDEN, d2.n_classes))
+    engine = GNNServeEngine(st, max_batch=BATCH, mode="subgraph",
+                            pipeline_depth=PIPELINE_DEPTH)
+    engine.warmup("g", "gcn")
+    rng = np.random.default_rng(5)
+    engine.submit_many("g", "gcn", rng.integers(0, d2.n_nodes, 3 * BATCH))
+    engine.run_until_drained()
+    c0 = engine.compile_count
+    for round_ in range(2):
+        x2 = d2.x.copy()
+        x2[: d2.n_nodes // 7] = float(round_)
+        st.update_features("g", x2)
+        engine.submit_many("g", "gcn",
+                           rng.integers(0, d2.n_nodes,
+                                        rng.integers(1, 3 * BATCH)))
+        engine.run_until_drained()
+    assert engine.compile_count == c0
+    sess = st.session("g", "gcn")
+    assert sess.invalidations == 2
+    engine.close()
+
+
+def test_tick_drains_light_traffic(store, data):
+    """A partially-filled pipeline must still complete via non-blocking
+    tick() once the queue is empty — light traffic cannot strand launched
+    batches behind the depth gate."""
+    engine = GNNServeEngine(store, max_batch=BATCH, mode="subgraph",
+                            pipeline_depth=PIPELINE_DEPTH)
+    engine.warmup("g", "gcn")
+    qs = engine.submit_many("g", "gcn", np.arange(BATCH))  # ONE batch
+    served = 0
+    for _ in range(1000):          # poll: completes once the device is done
+        served += engine.tick()
+        if served:
+            break
+        time.sleep(0.005)
+    assert served == len(qs)
+    assert all(q.done for q in qs)
+    want = store.session("g", "gcn").serve_subgraph(np.arange(BATCH))
+    np.testing.assert_array_equal(np.stack([q.logits for q in qs]), want)
+    engine.close()
+
+
+def test_prepared_batch_pins_calibration(data):
+    """A batch staged before a feature update must compute with the
+    calibration (and features) it was staged under, even if the session
+    recalibrates before the launch — the pipelined-engine race the
+    PreparedBatch.bn capture exists for."""
+    st = GraphStore(max_batch=BATCH)
+    d2 = make_dataset("cora", seed=0, scale=0.1)
+    st.register_graph("g", d2)
+    st.register_model("gcn", "gcn",
+                      gnn.init_gcn(jax.random.PRNGKey(0), d2.x.shape[1],
+                                   HIDDEN, d2.n_classes))
+    sess = st.session("g", "gcn")
+    seeds = np.arange(BATCH)
+    want = sess.serve_subgraph(seeds)          # v0 features, v0 calibration
+
+    prepared = sess.prepare_batch(seeds)       # staged under v0
+    x2 = d2.x.copy()
+    x2[: d2.n_nodes // 4] += 2.0
+    st.update_features("g", x2)
+    sess.sync()                                # session.bn now v1
+    got = sess.finish_batch(prepared, sess.launch_batch(prepared))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_extract_failure_requeues_and_recovers(store, data):
+    """An extract-stage failure on the background worker must neither lose
+    the popped queries nor wedge the pipeline: the error surfaces to the
+    caller, the batch is requeued, and the next drain serves it."""
+    engine = GNNServeEngine(store, max_batch=BATCH, mode="subgraph",
+                            pipeline_depth=PIPELINE_DEPTH)
+    engine.warmup("g", "gcn")
+    session = engine._get_session(("g", "gcn"))
+    real = session.prepare_batch
+    calls = {"n": 0}
+
+    def flaky(seeds):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient extract failure")
+        return real(seeds)
+
+    nodes = np.arange(BATCH)
+    session.prepare_batch = flaky
+    try:
+        qs = engine.submit_many("g", "gcn", nodes)
+        with pytest.raises(RuntimeError, match="transient"):
+            engine.run_until_drained()
+        assert engine.pending == len(qs)       # requeued, not lost
+        engine.run_until_drained()             # pipeline not wedged: retry
+    finally:
+        session.prepare_batch = real
+    assert all(q.done for q in qs)
+    want = store.session("g", "gcn").serve_subgraph(nodes)
+    np.testing.assert_array_equal(np.stack([q.logits for q in qs]), want)
+    engine.close()
+
+
+# ------------------------------------------------------------- scheduling --
+
+class _LinearPickEngine(GNNServeEngine):
+    """Reference scheduler: the pre-heap O(#queues) oldest-head scan."""
+
+    def _pick_queue(self):
+        best, best_t = None, float("inf")
+        for key, dq in self._queues.items():
+            if dq and dq[0].t_submit < best_t:
+                best, best_t = key, dq[0].t_submit
+        return best
+
+
+def test_heap_pick_matches_linear_scan_order(store, data):
+    """Regression: the incremental oldest-head heap serves queries in the
+    same order as the linear scan it replaced."""
+    rng = np.random.default_rng(7)
+    plan = []
+    for _ in range(40):
+        plan.append((rng.choice(["gcn", "sage"]),
+                     int(rng.integers(0, data.n_nodes))))
+
+    def run(engine_cls):
+        engine = engine_cls(store, max_batch=3, mode="full")
+        order = []
+        it = iter(plan)
+        exhausted = False
+        while not exhausted or engine.pending:
+            for _ in range(2):     # interleave submission with serving
+                nxt = next(it, None)
+                if nxt is None:
+                    exhausted = True
+                    break
+                engine.submit("g", nxt[0], nxt[1])
+            engine.tick()
+        engine.run_until_drained()
+        for batch in engine.batch_log:
+            order.append(tuple((q.graph, q.model, q.node) for q in batch))
+        return order
+
+    assert run(GNNServeEngine) == run(_LinearPickEngine)
+
+
+# ----------------------------------------------------- halo-aware forming --
+
+def _owner_nodes(sess, owner):
+    lo, hi = sess.routing.shard_range(owner)
+    return np.arange(lo, hi)
+
+
+def test_halo_aware_groups_by_signature(store, data):
+    """Within one owner queue, formation co-batches the seed sharing halo
+    tiles with the head IN FRONT OF an earlier-submitted non-overlapping
+    seed — and counts the shared tiles."""
+    sess = store.sharded_session("g", "gcn", 2)
+    nodes = _owner_nodes(sess, 0)
+    sigs = {int(n): sess.seed_halo_tiles(int(n)) for n in nodes}
+    head, buddy, loner = None, None, None
+    for a in nodes:
+        for b in nodes:
+            if a != b and sigs[int(a)] & sigs[int(b)]:
+                head, buddy = int(a), int(b)
+                break
+        if head is not None:
+            break
+    assert head is not None, "test graph has no overlapping signatures"
+    for c in nodes:
+        if int(c) not in (head, buddy) and not (sigs[int(c)] & sigs[head]):
+            loner = int(c)
+            break
+    assert loner is not None
+
+    engine = ShardedServeEngine(store, 2, max_batch=2, mode="subgraph",
+                                staleness_s=60.0)
+    engine.warmup("g", "gcn")
+    saved0 = engine.halo_bytes_saved
+    engine.submit("g", "gcn", head)
+    engine.submit("g", "gcn", loner)     # FIFO-older than buddy
+    engine.submit("g", "gcn", buddy)
+    engine.run_until_drained()
+    got = [[q.node for q in b] for b in engine.batch_log]
+    assert got == [[head, buddy], [loner]]
+    assert engine.halo_tiles_shared >= len(sigs[head] & sigs[buddy])
+    assert engine.halo_bytes_saved > saved0
+    # the reordered loner still came out bit-exact vs single host
+    single = store.session("g", "gcn")
+    for batch in engine.batch_log:
+        want = single.serve_subgraph(np.asarray([q.node for q in batch]))
+        np.testing.assert_array_equal(np.stack([q.logits for q in batch]),
+                                      want)
+
+
+def test_halo_aware_staleness_bound(store, data):
+    """A request whose wait exceeds ``staleness_s`` preempts signature
+    grouping: it is taken in FIFO order by the next batch formed from its
+    queue, never skipped for better overlap."""
+    sess = store.sharded_session("g", "gcn", 2)
+    nodes = _owner_nodes(sess, 0)
+    sigs = {int(n): sess.seed_halo_tiles(int(n)) for n in nodes}
+    head, buddy, loner = None, None, None
+    for a in nodes:
+        for b in nodes:
+            if a != b and sigs[int(a)] & sigs[int(b)]:
+                head, buddy = int(a), int(b)
+                break
+        if head is not None:
+            break
+    for c in nodes:
+        if int(c) not in (head, buddy) and not (sigs[int(c)] & sigs[head]):
+            loner = int(c)
+            break
+    assert None not in (head, buddy, loner)
+
+    engine = ShardedServeEngine(store, 2, max_batch=2, mode="subgraph",
+                                staleness_s=0.5)
+    engine.warmup("g", "gcn")
+    q_head = engine.submit("g", "gcn", head)
+    q_loner = engine.submit("g", "gcn", loner)
+    engine.submit("g", "gcn", buddy)
+    q_loner.t_submit -= 10.0             # overdue beyond the bound
+    engine.run_until_drained()
+    got = [[q.node for q in b] for b in engine.batch_log]
+    assert got == [[head, loner], [buddy]]
+    assert q_head.done and q_loner.done
+
+
+def test_halo_aware_single_owner_and_fifo_fallback(store, data):
+    """Every halo-aware batch is single-owner (queues are keyed by owning
+    shard), and ``halo_aware=False`` restores the exact FIFO pop."""
+    nodes = np.random.default_rng(3).integers(0, data.n_nodes, size=4 * BATCH)
+    engine = ShardedServeEngine(store, 4, max_batch=BATCH, mode="subgraph")
+    engine.warmup("g", "gcn")
+    engine.submit_many("g", "gcn", nodes)
+    engine.run_until_drained()
+    sess = store.sharded_session("g", "gcn", 4)
+    for batch in engine.batch_log:
+        owners = sess.routing.owner(np.asarray([q.node for q in batch]))
+        assert np.unique(owners).size == 1
+
+    fifo = ShardedServeEngine(store, 4, max_batch=BATCH, mode="subgraph",
+                              halo_aware=False)
+    fifo.warmup("g", "gcn")
+    qs = fifo.submit_many("g", "gcn", nodes)
+    fifo.run_until_drained()
+    assert fifo.halo_bytes_saved == 0
+    # FIFO pop serves each owner queue in submission order
+    by_owner = {}
+    for q in qs:
+        by_owner.setdefault(int(sess.routing.owner(
+            np.asarray([q.node]))[0]), []).append(q.node)
+    got_by_owner = {}
+    for batch in fifo.batch_log:
+        o = int(sess.routing.owner(np.asarray([batch[0].node]))[0])
+        got_by_owner.setdefault(o, []).extend(q.node for q in batch)
+    assert got_by_owner == by_owner
+
+
+# --------------------------------------------------------- bspmm tunable ---
+
+def test_bspmm_block_recorded_and_roundtrips(tmp_path, data):
+    """The Pallas BSpMM block-shape tunable is recorded in plan.json, kept
+    across artifact restore, forces a recompile when changed — and leaves
+    answers unchanged (default-equivalent block, exercised through the
+    kernels in interpret mode)."""
+    from repro.kernels import ops
+    from repro.serve.gnn_session import CompiledGraphSession
+    tiny = make_dataset("cora", seed=0, scale=0.03)
+    params = gnn.init_gcn(jax.random.PRNGKey(0), tiny.x.shape[1], 8,
+                          tiny.n_classes)
+    nodes = np.arange(4)
+
+    st_ref = GraphStore(max_batch=4)
+    st_ref.register_graph("t", tiny)
+    st_ref.register_model("gcn", "gcn", params)
+    ref = st_ref.session("t", "gcn").serve_subgraph(nodes)
+
+    blk = (4, 64)           # tile-row height x feature-block pad
+    ops.force_kernels(True)
+    try:
+        st1 = GraphStore(cache_dir=str(tmp_path), max_batch=4,
+                         use_pallas=True, bspmm_block=blk)
+        st1.register_graph("t", make_dataset("cora", seed=0, scale=0.03))
+        st1.register_model("gcn", "gcn", params)
+        s1 = st1.session("t", "gcn")
+        assert s1.plan.bspmm_block == blk
+        got = s1.serve_subgraph(nodes)
+        np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(np.argmax(got, -1),
+                                      np.argmax(ref, -1))
+
+        # restore with the SAME block: plan (incl. the tunable) survives
+        st2 = GraphStore(cache_dir=str(tmp_path), max_batch=4,
+                         use_pallas=True, bspmm_block=blk)
+        st2.register_graph("t", make_dataset("cora", seed=0, scale=0.03))
+        st2.register_model("gcn", "gcn", params)
+        s2 = st2.session("t", "gcn")
+        assert s2.plan.bspmm_block == blk
+        assert s2.plan.to_json()["bspmm_block"] == list(blk)
+        np.testing.assert_array_equal(s2.serve_subgraph(nodes), got)
+
+        # a different block shape is a trace-time choice: restore refuses
+        assert CompiledGraphSession.load(
+            tmp_path / "t__gcn", st2.graphs["t"], st2.models["gcn"],
+            bspmm_block=(4, 128)) is None
+        assert CompiledGraphSession.load(
+            tmp_path / "t__gcn", st2.graphs["t"], st2.models["gcn"],
+            bspmm_block=blk) is not None
+    finally:
+        ops.force_kernels(False)
+
+
+def test_bspmm_block_validation():
+    """Unsupported block shapes fail loudly at the kernel seam (no silent
+    fallback): non-tile row counts and packed-width feature blocks."""
+    from repro.kernels import bspmm_kernel
+    assert bspmm_kernel._resolve_block(None, 96, False) == 96
+    assert bspmm_kernel._resolve_block((4, 64), 96, False) == 128
+    assert bspmm_kernel._resolve_block((4, None), 96, False) == 96
+    # packed paths keep their word-native width under a word-aligned block
+    assert bspmm_kernel._resolve_block((4, 64), 96, True) == 96
+    with pytest.raises(ValueError):
+        bspmm_kernel._resolve_block((8, 64), 96, False)
+    with pytest.raises(ValueError):
+        bspmm_kernel._resolve_block((4, 48), 96, True)
+    with pytest.raises(ValueError):
+        bspmm_kernel._resolve_block((4, 0), 96, False)
+
+
+# -------------------------------------------------------------- plumbing ---
+
+def test_extract_khop_prepared_object(data):
+    """The sampling-layer extraction entry point returns the prepared-batch
+    object with the same contents as the tuple API."""
+    from repro.graphs import sampling
+    csr = sampling.to_csr(data.edges, data.n_nodes)
+    seeds = np.array([1, 5, 9])
+    ex = sampling.extract_khop(csr, seeds, 2)
+    want = sampling.khop_subgraph(csr, seeds, 2)
+    np.testing.assert_array_equal(ex.sub_nodes, want[0])
+    np.testing.assert_array_equal(ex.sub_edges, want[1])
+    np.testing.assert_array_equal(ex.seed_pos, want[2])
+    np.testing.assert_array_equal(ex.sub_nodes[ex.seed_pos], seeds)
