@@ -19,7 +19,8 @@ import numpy as np
 
 from repro.graphs.datasets import make_dataset
 from repro.models import gnn
-from repro.serve import GNNServeEngine, GraphStore
+from repro.serve import (AdmissionController, GNNServeEngine, GraphStore,
+                         TenantPolicy)
 
 from .common import csv_row
 
@@ -52,6 +53,118 @@ def _bench_mode(store: GraphStore, family: str, mode: str, n_queries: int,
     snap["steady_state_compiles"] = engine.compile_count - c0
     engine.close()
     return snap
+
+
+def _bench_tenants(store: GraphStore, family: str, n_nodes: int,
+                   batch: int, n_good: int, seed: int = 0) -> dict:
+    """Two-tenant overload scenario: ``hog`` submits 10x the well-behaved
+    ``good`` tenant's volume against a rate limit + queue-depth bound, so
+    most of its traffic comes back typed (shed at the depth bound while
+    tokens remain, throttled once the bucket drains). Records the admission
+    outcomes, the weighted fairness of what WAS admitted, and the good
+    tenant's p99 against its own solo run — the acceptance gauge is
+    ``good_p99_within_2x_solo``."""
+    rng = np.random.default_rng(seed)
+    good_nodes = rng.integers(0, n_nodes, size=n_good)
+    policies = dict(
+        good=TenantPolicy(weight=8),
+        hog=TenantPolicy(rate_qps=5.0, burst=batch,
+                         max_queue_depth=batch, weight=1),
+    )
+
+    def one_run(with_hog: bool) -> dict:
+        engine = GNNServeEngine(
+            store, max_batch=batch, mode="subgraph",
+            admission=AdmissionController(policies=dict(policies)))
+        engine.warmup("bench", family)
+        for i in range(0, good_nodes.size, batch):
+            engine.submit_many("bench", family, good_nodes[i:i + batch],
+                               tenant="good")
+            if with_hog:                 # 10x the good tenant's volume
+                hog_nodes = rng.integers(0, n_nodes, size=10 * batch)
+                engine.submit_many("bench", family, hog_nodes, tenant="hog")
+            # two service slots per arrival wave: the engine has the
+            # capacity to absorb the hog's ADMITTED trickle, so the good
+            # tenant's p99 reflects scheduling, not an undersized server
+            engine.tick()
+            engine.tick()
+        engine.run_until_drained()
+        snap = engine.snapshot()
+        engine.close()
+        return snap
+
+    solo = one_run(False)
+    mixed = one_run(True)
+    good, hog = mixed["tenants"]["good"], mixed["tenants"]["hog"]
+    p99_solo = solo["tenants"]["good"]["latency"]["p99_ms"]
+    p99_mixed = good["latency"]["p99_ms"]
+    def _fin(v):                       # inf -> null (strict-JSON safe)
+        return None if v is None or np.isinf(v) else v
+
+    return dict(
+        family=family,
+        policy={t: dict(rate_qps=_fin(p.rate_qps),
+                        burst=_fin(p.bucket_capacity),
+                        weight=p.weight, max_queue_depth=p.max_queue_depth)
+                for t, p in policies.items()},
+        good_solo=solo["tenants"]["good"],
+        good_mixed=good,
+        hog_mixed=hog,
+        hog_shed_rate=hog["shed_rate"],
+        hog_reject_rate=hog["reject_rate"],
+        fairness_served_ratio=(good["queries"] / max(hog["queries"], 1)),
+        good_p99_solo_ms=p99_solo,
+        good_p99_mixed_ms=p99_mixed,
+        good_p99_ratio=p99_mixed / max(p99_solo, 1e-9),
+        good_p99_within_2x_solo=bool(p99_mixed <= 2.0 * p99_solo),
+    )
+
+
+def _tenants_row(section: dict, suffix: str = "") -> None:
+    """THE csv emitter of the tenants section — shared by ``run()`` and the
+    standalone ``--tenants`` entry so the row never drifts between them."""
+    csv_row("serve_gnn/tenants",
+            section["good_p99_mixed_ms"] * 1e3,
+            f"good_p99_solo_ms={section['good_p99_solo_ms']:.2f};"
+            f"good_p99_mixed_ms={section['good_p99_mixed_ms']:.2f};"
+            f"p99_ratio={section['good_p99_ratio']:.2f};"
+            f"within_2x={section['good_p99_within_2x_solo']};"
+            f"hog_reject_rate={section['hog_reject_rate']:.2f};"
+            f"hog_shed_rate={section['hog_shed_rate']:.2f};"
+            f"hog_accepted={section['hog_mixed']['accepted']}"
+            f"{suffix}")
+
+
+def _merge_results(section: str, payload: dict) -> Path:
+    """Write ``payload`` under ``section`` of BENCH_serve_gnn.json, keeping
+    whatever other sections a previous (possibly fuller) run recorded."""
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = RESULTS / "BENCH_serve_gnn.json"
+    summary = json.loads(out.read_text()) if out.exists() else {}
+    summary[section] = payload
+    out.write_text(json.dumps(summary, indent=2))
+    return out
+
+
+def run_tenants(full: bool = False) -> dict:
+    """Standalone ``--tenants`` entry: the overload scenario only, merged
+    into the existing results JSON."""
+    jax.config.update("jax_platform_name", "cpu")
+    scale = 1.0 if full else 0.15
+    batch = 32 if full else 16
+    hidden = 64 if full else 32
+    n_good = 320 if full else 96
+
+    d = make_dataset("cora", seed=0, scale=scale)
+    store = GraphStore(max_batch=batch)
+    store.register_graph("bench", d)
+    store.register_model("gcn", "gcn",
+                         gnn.init_gcn(jax.random.PRNGKey(0), d.x.shape[1],
+                                      hidden, d.n_classes))
+    section = _bench_tenants(store, "gcn", d.n_nodes, batch, n_good)
+    out = _merge_results("tenants", section)
+    _tenants_row(section, suffix=f";wrote={out}")
+    return section
 
 
 def run(full: bool = False) -> dict:
@@ -102,6 +215,13 @@ def run(full: bool = False) -> dict:
                 f"steady_compiles={snap['steady_state_compiles']}")
         summary["families"][fam] = fam_out
 
+    # the multi-tenant overload scenario (fairness + shed-rate + the good
+    # tenant's p99-vs-solo acceptance gauge)
+    summary["tenants"] = _bench_tenants(
+        store, "gcn", d.n_nodes, batch,
+        n_good=(320 if full else 96))
+    _tenants_row(summary["tenants"])
+
     RESULTS.mkdir(parents=True, exist_ok=True)
     out = RESULTS / "BENCH_serve_gnn.json"
     out.write_text(json.dumps(summary, indent=2))
@@ -113,4 +233,11 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    run(full=ap.parse_args().full)
+    ap.add_argument("--tenants", action="store_true",
+                    help="run only the multi-tenant overload scenario and "
+                    "merge it into results/BENCH_serve_gnn.json")
+    args = ap.parse_args()
+    if args.tenants:
+        run_tenants(full=args.full)
+    else:
+        run(full=args.full)

@@ -40,7 +40,8 @@ import numpy as np
 
 from repro.graphs.datasets import make_dataset
 from repro.models import gnn
-from repro.serve import GNNServeEngine, GraphStore, ShardedServeEngine
+from repro.serve import (AdmissionController, GNNServeEngine, GraphStore,
+                         ShardedServeEngine, TenantPolicy)
 
 from .common import csv_row
 
@@ -153,6 +154,32 @@ def _pipeline_compare(store, fam: str, p: int, executor: str,
     )
 
 
+def _bench_tenants_sharded(store, fam: str, p: int, executor: str,
+                           n_nodes: int, batch: int,
+                           n_queries: int) -> dict:
+    """Weighted two-tenant wave through the sharded engine: tenancy keys
+    ride inside the (owner, tenant) queues, so every served batch stays
+    single-owner AND single-tenant; records the per-tenant breakdown and
+    the served ratio against the 4:1 weights."""
+    admission = AdmissionController(
+        policies={"gold": TenantPolicy(weight=4),
+                  "base": TenantPolicy(weight=1)})
+    engine = ShardedServeEngine(store, p, max_batch=batch, mode="subgraph",
+                                executor=executor, admission=admission)
+    engine.warmup("bench", fam)
+    rng = np.random.default_rng(3)
+    nodes = rng.integers(0, n_nodes, size=n_queries)
+    for i, n in enumerate(nodes):
+        engine.submit("bench", fam, n,
+                      tenant=("gold" if i % 2 else "base"))
+    engine.run_until_drained()
+    snap = engine.snapshot()
+    mixed = sum(len({q.tenant for q in b}) != 1 for b in engine.batch_log)
+    engine.close()
+    return dict(n_shards=p, weights=dict(gold=4, base=1),
+                tenants=snap["tenants"], tenant_mixed_batches=mixed)
+
+
 def run(full: bool = False, executor: str = "host",
         pipeline: bool = False) -> dict:
     # the SPMD comparison needs P host devices; only effective when jax has
@@ -253,6 +280,15 @@ def run(full: bool = False, executor: str = "host",
                     f"bn_drift_max={drift['max_abs_logit_delta']:.2e};"
                     f"bn_argmax_agree={drift['argmax_agreement']:.4f}")
         summary["families"][fam] = fam_out
+
+    summary["tenants"] = _bench_tenants_sharded(
+        store, "gcn", SHARD_COUNTS[0], executor, d.n_nodes, batch,
+        n_queries)
+    ten = summary["tenants"]
+    csv_row("sharded_serve/tenants", 0.0,
+            f"gold_qps={ten['tenants']['gold']['qps']:.1f};"
+            f"base_qps={ten['tenants']['base']['qps']:.1f};"
+            f"mixed_batches={ten['tenant_mixed_batches']}")
 
     RESULTS.mkdir(parents=True, exist_ok=True)
     out = RESULTS / "BENCH_sharded_serve.json"

@@ -39,6 +39,22 @@ from repro.core.frdc import FRDCMatrix, GROUP, TILE
 WORD = 32
 
 
+def _gather_copy(x_hbm, xg_ref, copy_sems, col_idx_ref, g, t):
+    """The Step-② DMA descriptor for neighbor slab ``t`` of group ``g``:
+    4 packed activation rows at ``col_idx[g, t] * TILE`` -> VMEM scratch.
+
+    Built through ONE helper for both halves of the start/wait pair: a
+    TPU DMA wait must be issued with the SAME descriptor (source slice,
+    destination, semaphore) the copy was started with — reconstructing
+    the wait from a different source slice (as an earlier version did,
+    waiting on ``x_hbm[0:TILE]`` for copies started at dynamic rows) is a
+    latent hazard off interpret mode on real hardware."""
+    row4 = col_idx_ref[g, t] * TILE
+    return pltpu.make_async_copy(
+        x_hbm.at[pl.ds(row4, TILE)], xg_ref.at[pl.ds(t * TILE, TILE)],
+        copy_sems.at[t])
+
+
 def _coarsen_one(tiles_i32: jax.Array) -> jax.Array:
     """(1, GROUP) int32 4x4-tiles -> (TILE,) uint32 adjacency words (Step ③)."""
     t32 = tiles_i32.astype(jnp.uint32).reshape(GROUP)
@@ -67,14 +83,9 @@ def _bits_kernel(col_idx_ref, first_ref, last_ref, row_ref, tiles_ref,
 
     # -- Step ②: gather 8 neighbor 4-row slabs of packed activations ---------
     for t in range(GROUP):
-        row4 = col_idx_ref[g, t] * TILE
-        pltpu.make_async_copy(
-            x_hbm.at[pl.ds(row4, TILE)], xg_ref.at[pl.ds(t * TILE, TILE)],
-            copy_sems.at[t]).start()
+        _gather_copy(x_hbm, xg_ref, copy_sems, col_idx_ref, g, t).start()
     for t in range(GROUP):
-        pltpu.make_async_copy(
-            x_hbm.at[pl.ds(0, TILE)], xg_ref.at[pl.ds(t * TILE, TILE)],
-            copy_sems.at[t]).wait()
+        _gather_copy(x_hbm, xg_ref, copy_sems, col_idx_ref, g, t).wait()
 
     # -- Step ③: dynamic coarsening ------------------------------------------
     a_words = _coarsen_one(tiles_ref[...])                 # (TILE,) uint32
@@ -120,14 +131,9 @@ def _fp_kernel(col_idx_ref, first_ref, last_ref, row_ref, tiles_ref,
     del prefill_ref
     g = pl.program_id(0)
     for t in range(GROUP):
-        row4 = col_idx_ref[g, t] * TILE
-        pltpu.make_async_copy(
-            x_hbm.at[pl.ds(row4, TILE)], xg_ref.at[pl.ds(t * TILE, TILE)],
-            copy_sems.at[t]).start()
+        _gather_copy(x_hbm, xg_ref, copy_sems, col_idx_ref, g, t).start()
     for t in range(GROUP):
-        pltpu.make_async_copy(
-            x_hbm.at[pl.ds(0, TILE)], xg_ref.at[pl.ds(t * TILE, TILE)],
-            copy_sems.at[t]).wait()
+        _gather_copy(x_hbm, xg_ref, copy_sems, col_idx_ref, g, t).wait()
 
     a_words = _coarsen_one(tiles_ref[...])                 # (TILE,)
     k = jnp.arange(GROUP * TILE, dtype=jnp.uint32)
@@ -196,10 +202,16 @@ def _resolve_block(block_shape, f: int, packed_width: bool) -> int:
     if feats <= 0:
         raise ValueError(f"block feats must be positive, got {feats}")
     if packed_width:
-        if feats % WORD:
+        # the packed kernels keep their word-native storage width, so a
+        # block is legal when word-aligned OR exactly the REAL feature
+        # width (which may be narrower than the padded word width — the
+        # tail-masked last word); validation must therefore see the real
+        # width, not the word-padded one
+        if feats % WORD and feats != f:
             raise ValueError(
                 f"packed BSpMM features are {WORD}-bit words; block feats "
-                f"{feats} must be word-aligned")
+                f"{feats} must be word-aligned or equal the real feature "
+                f"width {f}")
         return f
     return -(-f // feats) * feats
 
@@ -216,7 +228,9 @@ def bspmm_bits(adj: FRDCMatrix, x_packed: jax.Array, n_feat: int | None = None,
     """
     n, wf = x_packed.shape
     f = wf * WORD if n_feat is None else int(n_feat)
-    _resolve_block(block_shape, wf * WORD, packed_width=True)
+    # validate the block tunable against the ACTUAL feature width (a caller
+    # may serve n_feat narrower than the padded word width wf * WORD)
+    _resolve_block(block_shape, f, packed_width=True)
     pad_rows = (-n) % TILE
     x_p = jnp.pad(x_packed, ((0, pad_rows), (0, 0)))
     r4 = adj.n_tile_rows * TILE

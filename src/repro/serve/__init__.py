@@ -3,24 +3,32 @@
 ``engine``       — transformer continuous-batching serve loop (LLM path).
 ``session_core`` — shared compile/calibrate/bucketed-serve machinery,
                    including the PreparedBatch extract-stage objects.
+``admission``    — multi-tenant admission control (TenantPolicy token
+                   buckets, typed accept/throttle/shed decisions) + the
+                   weighted virtual-time scheduler of the engines.
 ``gnn_engine``   — micro-batched node-query engine over compiled sessions:
                    two-stage extract/compute pipeline (``pipeline_depth``),
-                   heap-based oldest-head scheduling.
+                   tenant-aware weighted fair scheduling.
 ``gnn_session``  — GraphStore / CompiledGraphSession artifacts (GNN path).
 ``sharded``      — partitioned sessions: cross-shard k-hop routing + halo
                    exchange, halo-aware batch formation
                    (ShardedGraphSession / ShardedServeEngine).
 ``metrics``      — latency percentiles / QPS / cache counters + the
-                   extract/compute breakdown and overlap-ratio gauge.
+                   extract/compute breakdown, overlap-ratio gauge, and
+                   per-tenant admission/latency breakdowns.
 """
+from .admission import (AdmissionController, AdmissionDecision,
+                        DEFAULT_TENANT, TenantPolicy)
 from .gnn_engine import GNNServeEngine, NodeQuery
 from .gnn_session import CompiledGraphSession, GraphStore, SessionPlan
-from .metrics import LatencyStats, ServeMetrics
+from .metrics import LatencyStats, ServeMetrics, TenantMetrics
 from .sharded import (ShardedGraphSession, ShardedServeEngine, ShardPlan,
                       ShardPlanner)
 
 __all__ = [
-    "GNNServeEngine", "NodeQuery", "CompiledGraphSession", "GraphStore",
-    "SessionPlan", "LatencyStats", "ServeMetrics", "ShardedGraphSession",
-    "ShardedServeEngine", "ShardPlan", "ShardPlanner",
+    "AdmissionController", "AdmissionDecision", "DEFAULT_TENANT",
+    "TenantPolicy", "GNNServeEngine", "NodeQuery", "CompiledGraphSession",
+    "GraphStore", "SessionPlan", "LatencyStats", "ServeMetrics",
+    "TenantMetrics", "ShardedGraphSession", "ShardedServeEngine",
+    "ShardPlan", "ShardPlanner",
 ]

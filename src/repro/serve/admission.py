@@ -1,0 +1,301 @@
+"""Multi-tenant admission control + weighted fair scheduling for the GNN
+serving engines.
+
+Two concerns live here, both previously inlined (or absent) in
+:class:`~repro.serve.gnn_engine.GNNServeEngine`:
+
+  * **Admission** — every ``submit()`` is checked against the submitting
+    tenant's :class:`TenantPolicy` BEFORE it touches a queue: a token bucket
+    enforces the tenant's sustained rate (``rate_qps``, burst capacity
+    ``burst``), and ``max_queue_depth`` bounds the tenant's queued backlog.
+    The outcome is a typed :class:`AdmissionDecision` — ``accept`` /
+    ``throttle`` (rate limit, with a ``retry_after_s`` hint) / ``shed``
+    (overload) — attached to the returned query, NEVER an exception: one
+    tenant blowing its quota must bounce back to that tenant's caller, not
+    crash a tick that is also carrying other tenants' queries.
+
+  * **Scheduling** — the engine's queue pick generalizes the lazy
+    oldest-head heap to **weighted start-time fair queueing across
+    tenants**: each tenant carries a virtual time that advances by
+    ``batch_size / weight`` whenever one of its queues is served, and the
+    pick goes to the backlogged tenant with the smallest virtual start tag
+    (FIFO oldest-head WITHIN a tenant — with a single tenant this is
+    exactly the pre-tenancy scheduler). Higher-weight tenants therefore
+    drain proportionally faster under contention, while the **staleness
+    bound** keeps the scheduler starvation-free: any queue head that has
+    waited longer than ``staleness_bound_s`` preempts the virtual-time
+    order and is served globally FIFO among the overdue — a weight-1 tenant
+    behind a weight-100 firehose still sees every request picked within
+    (roughly) the bound plus one batch service time.
+
+The controller is NOT internally locked: the engine already serializes
+queue surgery under its ``_qlock`` and calls every mutating method while
+holding it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+import time
+from typing import Deque, Dict, List, Optional, Tuple
+
+DEFAULT_TENANT = "default"
+
+ACCEPT = "accept"
+THROTTLE = "throttle"
+SHED = "shed"
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantPolicy:
+    """Per-tenant serving contract.
+
+    ``rate_qps``         sustained admission rate (token-bucket refill);
+                         ``inf`` disables rate limiting.
+    ``burst``            bucket capacity — how far above the sustained rate
+                         a short spike may go; defaults to
+                         ``max(1, rate_qps)`` (one second of traffic).
+    ``weight``           scheduler share: under contention a tenant drains
+                         proportionally to its weight (integer >= 1).
+    ``max_queue_depth``  queued-backlog bound; submissions beyond it are
+                         shed (``None`` = unbounded).
+    """
+    rate_qps: float = math.inf
+    burst: Optional[float] = None
+    weight: int = 1
+    max_queue_depth: Optional[int] = None
+
+    def __post_init__(self):
+        if not self.rate_qps > 0:
+            raise ValueError(f"rate_qps must be > 0, got {self.rate_qps}")
+        if self.burst is not None and not self.burst >= 1:
+            raise ValueError(f"burst must be >= 1, got {self.burst}")
+        if int(self.weight) != self.weight or self.weight < 1:
+            raise ValueError(f"weight must be an integer >= 1, "
+                             f"got {self.weight}")
+        if self.max_queue_depth is not None and self.max_queue_depth < 1:
+            raise ValueError(f"max_queue_depth must be >= 1, "
+                             f"got {self.max_queue_depth}")
+
+    @property
+    def bucket_capacity(self) -> float:
+        if self.burst is not None:
+            return float(self.burst)
+        return math.inf if math.isinf(self.rate_qps) \
+            else max(1.0, self.rate_qps)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionDecision:
+    """Typed outcome of one ``submit()`` admission check."""
+    action: str                      # ACCEPT | THROTTLE | SHED
+    tenant: str
+    reason: str = ""
+    retry_after_s: float = 0.0
+
+    @property
+    def accepted(self) -> bool:
+        return self.action == ACCEPT
+
+
+class _TokenBucket:
+    """Continuous-refill token bucket (one token per admitted query)."""
+
+    __slots__ = ("rate", "capacity", "tokens", "t_last")
+
+    def __init__(self, rate: float, capacity: float, now: float):
+        self.rate = rate
+        self.capacity = capacity
+        self.tokens = capacity
+        self.t_last = now
+
+    def try_take(self, now: float) -> Tuple[bool, float]:
+        """Take one token; returns (ok, retry_after_s)."""
+        if math.isinf(self.rate):
+            return True, 0.0
+        self.tokens = min(self.capacity,
+                          self.tokens + (now - self.t_last) * self.rate)
+        self.t_last = now
+        if self.tokens >= 1.0:
+            self.tokens -= 1.0
+            return True, 0.0
+        return False, (1.0 - self.tokens) / self.rate
+
+
+class AdmissionController:
+    """Tenant policies + admission state + the weighted fair scheduler.
+
+    Queue keys are opaque tuples whose LAST component is the tenant (the
+    engines' ``_queue_key`` convention); the controller never inspects the
+    rest. Scheduler state is the per-tenant lazy oldest-head heap (the same
+    stale-entry discipline the pre-tenancy engine heap used) plus the
+    virtual clocks of start-time fair queueing.
+    """
+
+    # admits between sweeps of quiescent per-tenant state (buckets that
+    # have refilled to capacity, expired virtual-time debt, zero backlogs)
+    SWEEP_EVERY = 4096
+
+    def __init__(self, policies: Optional[Dict[str, TenantPolicy]] = None,
+                 default_policy: Optional[TenantPolicy] = None,
+                 staleness_bound_s: float = 1.0):
+        self.default_policy = default_policy or TenantPolicy()
+        self.staleness_bound_s = float(staleness_bound_s)
+        self._policies: Dict[str, TenantPolicy] = dict(policies or {})
+        self._buckets: Dict[str, _TokenBucket] = {}
+        self._backlog: Dict[str, int] = {}
+        # weighted virtual time: per-tenant finish tags + the global clock
+        self._vtime: Dict[str, float] = {}
+        self._vclock = 0.0
+        # per-tenant lazy oldest-head heaps: (head t_submit, seq, key)
+        self._heaps: Dict[str, List[Tuple[float, int, tuple]]] = {}
+        self._seq = 0
+        self._admits_since_sweep = 0
+
+    # ------------------------------------------------------------ policy ----
+    def policy(self, tenant: str) -> TenantPolicy:
+        return self._policies.get(tenant, self.default_policy)
+
+    def set_policy(self, tenant: str, policy: TenantPolicy) -> None:
+        """Install (or replace) a tenant's policy; its token bucket restarts
+        full at the new rate."""
+        self._policies[tenant] = policy
+        self._buckets.pop(tenant, None)
+
+    def backlog(self, tenant: str) -> int:
+        """Queries currently queued (not yet popped into a batch)."""
+        return self._backlog.get(tenant, 0)
+
+    # --------------------------------------------------------- admission ----
+    def admit(self, tenant: str,
+              now: Optional[float] = None) -> AdmissionDecision:
+        """Decide one submission. Depth is checked before rate so a shed
+        (overload) submission does not also burn a rate token."""
+        now = time.perf_counter() if now is None else now
+        self._admits_since_sweep += 1
+        if self._admits_since_sweep >= self.SWEEP_EVERY:
+            self._sweep(now)
+        pol = self.policy(tenant)
+        depth = self._backlog.get(tenant, 0)
+        if pol.max_queue_depth is not None and depth >= pol.max_queue_depth:
+            return AdmissionDecision(
+                SHED, tenant,
+                reason=f"queue depth {depth} at limit {pol.max_queue_depth}")
+        bucket = self._buckets.get(tenant)
+        if bucket is None:
+            bucket = _TokenBucket(pol.rate_qps, pol.bucket_capacity, now)
+            self._buckets[tenant] = bucket
+        ok, retry = bucket.try_take(now)
+        if not ok:
+            return AdmissionDecision(
+                THROTTLE, tenant, retry_after_s=retry,
+                reason=f"rate limit {pol.rate_qps:g} qps exceeded")
+        return AdmissionDecision(ACCEPT, tenant)
+
+    def _sweep(self, now: float) -> None:
+        """Drop quiescent per-tenant state, so high-cardinality tenant ids
+        (per-user tags) don't grow the controller without bound. Buckets
+        refilled to capacity and zero backlogs are exact state
+        equivalences; pruning an IDLE tenant's virtual-time tag forgives
+        at most its last batch / weight of residual debt — the standard
+        fair-queueing semantics for a flow that drains and re-arrives
+        (debt is only load-bearing while the tenant stays backlogged,
+        which is exactly when its heap keeps the tag alive)."""
+        self._admits_since_sweep = 0
+        for t, b in list(self._buckets.items()):
+            if math.isinf(b.rate) \
+                    or b.tokens + (now - b.t_last) * b.rate >= b.capacity:
+                del self._buckets[t]
+        for t in list(self._vtime):
+            if t not in self._heaps and self._backlog.get(t, 0) == 0:
+                del self._vtime[t]
+        for t in list(self._backlog):
+            if self._backlog[t] == 0:
+                del self._backlog[t]
+
+    # --------------------------------------------------------- scheduler ----
+    def on_enqueued(self, tenant: str) -> None:
+        self._backlog[tenant] = self._backlog.get(tenant, 0) + 1
+
+    def push_head(self, key: tuple, tenant: str, t_submit: float) -> None:
+        """Record that ``key``'s queue (re)gained a head submitted at
+        ``t_submit`` — the lazy-heap push of the pre-tenancy scheduler, now
+        into the tenant's own heap."""
+        self._seq += 1
+        heapq.heappush(self._heaps.setdefault(tenant, []),
+                       (t_submit, self._seq, key))
+
+    def _peek(self, tenant: str, queues: Dict[tuple, Deque]
+              ) -> Optional[Tuple[float, tuple]]:
+        """Valid oldest head of one tenant's heap (lazy refresh: entries
+        whose recorded head was served or reordered away are dropped and
+        the live head re-pushed)."""
+        heap = self._heaps.get(tenant)
+        while heap:
+            t, _, key = heap[0]
+            dq = queues.get(key)
+            if not dq:
+                heapq.heappop(heap)
+                continue
+            if dq[0].t_submit != t:
+                heapq.heappop(heap)
+                self.push_head(key, tenant, dq[0].t_submit)
+                continue
+            return t, key
+        # fully drained: drop the tenant's heap so pick() only ever scans
+        # tenants with live backlog (push_head recreates it on demand)
+        if heap is not None:
+            del self._heaps[tenant]
+        return None
+
+    def pick(self, queues: Dict[tuple, Deque],
+             now: Optional[float] = None) -> Optional[tuple]:
+        """The queue to serve next.
+
+        Overdue heads (waiting past ``staleness_bound_s``) win globally in
+        FIFO order — the starvation bound. Otherwise the backlogged tenant
+        with the smallest virtual start tag wins, ties broken by oldest
+        head — which, with one tenant, IS the oldest-head pick of the
+        pre-tenancy heap.
+
+        Cost: O(#currently-backlogged tenants) per pick, each a lazy
+        O(log #queues) peek (drained tenants leave the scan via the
+        ``_peek`` prune). An incremental tenant-level structure — a heap
+        over virtual start tags plus a global oldest-head tracker for the
+        staleness override — is the open optimization if concurrently
+        backlogged tenant counts grow past a few thousand.
+        """
+        now = time.perf_counter() if now is None else now
+        best_key, best_rank = None, None
+        overdue_key, overdue_t = None, math.inf
+        for tenant in list(self._heaps):
+            head = self._peek(tenant, queues)
+            if head is None:
+                continue
+            t, key = head
+            if now - t >= self.staleness_bound_s and t < overdue_t:
+                overdue_key, overdue_t = key, t
+            rank = (max(self._vtime.get(tenant, 0.0), self._vclock), t)
+            if best_rank is None or rank < best_rank:
+                best_key, best_rank = key, rank
+        return best_key if overdue_key is None else overdue_key
+
+    def on_served(self, tenant: str, n: int) -> None:
+        """Account one popped batch of ``n`` queries: the tenant's virtual
+        time advances by ``n / weight`` from its start tag (so a tenant
+        with twice the weight pays half the virtual cost per query), and
+        its queued backlog shrinks."""
+        w = self.policy(tenant).weight
+        start = max(self._vtime.get(tenant, 0.0), self._vclock)
+        self._vclock = start
+        self._vtime[tenant] = start + n / w
+        self._backlog[tenant] = max(0, self._backlog.get(tenant, 0) - n)
+
+    def on_requeued(self, tenant: str, n: int) -> None:
+        """A popped batch bounced back to its queue (extract/compute
+        failure path): restore the backlog accounting. The virtual-time
+        charge of the failed service attempt deliberately stands — a
+        tenant whose batches keep failing must not starve its neighbors by
+        replaying at zero virtual cost."""
+        self._backlog[tenant] = self._backlog.get(tenant, 0) + n

@@ -31,7 +31,6 @@ from __future__ import annotations
 
 import concurrent.futures
 import dataclasses
-import heapq
 import threading
 import time
 from collections import deque
@@ -39,13 +38,20 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from .admission import (DEFAULT_TENANT, AdmissionController,
+                        AdmissionDecision)
 from .gnn_session import CompiledGraphSession, GraphStore
 from .metrics import ServeMetrics
 
 
 @dataclasses.dataclass
 class NodeQuery:
-    """One node-classification request and, once served, its answer."""
+    """One node-classification request and, once served, its answer.
+
+    ``tenant`` tags the submitter for admission control and weighted
+    scheduling; ``admission`` is the typed decision its submission drew —
+    a throttled/shed query is returned immediately (``rejected`` True,
+    never queued, never ``done``) so the caller can back off or retry."""
     graph: str
     model: str
     node: int
@@ -54,6 +60,8 @@ class NodeQuery:
     t_done: float = 0.0
     logits: Optional[np.ndarray] = None
     pred: Optional[int] = None
+    tenant: str = DEFAULT_TENANT
+    admission: Optional[AdmissionDecision] = None
 
     @property
     def latency_s(self) -> float:
@@ -62,6 +70,10 @@ class NodeQuery:
     @property
     def done(self) -> bool:
         return self.pred is not None
+
+    @property
+    def rejected(self) -> bool:
+        return self.admission is not None and not self.admission.accepted
 
 
 @dataclasses.dataclass
@@ -85,7 +97,8 @@ class GNNServeEngine:
 
     def __init__(self, store: GraphStore, max_batch: Optional[int] = None,
                  mode: str = "auto", full_cache_max_nodes: int = 200_000,
-                 keep_finished: int = 100_000, pipeline_depth: int = 0):
+                 keep_finished: int = 100_000, pipeline_depth: int = 0,
+                 admission: Optional[AdmissionController] = None):
         if mode not in ("auto", "full", "subgraph"):
             raise ValueError(mode)
         self.store = store
@@ -103,11 +116,12 @@ class GNNServeEngine:
         # queue-structure guard: the pipelined extract stage (pick + pop)
         # runs on the background worker concurrently with submit()
         self._qlock = threading.Lock()
-        # lazy oldest-head heap over queue heads: (head t_submit, seq, key);
-        # stale entries are dropped/refreshed when encountered, so _pick_queue
-        # is O(log #queues) instead of a linear scan per tick
-        self._heap: List[Tuple[float, int, tuple]] = []
-        self._heap_seq = 0
+        # tenancy: admission decisions at submit + the weighted virtual-time
+        # scheduler that generalizes the old lazy oldest-head heap (every
+        # mutating call happens under _qlock). The default controller admits
+        # everything and weights every tenant equally — the pre-tenancy
+        # engine behavior.
+        self.admission = admission or AdmissionController()
         # pipeline state: one background extraction + launched batches
         self._pool: Optional[concurrent.futures.ThreadPoolExecutor] = None
         self._extract_future = None
@@ -123,10 +137,14 @@ class GNNServeEngine:
         self.batch_log: Deque[List[NodeQuery]] = deque(maxlen=4096)
 
     # ------------------------------------------------------------ intake ----
-    def submit(self, graph: str, model: str, node: int) -> NodeQuery:
-        """Enqueue one node query. Validates here, not at serve time: a bad
-        request must bounce back to the submitter, never crash a tick that
-        is also carrying other callers' queries."""
+    def submit(self, graph: str, model: str, node: int,
+               tenant: str = DEFAULT_TENANT) -> NodeQuery:
+        """Enqueue one node query for ``tenant``. Request validation raises
+        here (a malformed request is the submitting caller's bug); admission
+        outcomes do NOT — a throttled or shed query comes back immediately
+        with its typed :class:`AdmissionDecision` attached and is never
+        queued, so one tenant over quota can never crash (or clog) a tick
+        that is also carrying other tenants' queries."""
         if graph not in self.store.graphs:
             raise KeyError(f"unknown graph {graph!r}; "
                            f"have {sorted(self.store.graphs)}")
@@ -138,11 +156,16 @@ class GNNServeEngine:
         if not 0 <= node < n:
             raise ValueError(f"node {node} out of range for graph "
                              f"{graph!r} with {n} nodes")
-        q = NodeQuery(graph=graph, model=model, node=node)
+        q = NodeQuery(graph=graph, model=model, node=node, tenant=tenant)
         q.qid, self._next_qid = self._next_qid, self._next_qid + 1
-        key = self._queue_key(graph, model, node)
+        key = self._queue_key(graph, model, node, tenant)
         with self._qlock:
             q.t_submit = time.perf_counter()
+            q.admission = self.admission.admit(tenant, q.t_submit)
+            self.metrics.record_admission(tenant, q.admission.action)
+            if not q.admission.accepted:
+                return q
+            self.admission.on_enqueued(tenant)
             dq = self._queues.setdefault(key, deque())
             dq.append(q)
             self._unanswered += 1
@@ -151,15 +174,20 @@ class GNNServeEngine:
         self.metrics.start_clock()
         return q
 
-    def _queue_key(self, graph: str, model: str, node: int) -> tuple:
-        """Queue routing hook: one FIFO per (graph, model) here; the sharded
-        engine additionally keys by the node's owning shard so every served
-        micro-batch is a single-owner group."""
-        return (graph, model)
+    def _queue_key(self, graph: str, model: str, node: int,
+                   tenant: str = DEFAULT_TENANT) -> tuple:
+        """Queue routing hook: one FIFO per (graph, model, tenant) here; the
+        sharded engine additionally keys by the node's owning shard so every
+        served micro-batch is a single-owner group. The tenant is always the
+        LAST key component (the admission controller's convention), so
+        batches never mix tenants — per-tenant latency attribution and the
+        sharded engine's single-owner co-batching both survive tenancy."""
+        return (graph, model, tenant)
 
-    def submit_many(self, graph: str, model: str,
-                    nodes: np.ndarray) -> List[NodeQuery]:
-        return [self.submit(graph, model, n) for n in np.asarray(nodes)]
+    def submit_many(self, graph: str, model: str, nodes: np.ndarray,
+                    tenant: str = DEFAULT_TENANT) -> List[NodeQuery]:
+        return [self.submit(graph, model, n, tenant=tenant)
+                for n in np.asarray(nodes)]
 
     @property
     def pending(self) -> int:
@@ -189,28 +217,15 @@ class GNNServeEngine:
 
     # --------------------------------------------------------- scheduling ---
     def _heap_push(self, key: tuple, t: float) -> None:
-        self._heap_seq += 1
-        heapq.heappush(self._heap, (t, self._heap_seq, key))
+        self.admission.push_head(key, key[-1], t)
 
     def _pick_queue(self) -> Optional[tuple]:
-        """Oldest-waiting queue head via the lazy heap (caller holds
-        ``_qlock``). Entries whose recorded head no longer matches (head was
-        served, or batch formation reordered the queue) are dropped and the
-        current head re-pushed, so the top valid entry IS the queue whose
-        head request has waited longest — the same pick the linear scan
-        made, in O(log #queues)."""
-        while self._heap:
-            t, _, key = self._heap[0]
-            dq = self._queues.get(key)
-            if not dq:
-                heapq.heappop(self._heap)
-                continue
-            if dq[0].t_submit != t:
-                heapq.heappop(self._heap)
-                self._heap_push(key, dq[0].t_submit)
-                continue
-            return key
-        return None
+        """Next queue to serve (caller holds ``_qlock``): the admission
+        controller's weighted virtual-time pick — oldest head within a
+        tenant, weighted fair across tenants, overdue heads (past the
+        staleness bound) globally FIFO. With a single tenant this is
+        exactly the old lazy oldest-head heap pick."""
+        return self.admission.pick(self._queues)
 
     def _pop_batch(self, key: tuple, session) -> List[NodeQuery]:
         """Batch formation (caller holds ``_qlock``): FIFO pop of up to
@@ -222,11 +237,12 @@ class GNNServeEngine:
 
     def _requeue(self, key: tuple, batch: List[NodeQuery]) -> None:
         """Restore a popped-but-unserved batch to the FRONT of its queue
-        (extract-stage failure path: the queries must not be lost)."""
+        (extract/compute failure path: the queries must not be lost)."""
         with self._qlock:
             dq = self._queues.setdefault(key, deque())
             for q in reversed(batch):
                 dq.appendleft(q)
+            self.admission.on_requeued(key[-1], len(batch))
             self._heap_push(key, dq[0].t_submit)
 
     def _use_full_cache(self, session) -> bool:
@@ -266,6 +282,9 @@ class GNNServeEngine:
         self._prepare_formation(key, session)
         with self._qlock:
             batch = self._pop_batch(key, session)
+            if batch:
+                # virtual-time + backlog accounting of the service start
+                self.admission.on_served(key[-1], len(batch))
         if not batch:
             return None
         try:
@@ -291,12 +310,13 @@ class GNNServeEngine:
 
     def _launch_stage(self, inf: _Inflight) -> None:
         """COMPUTE head: dispatch the jitted forward(s). Async under jax
-        dispatch — returns with the device work in flight."""
+        dispatch — returns with the device work in flight. Deliberately
+        counts NOTHING: a launch/complete failure requeues the batch and
+        retries it, so the serve-path counters must only move in the
+        (single) successful completion — counting here double-counted
+        retried batches and drifted ``cache_hit_rate``."""
         inf.t_launch = time.perf_counter()
-        if inf.prepared is None:
-            self.metrics.full_cache_hits += len(inf.batch)
-        else:
-            self.metrics.subgraph_queries += len(inf.batch)
+        if inf.prepared is not None:
             inf.devs = inf.session.launch_batch(inf.prepared)
 
     def _complete_stage(self, inf: _Inflight) -> int:
@@ -313,6 +333,12 @@ class GNNServeEngine:
         else:
             logits = inf.session.finish_batch(inf.prepared, inf.devs)
         t_done = time.perf_counter()
+        # serve-path counters move here — after the batch can no longer
+        # fail into the requeue/retry path — so they are retry-invariant
+        if inf.prepared is None:
+            self.metrics.full_cache_hits += len(inf.batch)
+        else:
+            self.metrics.subgraph_queries += len(inf.batch)
         self.metrics.batches += 1
         self.metrics.batch_latency.record(t_done - inf.t_start)
         self.metrics.record_stages(
@@ -325,6 +351,7 @@ class GNNServeEngine:
             q.t_done = t_done
             self.metrics.queries += 1
             self.metrics.latency.record(q.latency_s)
+            self.metrics.record_tenant_query(q.tenant, q.latency_s)
             self.finished.append(q)
         self.batch_log.append(list(inf.batch))
         with self._qlock:

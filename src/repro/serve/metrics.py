@@ -59,6 +59,47 @@ class LatencyStats:
 
 
 @dataclasses.dataclass
+class TenantMetrics:
+    """Per-tenant slice of an engine's metrics: admission outcomes
+    (``accepted`` / ``throttled`` / ``shed`` submissions) plus the answered
+    queries and their end-to-end latency histogram."""
+    accepted: int = 0
+    throttled: int = 0
+    shed: int = 0
+    queries: int = 0
+    latency: LatencyStats = dataclasses.field(default_factory=LatencyStats)
+
+    @property
+    def submitted(self) -> int:
+        return self.accepted + self.throttled + self.shed
+
+    @property
+    def shed_rate(self) -> float:
+        """Fraction of submissions shed (overload rejections only — kept
+        consistent with the adjacent ``shed`` counter; rate-limit bounces
+        are ``throttle_rate``, and ``reject_rate`` is their sum)."""
+        return self.shed / max(self.submitted, 1)
+
+    @property
+    def throttle_rate(self) -> float:
+        return self.throttled / max(self.submitted, 1)
+
+    @property
+    def reject_rate(self) -> float:
+        """Fraction of submissions NOT admitted (throttled or shed)."""
+        return (self.throttled + self.shed) / max(self.submitted, 1)
+
+    def snapshot(self, elapsed_s: float) -> dict:
+        return dict(accepted=self.accepted, throttled=self.throttled,
+                    shed=self.shed, shed_rate=self.shed_rate,
+                    throttle_rate=self.throttle_rate,
+                    reject_rate=self.reject_rate,
+                    queries=self.queries,
+                    qps=self.queries / max(elapsed_s, 1e-9),
+                    latency=self.latency.summary())
+
+
+@dataclasses.dataclass
 class ServeMetrics:
     """Counters + histograms for one engine (or one session).
 
@@ -89,6 +130,29 @@ class ServeMetrics:
     serve_wall_s: float = 0.0      # wall seconds inside the serve loop
     started_at: Optional[float] = None
     finished_at: Optional[float] = None
+    # per-tenant breakdowns (admission outcomes + answered latency)
+    tenants: Dict[str, TenantMetrics] = dataclasses.field(
+        default_factory=dict)
+
+    def tenant(self, name: str) -> TenantMetrics:
+        tm = self.tenants.get(name)
+        if tm is None:
+            tm = self.tenants[name] = TenantMetrics()
+        return tm
+
+    def record_admission(self, tenant: str, action: str) -> None:
+        tm = self.tenant(tenant)
+        if action == "accept":
+            tm.accepted += 1
+        elif action == "throttle":
+            tm.throttled += 1
+        else:
+            tm.shed += 1
+
+    def record_tenant_query(self, tenant: str, latency_s: float) -> None:
+        tm = self.tenant(tenant)
+        tm.queries += 1
+        tm.latency.record(latency_s)
 
     def record_stages(self, extract_s: float, compute_s: float) -> None:
         """Record one batch's per-stage breakdown (both histogrammed and
@@ -141,6 +205,8 @@ class ServeMetrics:
                                  total=self.batch_latency.summary()),
             overlap_ratio=self.overlap_ratio,
             serve_wall_s=self.serve_wall_s,
+            tenants={name: tm.snapshot(self.elapsed_s)
+                     for name, tm in sorted(self.tenants.items())},
         )
         if extra:
             out.update(extra)

@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.core import frdc
 
+from ..admission import DEFAULT_TENANT
 from ..gnn_engine import GNNServeEngine, NodeQuery
 from ..gnn_session import GraphStore
 
@@ -55,11 +56,11 @@ class ShardedServeEngine(GNNServeEngine):
                  executor: str = "host", bn_mode: str = "single_host",
                  pipeline_depth: int = 0, halo_aware: bool = True,
                  staleness_s: float = 0.25,
-                 halo_window: Optional[int] = None):
+                 halo_window: Optional[int] = None, admission=None):
         super().__init__(store, max_batch=max_batch, mode=mode,
                          full_cache_max_nodes=full_cache_max_nodes,
                          keep_finished=keep_finished,
-                         pipeline_depth=pipeline_depth)
+                         pipeline_depth=pipeline_depth, admission=admission)
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
         self.n_shards = n_shards
@@ -83,11 +84,16 @@ class ShardedServeEngine(GNNServeEngine):
                                           executor=self.executor,
                                           bn_mode=self.bn_mode)
 
-    def _queue_key(self, graph: str, model: str, node: int) -> tuple:
-        """One FIFO per (graph, model, owning shard): every served
+    def _queue_key(self, graph: str, model: str, node: int,
+                   tenant: str = DEFAULT_TENANT) -> tuple:
+        """One FIFO per (graph, model, owning shard, tenant): every served
         micro-batch is a single-owner group, so its routed subgraph — and
         therefore its logits — are bit-identical to the single-host session
-        serving the same batch.
+        serving the same batch. Keeping the tenant in the key (LAST, the
+        admission controller's convention) means halo-aware co-batching
+        only ever groups seeds within one tenant's owner queue, so the
+        single-owner bit-exactness invariant and the replayed ``batch_log``
+        oracle survive tenancy unchanged.
 
         The routing bounds are cached per (graph, model); steady-state
         intake is one scalar bisection. NOTE: the FIRST submit for a pair
@@ -99,7 +105,7 @@ class ShardedServeEngine(GNNServeEngine):
             bounds = self._get_session((graph, model)).routing.bounds
             self._routing_cache[(graph, model)] = bounds
         owner = int(np.searchsorted(bounds, node, side="right")) - 1
-        return (graph, model, owner)
+        return (graph, model, owner, tenant)
 
     # -------------------------------------------- halo-aware formation -----
     # bound per (graph, model): a long-lived engine on a huge graph must

@@ -103,6 +103,79 @@ def test_bspmm_empty_rows_prefill():
     np.testing.assert_array_equal(np.asarray(bits[4:]), 0xFFFFFFFF)
 
 
+def test_bspmm_dma_start_wait_descriptors_pair():
+    """Step-② DMA regression: every started HBM->VMEM gather must be waited
+    on with the SAME descriptor (source slice included). Both kernels build
+    start and wait through the shared ``_gather_copy`` helper; record its
+    calls per kernel trace and check the wait half mirrors the start half
+    slot for slot — a wait reconstructed from a different source slice
+    (e.g. the old constant ``x_hbm[0:TILE]``) would bypass the helper and
+    break the pairing."""
+    calls = []
+    real = bspmm_kernel._gather_copy
+
+    def spy(x_hbm, xg_ref, copy_sems, col_idx_ref, g, t):
+        calls.append(t)
+        return real(x_hbm, xg_ref, copy_sems, col_idx_ref, g, t)
+
+    rng = np.random.default_rng(5)
+    adj = frdc.from_dense(_graph(rng, 24, 0.2))
+    x = jnp.asarray(rng.standard_normal((24, 32)), jnp.float32)
+    act = rng.choice([-1.0, 1.0], size=(24, 32))
+    xp = bitops.pack_bits(act > 0)
+    bspmm_kernel._gather_copy = spy
+    try:
+        got_fp = bspmm_kernel.bspmm_fp(adj, x)
+        got_bits = bspmm_kernel.bspmm_bits(adj, xp, 32, binarize=False)
+    finally:
+        bspmm_kernel._gather_copy = real
+    # each kernel-body trace issues GROUP starts then GROUP waits over the
+    # same slot sequence — start/wait pairs match by construction
+    assert calls and len(calls) % (2 * frdc.GROUP) == 0
+    for i in range(0, len(calls), 2 * frdc.GROUP):
+        window = calls[i:i + 2 * frdc.GROUP]
+        assert window[:frdc.GROUP] == window[frdc.GROUP:] \
+            == list(range(frdc.GROUP))
+    # and the kernels still agree with the oracles through the spy
+    np.testing.assert_allclose(np.asarray(got_fp),
+                               np.asarray(ref.bspmm_fp_ref(adj, x)),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(
+        np.asarray(got_bits),
+        np.asarray(ref.bspmm_bits_ref(adj, xp, 32, binarize=False)))
+
+
+def test_bspmm_bits_block_validates_real_feature_width():
+    """``bspmm_bits`` used to validate ``block_shape`` against the padded
+    word width ``wf * WORD``: a block equal to the caller's REAL (narrower)
+    ``n_feat`` bounced off the word-alignment check even though the packed
+    kernel's word-native storage covers it exactly. Validation now sees the
+    actual feature width."""
+    n, f = 16, 24                    # wf = 1 word; wf * WORD = 32 > f
+    rng = np.random.default_rng(9)
+    adj = frdc.from_dense(_graph(rng, n, 0.25))
+    act = rng.choice([-1.0, 1.0], size=(n, f))
+    xp = bitops.pack_bits(act > 0)
+    want = bspmm_kernel.bspmm_bits(adj, xp, f, binarize=False)
+    # a block matching the real feature width is legal (used to raise) and
+    # changes nothing
+    got = bspmm_kernel.bspmm_bits(adj, xp, f, binarize=False,
+                                  block_shape=(4, f))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    got_bin = bspmm_kernel.bspmm_bits(adj, xp, f, binarize=True,
+                                      block_shape=(4, f))
+    np.testing.assert_array_equal(
+        np.asarray(got_bin),
+        np.asarray(bspmm_kernel.bspmm_bits(adj, xp, f, binarize=True)))
+    # genuinely unsupported widths still fail loudly
+    with pytest.raises(ValueError):
+        bspmm_kernel.bspmm_bits(adj, xp, f, binarize=False,
+                                block_shape=(4, 48))
+    assert bspmm_kernel._resolve_block((4, 24), 24, True) == 24
+    with pytest.raises(ValueError):
+        bspmm_kernel._resolve_block((4, 24), 32, True)
+
+
 def test_bspmm_kernel_bucket_padded_frdc():
     """pad_frdc bucket padding appends all-zero groups mapped to tile-row 0
     WITHOUT a first-of-row reset. The kernel's flush schedule must neither

@@ -186,6 +186,46 @@ def test_prepared_batch_pins_calibration(data):
     np.testing.assert_array_equal(got, want)
 
 
+@pytest.mark.parametrize("fail_in", ["launch_batch", "finish_batch"])
+def test_metric_counters_retry_invariant(store, data, fail_in):
+    """Injected launch/complete failures requeue the batch and retry it —
+    the serve-path counters (``subgraph_queries`` / ``full_cache_hits``,
+    hence ``cache_hit_rate``) must count the batch ONCE, in its single
+    successful completion, not once per attempt (the old launch-stage
+    counting double-counted retried batches)."""
+    engine = GNNServeEngine(store, max_batch=BATCH, mode="subgraph",
+                            pipeline_depth=PIPELINE_DEPTH)
+    engine.warmup("g", "gcn")
+    session = engine._get_session(("g", "gcn"))
+    real = getattr(session, fail_in)
+    calls = {"n": 0}
+
+    def flaky(*args):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient compute failure")
+        return real(*args)
+
+    nodes = np.arange(BATCH)
+    setattr(session, fail_in, flaky)
+    try:
+        qs = engine.submit_many("g", "gcn", nodes)
+        with pytest.raises(RuntimeError, match="transient"):
+            engine.run_until_drained()
+        # the failed attempt must not have moved the serve-path counters
+        assert engine.metrics.subgraph_queries == 0
+        assert engine.metrics.queries == 0
+        engine.run_until_drained()                 # retry succeeds
+    finally:
+        setattr(session, fail_in, real)
+    assert all(q.done for q in qs)
+    assert engine.metrics.subgraph_queries == len(qs)   # counted exactly once
+    assert engine.metrics.full_cache_hits == 0
+    assert engine.metrics.queries == len(qs)
+    assert engine.metrics.cache_hit_rate == 0.0
+    engine.close()
+
+
 def test_extract_failure_requeues_and_recovers(store, data):
     """An extract-stage failure on the background worker must neither lose
     the popped queries nor wedge the pipeline: the error surfaces to the
