@@ -26,6 +26,10 @@ from .common import csv_row
 
 RESULTS = Path(__file__).resolve().parents[1] / "results"
 
+# bump when the emitted JSON layout changes (compare_bench.py warns on
+# cross-version diffs)
+SCHEMA_VERSION = 2
+
 FAMILY_INITS = {
     "gcn": gnn.init_gcn, "sage": gnn.init_sage, "saint": gnn.init_saint,
 }
@@ -141,6 +145,7 @@ def _merge_results(section: str, payload: dict) -> Path:
     RESULTS.mkdir(parents=True, exist_ok=True)
     out = RESULTS / "BENCH_serve_gnn.json"
     summary = json.loads(out.read_text()) if out.exists() else {}
+    summary.setdefault("schema_version", SCHEMA_VERSION)
     summary[section] = payload
     out.write_text(json.dumps(summary, indent=2))
     return out
@@ -182,7 +187,8 @@ def run(full: bool = False) -> dict:
         store.register_model(fam, fam, init(key, d.x.shape[1], hidden,
                                             d.n_classes))
 
-    summary: dict = dict(dataset="cora", scale=scale, n_nodes=d.n_nodes,
+    summary: dict = dict(schema_version=SCHEMA_VERSION, dataset="cora",
+                         scale=scale, n_nodes=d.n_nodes,
                          n_edges=d.n_edges, n_queries=n_queries,
                          batch=batch, families={})
     for fam in FAMILY_INITS:

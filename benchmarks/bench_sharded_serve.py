@@ -41,11 +41,16 @@ import numpy as np
 from repro.graphs.datasets import make_dataset
 from repro.models import gnn
 from repro.serve import (AdmissionController, GNNServeEngine, GraphStore,
-                         ShardedServeEngine, TenantPolicy)
+                         ShardedServeEngine, SpanTracer, TenantPolicy,
+                         write_chrome_trace)
 
 from .common import csv_row
 
 RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+# bump when the emitted JSON layout changes (compare_bench.py warns on
+# cross-version diffs)
+SCHEMA_VERSION = 2
 
 FAMILY_INITS = {
     "gcn": gnn.init_gcn, "sage": gnn.init_sage, "saint": gnn.init_saint,
@@ -113,19 +118,22 @@ PIPELINE_DEPTH = 2
 
 
 def _pipeline_compare(store, fam: str, p: int, executor: str,
-                      nodes: np.ndarray, batch: int) -> dict:
+                      nodes: np.ndarray, batch: int,
+                      trace_path=None) -> dict:
     """Pipelined + halo-aware engine vs the strict-FIFO serial engine on
     the identical query stream (submitted up-front so batch formation has a
     real queue to group over): overlap ratio, stage breakdown, and the
     MEASURED ``serve/x`` halo bytes each run actually gathered — the delta
-    is what halo-aware co-batching saved."""
+    is what halo-aware co-batching saved. With ``trace_path``, the
+    pipelined run records EVERY batch span (sample_every=1) and exports a
+    Perfetto-loadable Chrome trace there."""
     sess = store.sharded_session("bench", fam, p, executor=executor)
 
-    def run_one(halo_aware: bool, depth: int):
+    def run_one(halo_aware: bool, depth: int, tracer=None):
         engine = ShardedServeEngine(store, p, max_batch=batch,
                                     mode="subgraph", executor=executor,
                                     halo_aware=halo_aware,
-                                    pipeline_depth=depth)
+                                    pipeline_depth=depth, tracer=tracer)
         engine.warmup("bench", fam)
         c0 = engine.compile_count
         b0 = sess.halo_stats.bytes_by_tag.get("serve/x", 0)
@@ -137,8 +145,13 @@ def _pipeline_compare(store, fam: str, p: int, executor: str,
         engine.close()
         return snap, moved
 
+    tracer = SpanTracer(sample_every=1) if trace_path is not None else None
     fifo_snap, fifo_bytes = run_one(False, 0)
-    aware_snap, aware_bytes = run_one(True, PIPELINE_DEPTH)
+    aware_snap, aware_bytes = run_one(True, PIPELINE_DEPTH, tracer=tracer)
+    if tracer is not None:
+        write_chrome_trace(tracer, str(trace_path))
+        csv_row(f"sharded_serve/{fam}/P{p}/trace", 0.0,
+                f"spans={len(tracer.batch_traces())};wrote={trace_path}")
     return dict(
         pipeline_depth=PIPELINE_DEPTH,
         overlap_ratio=aware_snap["overlap_ratio"],
@@ -209,7 +222,8 @@ def run(full: bool = False, executor: str = "host",
                                             d.n_classes))
 
     engine_depth = PIPELINE_DEPTH if pipeline else 0
-    summary: dict = dict(dataset="cora", scale=scale, n_nodes=d.n_nodes,
+    summary: dict = dict(schema_version=SCHEMA_VERSION, dataset="cora",
+                         scale=scale, n_nodes=d.n_nodes,
                          n_edges=d.n_edges, n_queries=n_queries,
                          batch=batch, shard_counts=list(SHARD_COUNTS),
                          engine_executor=executor, spmd_available=spmd_ok,
@@ -247,8 +261,15 @@ def run(full: bool = False, executor: str = "host",
                 store, fam, p, spmd_ok, pass_repeats)
             snap["bn_calibration_drift"] = _bn_drift(
                 store, fam, p, "spmd" if spmd_ok else "host")
+            # the gcn P=2 pipelined run also exports a Chrome trace of every
+            # batch's span tree (the CI workflow uploads it as an artifact)
+            trace_path = (RESULTS / "TRACE_sharded_serve.json"
+                          if fam == "gcn" and p == 2 else None)
+            if trace_path is not None:
+                RESULTS.mkdir(parents=True, exist_ok=True)
             snap["pipeline"] = _pipeline_compare(store, fam, p, executor,
-                                                 nodes, batch)
+                                                 nodes, batch,
+                                                 trace_path=trace_path)
             fam_out[f"P{p}"] = snap
             pipe = snap["pipeline"]
             csv_row(f"sharded_serve/{fam}/P{p}/pipeline",

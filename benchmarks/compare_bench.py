@@ -1,0 +1,160 @@
+#!/usr/bin/env python
+"""Perf-regression gate over two ``results/BENCH_*.json`` files.
+
+Walks baseline and current JSON jointly and compares every metric leaf it
+knows about under tolerance bands:
+
+  * **higher-is-better** — ``qps`` / ``qps_pipelined`` / ``qps_fifo_serial``
+    / ``halo_bytes_saved_measured`` / ``overlap_ratio``: a drop beyond the
+    warn band is a warning, beyond the hard band a failure.
+  * **lower-is-better** — ``p50_ms`` / ``p99_ms`` / ``halo_bytes`` /
+    ``serve_x_bytes_halo_aware``: a growth beyond the bands likewise.
+  * **zero-tolerance** — ``steady_state_compiles``: any INCREASE over the
+    baseline is an immediate failure (the zero-steady-state-recompiles
+    invariant; no band applies).
+
+Default bands: warn at >= 1.3x, hard-fail at >= 2.0x (``--warn-ratio`` /
+``--hard-ratio``; ``--strict`` promotes warnings to failures). Exit code 0
+when nothing regressed beyond the hard band, 1 otherwise — wire it into CI
+right after regenerating a bench result:
+
+    python benchmarks/compare_bench.py results/BENCH_serve_gnn.json \
+        /tmp/BENCH_serve_gnn.json
+
+Timing leaves on smoke-scale runs are noisy, so microscopic baselines are
+skipped (latency < 0.05 ms, qps <= 0, overlap < 0.1, byte counts < 4096) —
+the gate targets order-of-magnitude regressions (a hidden recompile, a lost
+overlap, a halo blowup), not scheduler jitter. A ``schema_version``
+mismatch between the two files is reported as a warning, never a failure.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional, Tuple
+
+HIGHER_BETTER = {"qps", "qps_pipelined", "qps_fifo_serial",
+                 "halo_bytes_saved_measured", "overlap_ratio"}
+LOWER_BETTER = {"p50_ms", "p99_ms", "halo_bytes", "serve_x_bytes_halo_aware"}
+ZERO_TOLERANCE = {"steady_state_compiles"}
+
+# baseline floors below which a leaf is too noisy to gate on
+MIN_LATENCY_MS = 0.05
+MIN_OVERLAP = 0.1
+MIN_BYTES = 4096
+
+
+def _comparable(key: str, base: float) -> bool:
+    if key in ("p50_ms", "p99_ms"):
+        return base >= MIN_LATENCY_MS
+    if key.startswith("qps"):
+        return base > 0
+    if key == "overlap_ratio":
+        return base >= MIN_OVERLAP
+    if key in ("halo_bytes", "serve_x_bytes_halo_aware",
+               "halo_bytes_saved_measured"):
+        return base >= MIN_BYTES
+    return True
+
+
+def compare(baseline: dict, current: dict, warn_ratio: float = 1.3,
+            hard_ratio: float = 2.0
+            ) -> Tuple[List[str], List[str], List[str]]:
+    """Joint walk; returns (failures, warnings, notes)."""
+    failures: List[str] = []
+    warnings: List[str] = []
+    notes: List[str] = []
+
+    bv = baseline.get("schema_version")
+    cv = current.get("schema_version")
+    if bv != cv:
+        warnings.append(f"schema_version mismatch: baseline={bv} "
+                        f"current={cv} (comparing anyway)")
+
+    def walk(b, c, path: str) -> None:
+        if isinstance(b, dict) and isinstance(c, dict):
+            for k in b:
+                if k in c:
+                    walk(b[k], c[k], f"{path}/{k}")
+                elif k in HIGHER_BETTER | LOWER_BETTER | ZERO_TOLERANCE:
+                    notes.append(f"{path}/{k}: missing from current")
+            return
+        key = path.rsplit("/", 1)[-1]
+        if not isinstance(b, (int, float)) or not isinstance(c, (int, float)) \
+                or isinstance(b, bool) or isinstance(c, bool):
+            return
+        if key in ZERO_TOLERANCE:
+            if c > b:
+                failures.append(f"{path}: {key} increased {b:g} -> {c:g} "
+                                f"(zero-tolerance)")
+            return
+        if key in HIGHER_BETTER:
+            if not _comparable(key, float(b)):
+                return
+            if c <= 0:
+                failures.append(f"{path}: dropped to {c:g} from {b:g}")
+                return
+            ratio = float(b) / float(c)          # >1 means current is worse
+        elif key in LOWER_BETTER:
+            if not _comparable(key, float(b)):
+                return
+            if b <= 0:
+                return
+            ratio = float(c) / float(b)
+        else:
+            return
+        if ratio >= hard_ratio:
+            failures.append(f"{path}: {b:g} -> {c:g} "
+                            f"({ratio:.2f}x worse, hard band {hard_ratio}x)")
+        elif ratio >= warn_ratio:
+            warnings.append(f"{path}: {b:g} -> {c:g} "
+                            f"({ratio:.2f}x worse, warn band {warn_ratio}x)")
+
+    walk(baseline, current, "")
+    return failures, warnings, notes
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Diff two BENCH_*.json files under tolerance bands; "
+                    "exit 1 on regression beyond the hard band.")
+    ap.add_argument("baseline", help="committed baseline BENCH_*.json")
+    ap.add_argument("current", help="freshly generated BENCH_*.json")
+    ap.add_argument("--warn-ratio", type=float, default=1.3,
+                    help="warn when a metric is >= this factor worse "
+                         "(default 1.3)")
+    ap.add_argument("--hard-ratio", type=float, default=2.0,
+                    help="fail when a metric is >= this factor worse "
+                         "(default 2.0)")
+    ap.add_argument("--strict", action="store_true",
+                    help="promote warnings to failures")
+    args = ap.parse_args(argv)
+    if args.warn_ratio > args.hard_ratio:
+        ap.error(f"--warn-ratio {args.warn_ratio} exceeds "
+                 f"--hard-ratio {args.hard_ratio}")
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+    failures, warnings, notes = compare(
+        baseline, current, warn_ratio=args.warn_ratio,
+        hard_ratio=args.hard_ratio)
+    if args.strict:
+        failures, warnings = failures + warnings, []
+
+    for msg in notes:
+        print(f"NOTE  {msg}")
+    for msg in warnings:
+        print(f"WARN  {msg}")
+    for msg in failures:
+        print(f"FAIL  {msg}")
+    verdict = "REGRESSED" if failures else "OK"
+    print(f"{verdict}: {len(failures)} failure(s), {len(warnings)} "
+          f"warning(s) [{args.baseline} vs {args.current}]")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,7 +23,11 @@ Walkthrough:
   7. multi-tenant admission: a rate-limited "hog" tenant floods the engine
      10x over its quota and is throttled/shed with typed rejections while
      a weighted "gold" tenant keeps serving — per-tenant counters and
-     latency come out of the same ``snapshot()``.
+     latency come out of the same ``snapshot()``;
+  8. observability: every batch left a span tree (queue wait / extract /
+     launch / compute) in the engine's trace ring buffer — exported here
+     as a Perfetto-loadable Chrome trace and a Prometheus text snapshot,
+     with the recompile/transfer watchdog counters alongside.
 """
 from __future__ import annotations
 
@@ -38,7 +42,8 @@ from repro.core import frdc
 from repro.graphs.datasets import make_dataset
 from repro.models import gnn
 from repro.serve import (AdmissionController, GNNServeEngine, GraphStore,
-                         TenantPolicy)
+                         SpanTracer, TenantPolicy, prometheus_text,
+                         write_chrome_trace)
 
 
 def _report(tag: str, snap: dict) -> None:
@@ -100,8 +105,11 @@ def main() -> None:
     assert steady == 0, "jit cache-miss counter moved in steady state!"
 
     # 4. pipelined serving: overlapped extraction, bit-exact ----------------
+    # sample_every=1 records every batch's span tree (the default engine
+    # tracer keeps 1-in-16 plus outliers and error paths)
     pipe = GNNServeEngine(store, max_batch=args.batch, mode="subgraph",
-                          pipeline_depth=2)
+                          pipeline_depth=2,
+                          tracer=SpanTracer(sample_every=1))
     pipe.warmup("cora", "gcn")
     qp = pipe.submit_many("cora", "gcn", nodes)
     pipe.run_until_drained()
@@ -175,6 +183,25 @@ def main() -> None:
     assert tsnap["gold"]["queries"] == nodes.size, "gold tenant starved!"
     assert tsnap["hog"]["reject_rate"] > 0, "hog was never limited!"
     print("  gold tenant fully served; hog throttled/shed per policy")
+
+    # 8. observability: span traces, watchdogs, exporters --------------------
+    trs = pipe.tracer.batch_traces()
+    wd = pipe.snapshot()["watchdogs"]
+    print(f"  [trace] {len(trs)} batch span trees recorded "
+          f"({pipe.tracer.batches_seen} batches seen) | steady recompiles "
+          f"{wd['recompile']['steady_recompiles']} | unexpected transfers "
+          f"{wd['transfer']['host_sync_in_launch']}")
+    t = trs[0]
+    print(f"    e.g. trace {t.trace_id}: {len(t.queries)} queries, "
+          + ", ".join(f"{s.name} {s.duration_s*1e3:.2f}ms"
+                      for s in t.spans))
+    write_chrome_trace(pipe.tracer, "/tmp/serve_gnn_trace.json")
+    print("    Chrome trace -> /tmp/serve_gnn_trace.json "
+          "(load in chrome://tracing or ui.perfetto.dev)")
+    prom = prometheus_text(pipe.snapshot(), pipe.tracer)
+    print("    Prometheus snapshot (first lines):")
+    for line in prom.splitlines()[:4]:
+        print(f"      {line}")
 
 
 if __name__ == "__main__":

@@ -27,7 +27,11 @@ Walkthrough:
   7. multi-tenant serving: two tenants with 4:1 scheduler weights share the
      sharded engine — queues are keyed by (owner, tenant), so batches stay
      single-owner AND single-tenant (the bit-exactness invariant survives
-     tenancy) and ``snapshot()`` breaks QPS/latency out per tenant.
+     tenancy) and ``snapshot()`` breaks QPS/latency out per tenant;
+  8. observability: the pipelined run records a span tree per batch
+     (queue wait / extract / launch / compute, tagged with the owning
+     shard, halo bytes moved and formation savings) — exported as a
+     Chrome trace with one track per shard, watchdog counters alongside.
 
 Run with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to move the
 halo exchange onto real per-shard devices (shard_map + ppermute collectives)
@@ -46,7 +50,8 @@ from repro.graphs.datasets import make_dataset
 from repro.launch.mesh import make_shard_mesh
 from repro.models import gnn
 from repro.serve import (AdmissionController, GraphStore,
-                         ShardedServeEngine, TenantPolicy)
+                         ShardedServeEngine, SpanTracer, TenantPolicy,
+                         write_chrome_trace)
 
 
 def main() -> None:
@@ -111,7 +116,8 @@ def main() -> None:
         # 4b. pipelined + halo-aware: overlap + halo sharing ----------------
         pipe = ShardedServeEngine(store, args.shards, max_batch=args.batch,
                                   mode="subgraph", mesh=mesh,
-                                  pipeline_depth=2)
+                                  pipeline_depth=2,
+                                  tracer=SpanTracer(sample_every=1))
         pipe.warmup("cora", "gcn")
         pipe.submit_many("cora", "gcn", nodes)
         pipe.run_until_drained()
@@ -121,6 +127,21 @@ def main() -> None:
               f"{ps['halo_tiles_shared']} (~{ps['halo_bytes_saved']} B of "
               f"serve/x gathers deduplicated)")
         pipe.close()
+
+        # 8. observability: per-shard span traces + watchdogs ---------------
+        trs = pipe.tracer.batch_traces()
+        wd = ps["watchdogs"]
+        print(f"  [trace] {len(trs)} batch span trees across shards "
+              f"{sorted({t.shard for t in trs})} | steady recompiles "
+              f"{wd['recompile']['steady_recompiles']} | unexpected "
+              f"transfers {wd['transfer']['host_sync_in_launch']}")
+        t = trs[0]
+        print(f"    e.g. trace {t.trace_id} (shard {t.shard}): "
+              f"extract {t.stage_s('extract')*1e3:.2f}ms / compute "
+              f"{t.stage_s('compute')*1e3:.2f}ms | halo {t.halo}")
+        write_chrome_trace(pipe.tracer, "/tmp/serve_sharded_trace.json")
+        print("    Chrome trace (one track per shard) -> "
+              "/tmp/serve_sharded_trace.json")
 
         # 5. SPMD executor + distributed BN calibration ---------------------
         if mesh is not None:

@@ -16,19 +16,29 @@
 ``metrics``      — latency percentiles / QPS / cache counters + the
                    extract/compute breakdown, overlap-ratio gauge, and
                    per-tenant admission/latency breakdowns.
+``trace``        — per-batch span tracing (SpanTracer ring buffer, sampled
+                   steady state + always-on outlier/error capture) and the
+                   recompile/transfer watchdogs.
+``export``       — offline exporters over the trace ring buffer:
+                   Chrome-trace JSON (Perfetto) + Prometheus text.
 """
 from .admission import (AdmissionController, AdmissionDecision,
                         DEFAULT_TENANT, TenantPolicy)
+from .export import chrome_trace, prometheus_text, write_chrome_trace
 from .gnn_engine import GNNServeEngine, NodeQuery
 from .gnn_session import CompiledGraphSession, GraphStore, SessionPlan
 from .metrics import LatencyStats, ServeMetrics, TenantMetrics
 from .sharded import (ShardedGraphSession, ShardedServeEngine, ShardPlan,
                       ShardPlanner)
+from .trace import (BatchTrace, RecompileWatchdog, SpanTracer,
+                    TransferWatchdog, WarningEvent)
 
 __all__ = [
     "AdmissionController", "AdmissionDecision", "DEFAULT_TENANT",
     "TenantPolicy", "GNNServeEngine", "NodeQuery", "CompiledGraphSession",
     "GraphStore", "SessionPlan", "LatencyStats", "ServeMetrics",
     "TenantMetrics", "ShardedGraphSession", "ShardedServeEngine",
-    "ShardPlan", "ShardPlanner",
+    "ShardPlan", "ShardPlanner", "BatchTrace", "SpanTracer",
+    "RecompileWatchdog", "TransferWatchdog", "WarningEvent",
+    "chrome_trace", "prometheus_text", "write_chrome_trace",
 ]

@@ -152,6 +152,12 @@ class AdmissionController:
         self._heaps: Dict[str, List[Tuple[float, int, tuple]]] = {}
         self._seq = 0
         self._admits_since_sweep = 0
+        # scheduling decision of the most recent pick() that returned a
+        # queue — tenant, its virtual start tag, and whether the staleness
+        # bound preempted the virtual-time order. Read by the engines (under
+        # the same lock discipline as every other mutating call) to tag the
+        # served batch's trace with WHY it was scheduled.
+        self.last_pick: Optional[dict] = None
 
     # ------------------------------------------------------------ policy ----
     def policy(self, tenant: str) -> TenantPolicy:
@@ -279,7 +285,14 @@ class AdmissionController:
             rank = (max(self._vtime.get(tenant, 0.0), self._vclock), t)
             if best_rank is None or rank < best_rank:
                 best_key, best_rank = key, rank
-        return best_key if overdue_key is None else overdue_key
+        picked = best_key if overdue_key is None else overdue_key
+        if picked is not None:
+            tenant = picked[-1]
+            self.last_pick = dict(
+                tenant=tenant,
+                vtime=max(self._vtime.get(tenant, 0.0), self._vclock),
+                overdue=overdue_key is not None)
+        return picked
 
     def on_served(self, tenant: str, n: int) -> None:
         """Account one popped batch of ``n`` queries: the tenant's virtual

@@ -1,0 +1,198 @@
+"""Offline exporters over the :class:`~repro.serve.trace.SpanTracer` ring
+buffer: Chrome-trace JSON (``chrome://tracing`` / Perfetto loadable) and a
+Prometheus text-exposition snapshot.
+
+Both are pure functions of already-recorded data — nothing here runs in the
+serving hot path. The Chrome trace lays out one PROCESS per shard (plus one
+for unsharded batches) and one THREAD per pipeline stage, so Perfetto's
+timeline shows queue-wait / extract / launch / compute as parallel tracks
+and the PR 4 extract/compute overlap is visible as literal span overlap.
+"""
+from __future__ import annotations
+
+import json
+from typing import Iterable, List, Optional
+
+from .trace import STAGES, BatchTrace, SpanTracer, WarningEvent
+
+_US = 1e6  # chrome trace timestamps are microseconds
+
+
+def _pid_of(tr: BatchTrace) -> int:
+    # pid 1 = the unsharded engine; shard i gets pid 2+i
+    return 1 if tr.shard is None else 2 + int(tr.shard)
+
+
+def _pid_name(pid: int) -> str:
+    return "serve" if pid == 1 else f"shard-{pid - 2}"
+
+
+def chrome_trace(source) -> dict:
+    """Build a Chrome-trace object (``json.dump`` it to a file and load in
+    Perfetto) from a :class:`SpanTracer` or an iterable of trace records.
+
+    Batch spans become "X" (complete) duration events on a (pid=shard,
+    tid=stage) track; watchdog warnings become instant "i" events on a
+    dedicated track. Timestamps are rebased to the earliest span so the
+    viewer opens at t=0."""
+    if isinstance(source, SpanTracer):
+        records = source.records()
+    else:
+        records = list(source)
+    batches = [r for r in records if isinstance(r, BatchTrace)]
+    warnings = [r for r in records if isinstance(r, WarningEvent)]
+
+    t0s = [s.t0 for tr in batches for s in tr.spans]
+    t0s += [w.t for w in warnings]
+    base = min(t0s) if t0s else 0.0
+
+    events: List[dict] = []
+    pids = {}
+    for tr in batches:
+        pid = _pid_of(tr)
+        pids.setdefault(pid, _pid_name(pid))
+        common = dict(trace_id=tr.trace_id, key=list(tr.key),
+                      tenant=tr.tenant, n_queries=len(tr.queries),
+                      kept=tr.kept)
+        for s in tr.spans:
+            tid = STAGES.index(s.name) + 1 if s.name in STAGES else 99
+            args = dict(common)
+            args.update({k: v for k, v in s.attrs.items()})
+            if s.name == "extract":
+                args.update(bucket=dict(tr.bucket), halo=dict(tr.halo))
+            if tr.error:
+                args.update(error=tr.error, requeued=tr.requeued)
+            events.append(dict(
+                name=s.name, ph="X", pid=pid, tid=tid,
+                ts=(s.t0 - base) * _US,
+                dur=max(s.t1 - s.t0, 0.0) * _US,
+                cat="serve", args=args))
+    for w in warnings:
+        events.append(dict(
+            name=w.name, ph="i", s="g", pid=1, tid=98,
+            ts=(w.t - base) * _US, cat="watchdog",
+            args=dict(trace_id=w.trace_id, **w.attrs)))
+    if warnings:
+        pids.setdefault(1, _pid_name(1))
+
+    meta: List[dict] = []
+    for pid, name in sorted(pids.items()):
+        meta.append(dict(name="process_name", ph="M", pid=pid, tid=0,
+                         args=dict(name=name)))
+        for i, stage in enumerate(STAGES):
+            meta.append(dict(name="thread_name", ph="M", pid=pid, tid=i + 1,
+                             args=dict(name=stage)))
+        meta.append(dict(name="thread_name", ph="M", pid=pid, tid=98,
+                         args=dict(name="watchdog")))
+    return dict(traceEvents=meta + events, displayTimeUnit="ms")
+
+
+def write_chrome_trace(source, path: str) -> dict:
+    """``chrome_trace`` + dump to ``path``; returns the trace object."""
+    obj = chrome_trace(source)
+    with open(path, "w") as f:
+        json.dump(obj, f)
+    return obj
+
+
+# ---------------------------------------------------------------------------
+# Prometheus text exposition
+# ---------------------------------------------------------------------------
+
+def _fmt_labels(labels: dict) -> str:
+    if not labels:
+        return ""
+    inner = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+    return "{" + inner + "}"
+
+
+def _line(out: List[str], name: str, value, labels: Optional[dict] = None,
+          help_: str = "", type_: str = "gauge") -> None:
+    if help_:
+        out.append(f"# HELP {name} {help_}")
+        out.append(f"# TYPE {name} {type_}")
+    out.append(f"{name}{_fmt_labels(labels or {})} {float(value):g}")
+
+
+def prometheus_text(snapshot: dict, tracer: Optional[SpanTracer] = None,
+                    prefix: str = "serve") -> str:
+    """Render an engine ``snapshot()`` dict (plus, optionally, the tracer's
+    own counters) as Prometheus text exposition — a point-in-time scrape a
+    textfile collector can ship as-is."""
+    out: List[str] = []
+    m = snapshot
+
+    _line(out, f"{prefix}_queries_total", m.get("queries", 0),
+          help_="Queries served to completion", type_="counter")
+    _line(out, f"{prefix}_batches_total", m.get("batches", 0),
+          help_="Micro-batches served", type_="counter")
+    _line(out, f"{prefix}_qps", m.get("qps", 0.0),
+          help_="Served queries per second of elapsed serving time")
+    _line(out, f"{prefix}_wall_seconds", m.get("serve_wall_s", 0.0),
+          help_="Wall-clock seconds spent inside the serve loop")
+    _line(out, f"{prefix}_overlap_ratio", m.get("overlap_ratio", 0.0),
+          help_="Stage time hidden behind the other pipeline stage")
+    _line(out, f"{prefix}_cache_hit_rate", m.get("cache_hit_rate", 0.0),
+          help_="Fraction of queries answered from the full-graph cache")
+
+    def _latency(stats: dict, labels: dict, first: bool) -> bool:
+        for q in ("p50_ms", "p90_ms", "p99_ms", "mean_ms", "max_ms"):
+            v = stats.get(q)
+            if v is not None and v == v:        # skip NaN (empty window)
+                _line(out, f"{prefix}_latency_ms", v,
+                      dict(labels, quantile=q[:-3]),
+                      help_=("Latency summaries over the retained window"
+                             if first else ""))
+                first = False
+        for k in ("count", "window"):
+            if k in stats:
+                _line(out, f"{prefix}_latency_{k}", stats[k], labels)
+        return first
+
+    first = True
+    first = _latency(m.get("latency", {}), dict(group="query"), first)
+    first = _latency(m.get("batch_latency", {}), dict(group="batch"), first)
+    for stage, stats in sorted(m.get("batch_breakdown", {}).items()):
+        if stage != "total":
+            first = _latency(stats, dict(group=f"stage_{stage}"), first)
+
+    for tenant, st in sorted(m.get("tenants", {}).items()):
+        if not isinstance(st, dict):
+            continue
+        for k in ("accepted", "throttled", "shed", "queries"):
+            if k in st:
+                _line(out, f"{prefix}_tenant_{k}_total", st[k],
+                      dict(tenant=tenant), type_="counter")
+        _latency(st.get("latency", {}), dict(tenant=tenant), False)
+
+    for k in ("pending", "pipeline_depth"):
+        if k in snapshot:
+            _line(out, f"{prefix}_{k}", snapshot[k])
+    for k in ("compiles", "invalidations", "executor_compiles",
+              "halo_bytes", "halo_tiles_shared", "halo_bytes_saved"):
+        if k in snapshot:
+            _line(out, f"{prefix}_{k}_total", snapshot[k], type_="counter")
+    for tag, b in sorted(snapshot.get("halo_bytes_by_tag", {}).items()):
+        _line(out, f"{prefix}_halo_bytes_by_tag_total", b, dict(tag=tag),
+              type_="counter")
+
+    wd = snapshot.get("watchdogs", {})
+    rc = wd.get("recompile", {})
+    if rc:
+        _line(out, f"{prefix}_steady_recompiles_total",
+              rc.get("steady_recompiles", 0),
+              help_="Steady-state XLA retraces flagged by the watchdog",
+              type_="counter")
+    tw = wd.get("transfer", {})
+    for k in ("device_in_extract", "host_sync_in_launch"):
+        if k in tw:
+            _line(out, f"{prefix}_unexpected_transfers_total", tw[k],
+                  dict(kind=k), type_="counter")
+
+    if tracer is not None:
+        ts = tracer.snapshot()
+        for k in ("batches_seen", "batches_recorded", "outliers_recorded",
+                  "errors_recorded", "warnings_recorded"):
+            _line(out, f"{prefix}_trace_{k}_total", ts[k], type_="counter")
+        _line(out, f"{prefix}_trace_retained", ts["retained"])
+    return "\n".join(out) + "\n"

@@ -42,6 +42,7 @@ from .admission import (DEFAULT_TENANT, AdmissionController,
                         AdmissionDecision)
 from .gnn_session import CompiledGraphSession, GraphStore
 from .metrics import ServeMetrics
+from .trace import RecompileWatchdog, SpanTracer, TransferWatchdog
 
 
 @dataclasses.dataclass
@@ -62,6 +63,9 @@ class NodeQuery:
     pred: Optional[int] = None
     tenant: str = DEFAULT_TENANT
     admission: Optional[AdmissionDecision] = None
+    # trace context: submit() stamps qid/t_submit/admission above; when the
+    # query is picked into a batch this links it to that batch's BatchTrace
+    trace_id: int = -1
 
     @property
     def latency_s(self) -> float:
@@ -89,7 +93,9 @@ class _Inflight:
     t_start: float
     extract_s: float
     t_launch: float = 0.0
+    t_launch_end: float = 0.0
     devs: Optional[list] = None
+    trace: Optional[object] = None    # BatchTrace (when tracing is on)
 
 
 class GNNServeEngine:
@@ -98,7 +104,8 @@ class GNNServeEngine:
     def __init__(self, store: GraphStore, max_batch: Optional[int] = None,
                  mode: str = "auto", full_cache_max_nodes: int = 200_000,
                  keep_finished: int = 100_000, pipeline_depth: int = 0,
-                 admission: Optional[AdmissionController] = None):
+                 admission: Optional[AdmissionController] = None,
+                 tracer: Optional[SpanTracer] = None, trace: bool = True):
         if mode not in ("auto", "full", "subgraph"):
             raise ValueError(mode)
         self.store = store
@@ -135,6 +142,16 @@ class GNNServeEngine:
         # served batch compositions (most recent), the replay source for
         # bit-exactness oracles under reordering batch formation
         self.batch_log: Deque[List[NodeQuery]] = deque(maxlen=4096)
+        # observability: the span tracer (every served batch flows through
+        # it; retention is sampled) and the two serving watchdogs. Pass
+        # trace=False to make the whole layer a no-op, or inject a
+        # configured SpanTracer (capacity/sampling) to share one ring
+        # buffer across engines.
+        self.tracer = tracer if tracer is not None \
+            else SpanTracer(enabled=trace)
+        self.recompile_watchdog = RecompileWatchdog(self.tracer)
+        self.transfer_watchdog = TransferWatchdog(self.tracer)
+        self._wired_sessions: set = set()
 
     # ------------------------------------------------------------ intake ----
     def submit(self, graph: str, model: str, node: int,
@@ -258,6 +275,40 @@ class GNNServeEngine:
         partitioned session instead)."""
         return self.store.session(*key[:2])
 
+    def _wire_session(self, session):
+        """Wire the recompile watchdog into a session's jit-trace hook the
+        first time this engine touches it (idempotent per session)."""
+        if id(session) not in self._wired_sessions:
+            self._wired_sessions.add(id(session))
+            set_hook = getattr(session, "set_trace_hook", None)
+            if set_hook is not None:
+                set_hook(self.recompile_watchdog.on_recompile)
+        return session
+
+    # ------------------------------------------------------ trace hooks ----
+    def _trace_shard(self, key: tuple) -> Optional[int]:
+        """Owning shard of a queue key (None here; the sharded engine keys
+        queues by owner)."""
+        return None
+
+    def _trace_bucket(self, prepared) -> dict:
+        """Launch-shape summary of a PreparedBatch for its trace."""
+        if prepared is None:
+            return {}
+        return dict(groups=[
+            dict(n_pad=int(g.staged.x_pad.shape[0]),
+                 g_pad={str(k): int(a["group_row"].shape[0])
+                        for k, a in g.staged.adjs.items()})
+            for g in prepared.groups])
+
+    def _trace_halo_begin(self, session):
+        """Pre-extraction token for per-batch halo attribution (the sharded
+        engine snapshots the serve-path halo byte counters here)."""
+        return None
+
+    def _trace_halo_end(self, session, token) -> dict:
+        return {}
+
     # ------------------------------------------------------------- stages ---
     def _extract_stage(self) -> Optional[_Inflight]:
         """EXTRACT: queue pick -> batch formation -> k-hop extraction ->
@@ -278,7 +329,7 @@ class GNNServeEngine:
         # resolving the session may build/compile it — never under the
         # lock. The pick stays valid: only this (single) extractor pops,
         # and new submits are strictly newer than the picked head.
-        session = self._get_session(key)
+        session = self._wire_session(self._get_session(key))
         self._prepare_formation(key, session)
         with self._qlock:
             batch = self._pop_batch(key, session)
@@ -287,19 +338,38 @@ class GNNServeEngine:
                 self.admission.on_served(key[-1], len(batch))
         if not batch:
             return None
+        t0 = time.perf_counter()
+        tr = None
+        if self.tracer.enabled:
+            # last_pick is this pick's decision: pick() is only ever called
+            # from this (single) extract path, so nothing raced it
+            pick = self.admission.last_pick or {}
+            tr = self.tracer.begin(key, key[-1], self._trace_shard(key),
+                                   batch, t0,
+                                   vtime=float(pick.get("vtime", 0.0)),
+                                   overdue=bool(pick.get("overdue", False)))
         try:
-            t0 = time.perf_counter()
+            halo_token = self._trace_halo_begin(session) \
+                if tr is not None else None
             seeds = np.asarray([q.node for q in batch], np.int64)
             if self._use_full_cache(session):
                 result, prepared = session.full_logits()[seeds], None
             else:
                 result, prepared = None, session.prepare_batch(seeds)
+            extract_s = time.perf_counter() - t0
+            if tr is not None:
+                tr.full_cache = prepared is None
+                tr.bucket = self._trace_bucket(prepared)
+                tr.halo = self._trace_halo_end(session, halo_token)
+                tr.span("extract", t0, t0 + extract_s)
+            if prepared is not None:
+                self.transfer_watchdog.check_prepared(prepared)
             return _Inflight(key=key, batch=batch, session=session,
                              seeds=seeds, prepared=prepared, result=result,
-                             t_start=t0,
-                             extract_s=time.perf_counter() - t0)
-        except BaseException:
+                             t_start=t0, extract_s=extract_s, trace=tr)
+        except BaseException as e:
             self._requeue(key, batch)
+            self.tracer.commit(tr, error=repr(e), requeued=True)
             raise
 
     def _prepare_formation(self, key: tuple, session) -> None:
@@ -318,6 +388,8 @@ class GNNServeEngine:
         inf.t_launch = time.perf_counter()
         if inf.prepared is not None:
             inf.devs = inf.session.launch_batch(inf.prepared)
+            self.transfer_watchdog.check_launched(inf.devs)
+        inf.t_launch_end = time.perf_counter()
 
     def _complete_stage(self, inf: _Inflight) -> int:
         """COMPUTE tail: block on the device result, gather per-query
@@ -341,9 +413,19 @@ class GNNServeEngine:
             self.metrics.subgraph_queries += len(inf.batch)
         self.metrics.batches += 1
         self.metrics.batch_latency.record(t_done - inf.t_start)
-        self.metrics.record_stages(
-            inf.extract_s, t_done - max(inf.t_launch, self._last_done))
+        compute_attr_s = t_done - max(inf.t_launch, self._last_done)
+        self.metrics.record_stages(inf.extract_s, compute_attr_s)
         self._last_done = t_done
+        if inf.trace is not None:
+            t_le = inf.t_launch_end or t_done
+            inf.trace.span("launch", inf.t_launch, t_le)
+            # the wall span launch_end -> done plus the de-overlapped time
+            # this batch actually contributed (what record_stages summed)
+            inf.trace.span("compute", t_le, t_done,
+                           attributed_s=compute_attr_s)
+            inf.trace.t_end = t_done
+            self.tracer.commit(inf.trace)
+            inf.trace = None
         preds = np.argmax(logits, axis=-1)
         for q, lg, p in zip(inf.batch, logits, preds):
             q.logits = np.asarray(lg)
@@ -432,8 +514,10 @@ class GNNServeEngine:
             if launch_only:
                 return 0
             return self._complete_stage(inf)
-        except BaseException:
+        except BaseException as e:
             self._requeue(inf.key, inf.batch)
+            self.tracer.commit(inf.trace, error=repr(e), requeued=True)
+            inf.trace = None
             raise
 
     def _step(self, block: bool) -> int:
@@ -478,15 +562,29 @@ class GNNServeEngine:
                seed: int = 0) -> int:
         """Pre-populate a session's jit shape buckets (and its full cache)
         so the serving loop runs with zero steady-state recompiles. Returns
-        the number of compiles the warmup triggered."""
-        session = self._get_session((graph, model))
-        session.sync()
-        if self._use_full_cache(session):
-            return 0     # steady state serves from the cache sync just built
-        return session.warmup(np.random.default_rng(seed), probes=probes)
+        the number of compiles the warmup triggered.
+
+        Also the recompile watchdog's arming point: compiles during warmup
+        are expected (disarmed); once warmup returns, the engine is in
+        steady state and any further jit trace fires a structured
+        ``recompile`` warning."""
+        self.recompile_watchdog.disarm()
+        try:
+            session = self._wire_session(self._get_session((graph, model)))
+            session.sync()
+            if self._use_full_cache(session):
+                # steady state serves from the cache sync just built
+                return 0
+            return session.warmup(np.random.default_rng(seed),
+                                  probes=probes)
+        finally:
+            self.recompile_watchdog.arm()
 
     def snapshot(self) -> dict:
         inval = sum(s.invalidations for s in self._sessions())
         return self.metrics.snapshot(extra=dict(
             compiles=self.compile_count, invalidations=inval,
-            pending=self.pending, pipeline_depth=self.pipeline_depth))
+            pending=self.pending, pipeline_depth=self.pipeline_depth,
+            watchdogs=dict(recompile=self.recompile_watchdog.snapshot(),
+                           transfer=self.transfer_watchdog.snapshot()),
+            trace=self.tracer.snapshot()))

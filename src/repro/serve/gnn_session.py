@@ -256,6 +256,13 @@ class CompiledGraphSession:
         """Number of jit traces of the bucketed subgraph forward."""
         return self.core.compile_count
 
+    def set_trace_hook(self, cb) -> None:
+        """Wire an observability callback ``cb(label, shape_dict)`` to fire
+        on every NEW jit trace of this session's serve core (the engines'
+        recompile watchdog). ``None`` unwires."""
+        self.core.on_trace = (None if cb is None
+                              else (lambda shape: cb("core", shape)))
+
     # ------------------------------------------------------ full path ------
     def full_logits(self) -> np.ndarray:
         """Cached full-graph inference (the fast path for small/warm graphs)."""

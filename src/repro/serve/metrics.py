@@ -45,13 +45,20 @@ class LatencyStats:
             return float("nan")
         return float(np.percentile(np.asarray(self._samples), p))
 
+    @property
+    def window(self) -> int:
+        """Samples currently retained — the population behind the
+        percentiles. Equals ``count`` until the ring wraps."""
+        return len(self._samples)
+
     def summary(self) -> Dict[str, float]:
         if not self._samples:
-            return dict(count=0, mean_ms=float("nan"), p50_ms=float("nan"),
-                        p90_ms=float("nan"), p99_ms=float("nan"),
-                        max_ms=float("nan"))
+            return dict(count=0, window=0, mean_ms=float("nan"),
+                        p50_ms=float("nan"), p90_ms=float("nan"),
+                        p99_ms=float("nan"), max_ms=float("nan"))
         a = np.asarray(self._samples) * 1e3
-        return dict(count=self._total, mean_ms=float(a.mean()),
+        return dict(count=self._total, window=len(self._samples),
+                    mean_ms=float(a.mean()),
                     p50_ms=float(np.percentile(a, 50)),
                     p90_ms=float(np.percentile(a, 90)),
                     p99_ms=float(np.percentile(a, 99)),
@@ -130,6 +137,8 @@ class ServeMetrics:
     serve_wall_s: float = 0.0      # wall seconds inside the serve loop
     started_at: Optional[float] = None
     finished_at: Optional[float] = None
+    # wall time banked from previous start/stop waves (restart-safe clock)
+    _elapsed_base: float = 0.0
     # per-tenant breakdowns (admission outcomes + answered latency)
     tenants: Dict[str, TenantMetrics] = dataclasses.field(
         default_factory=dict)
@@ -170,18 +179,29 @@ class ServeMetrics:
         return max(0.0, stage_s - self.serve_wall_s) / stage_s
 
     def start_clock(self) -> None:
+        """Start (or RESUME) the serving clock. Restart-safe: a second
+        serve wave after ``stop_clock()`` banks the finished wave's wall
+        time and reopens the clock, so ``elapsed_s`` keeps accumulating
+        and ``qps`` stays total-queries / total-serving-time instead of
+        freezing at the first wave's window."""
         if self.started_at is None:
             self.started_at = time.perf_counter()
+        elif self.finished_at is not None:
+            self._elapsed_base += self.finished_at - self.started_at
+            self.started_at = time.perf_counter()
+            self.finished_at = None
+        # else: clock already running — idempotent, like the original
 
     def stop_clock(self) -> None:
-        self.finished_at = time.perf_counter()
+        if self.started_at is not None and self.finished_at is None:
+            self.finished_at = time.perf_counter()
 
     @property
     def elapsed_s(self) -> float:
         if self.started_at is None:
-            return 0.0
+            return max(self._elapsed_base, 0.0) or 0.0
         end = self.finished_at or time.perf_counter()
-        return max(end - self.started_at, 1e-9)
+        return max(self._elapsed_base + (end - self.started_at), 1e-9)
 
     @property
     def qps(self) -> float:

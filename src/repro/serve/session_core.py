@@ -469,6 +469,10 @@ class ServeCore:
         self.node_cap = node_cap
         self.use_pallas = use_pallas
         self._n_traces = 0
+        # observability hook: called as on_trace(shape_key_dict) whenever a
+        # launch triggers a NEW jit trace (the engines' recompile watchdog
+        # wires this via the sessions' set_trace_hook)
+        self.on_trace = None
         # high-water shape buckets: node and group pads only ever GROW (in
         # pow2 steps, capped at node_cap), so serving stops recompiling —
         # warmup is a handful of max-width batches, not a shape sweep.
@@ -519,8 +523,17 @@ class ServeCore:
         """COMPUTE-stage head: dispatch the jitted bucketed forward. Under
         jax's async dispatch this returns before the device finishes, so the
         caller can overlap the next batch's extraction with it."""
-        return self._jit_serve(jnp.asarray(staged.x_pad), bn, staged.adjs,
-                               jnp.asarray(staged.pos_pad))
+        c0 = self._n_traces
+        out = self._jit_serve(jnp.asarray(staged.x_pad), bn, staged.adjs,
+                              jnp.asarray(staged.pos_pad))
+        if self._n_traces > c0 and self.on_trace is not None:
+            # a NEW trace: report the offending shape key (the padded dims
+            # that define the jit cache entry)
+            self.on_trace(dict(
+                n_pad=int(staged.x_pad.shape[0]),
+                groups={str(k): int(a["group_row"].shape[0])
+                        for k, a in staged.adjs.items()}))
+        return out
 
     def finish(self, out_dev: jax.Array, staged: "StagedBatch") -> np.ndarray:
         """COMPUTE-stage tail: block on the device result and crop the seed

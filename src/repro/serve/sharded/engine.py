@@ -56,11 +56,13 @@ class ShardedServeEngine(GNNServeEngine):
                  executor: str = "host", bn_mode: str = "single_host",
                  pipeline_depth: int = 0, halo_aware: bool = True,
                  staleness_s: float = 0.25,
-                 halo_window: Optional[int] = None, admission=None):
+                 halo_window: Optional[int] = None, admission=None,
+                 tracer=None, trace: bool = True):
         super().__init__(store, max_batch=max_batch, mode=mode,
                          full_cache_max_nodes=full_cache_max_nodes,
                          keep_finished=keep_finished,
-                         pipeline_depth=pipeline_depth, admission=admission)
+                         pipeline_depth=pipeline_depth, admission=admission,
+                         tracer=tracer, trace=trace)
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
         self.n_shards = n_shards
@@ -74,6 +76,9 @@ class ShardedServeEngine(GNNServeEngine):
         self.halo_window = halo_window
         self.halo_tiles_shared = 0       # co-batched shared halo tiles
         self.halo_bytes_saved = 0        # est. serve/x bytes they deduplicate
+        # formation stats of the most recent _pop_batch, stashed for the
+        # batch's trace (single extract worker: read before the next pop)
+        self._last_formation: dict = {}
         self._routing_cache = {}
         self._sig_cache: Dict[Tuple[str, str], Dict[int, frozenset]] = {}
         self._feat_bytes_cache: Dict[Tuple[str, str], int] = {}
@@ -168,6 +173,7 @@ class ShardedServeEngine(GNNServeEngine):
         overlap anywhere (``halo_window=0``, or ``halo_aware=False``) this
         degrades to exactly the FIFO pop."""
         if not self.halo_aware:
+            self._last_formation = {}
             return super()._pop_batch(key, session)
         graph, model = key[0], key[1]
         dq = self._queues[key]
@@ -178,6 +184,7 @@ class ShardedServeEngine(GNNServeEngine):
         batch = [dq.popleft()]
         sig = set(self._seed_signature(session, graph, model, batch[0].node))
         row_bytes = self._feat_row_bytes(graph, model)
+        form_shared, form_saved = 0, 0
         while len(batch) < limit and dq:
             # staleness bound: the earliest overdue request anywhere in the
             # window wins over signature grouping (the deque is in submit
@@ -208,9 +215,31 @@ class ShardedServeEngine(GNNServeEngine):
             if shared:
                 self.halo_tiles_shared += shared
                 self.halo_bytes_saved += shared * frdc.TILE * row_bytes
+                form_shared += shared
+                form_saved += shared * frdc.TILE * row_bytes
             sig |= csig
             batch.append(q)
+        self._last_formation = dict(tiles=len(sig),
+                                    tiles_shared=form_shared,
+                                    bytes_saved=form_saved)
         return batch
+
+    # ------------------------------------------------------- trace hooks ---
+    def _trace_shard(self, key: tuple):
+        return int(key[2])       # (graph, model, owner, tenant)
+
+    def _trace_halo_begin(self, session):
+        """Snapshot the serve-path halo byte counter so the batch's trace
+        carries ITS halo traffic (single extract worker: the delta across
+        prepare_batch is this batch's)."""
+        return int(session.halo_stats.bytes_by_tag.get("serve/x", 0))
+
+    def _trace_halo_end(self, session, token) -> dict:
+        out = dict(self._last_formation)
+        if token is not None:
+            now = int(session.halo_stats.bytes_by_tag.get("serve/x", 0))
+            out["serve_x_bytes"] = now - token
+        return out
 
     # ------------------------------------------------------------- state ---
     def _sessions(self):

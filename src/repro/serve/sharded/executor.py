@@ -94,6 +94,10 @@ class _PaddedExecutor(LayerExecutor):
         self.stats = stats
         self.use_pallas = use_pallas
         self._n_traces = 0
+        # observability hook: called as on_trace(label, shape_dict) from
+        # inside a jitted program body — a python side effect that runs once
+        # per NEW trace, exactly like the _n_traces counter above it
+        self.on_trace = None
         self._fns: Dict[tuple, callable] = {}
         npd, nhp = spmd.n_local_pad, spmd.n_halo_pad
         # per-kind uniformly padded per-shard matrices + fixed field order
@@ -199,6 +203,10 @@ class HostLayerExecutor(_PaddedExecutor):
 
         def fn(st, *rest):
             self._n_traces += 1
+            if self.on_trace is not None:
+                self.on_trace(f"{self.name}/stage{i}",
+                              dict(n_local_pad=npd, n_halo_pad=nhp,
+                                   with_bn=with_bn))
             it = iter(rest)
             bn_stats = (next(it), next(it)) if with_bn else None
             rem = intra = halo = None
@@ -226,6 +234,9 @@ class HostLayerExecutor(_PaddedExecutor):
 
         def fn(st, *bn_stats):
             self._n_traces += 1
+            if self.on_trace is not None:
+                self.on_trace(f"{self.name}/operand{i}",
+                              dict(with_bn=with_bn))
             z = session_core.apply_bn(st, *bn_stats) if with_bn else st
             return step.pre(z)[0]
 
@@ -320,6 +331,10 @@ class SpmdLayerExecutor(_PaddedExecutor):
 
         def body(*args):
             self._n_traces += 1            # python side effect: trace count
+            if self.on_trace is not None:
+                self.on_trace(f"{self.name}/step{i}",
+                              dict(n_local_pad=npd, n_halo_pad=nhp,
+                                   calibrate=calibrate))
             it = iter(args)
             st = next(it)[0]               # carried state (n_local_pad, F)
             nloc = next(it)[0][0]          # this shard's real row count

@@ -121,6 +121,9 @@ class ShardedGraphSession:
         self.cores = [ServeCore(plan, qparams, max_batch, node_cap,
                                 use_pallas=use_pallas)
                       for _ in range(shard_plan.n_shards)]
+        # observability callback cb(label, shape_dict), fanned out to every
+        # per-shard core and (on build) the layer executor
+        self._trace_hook = None
 
     # ------------------------------------------------------------ state ----
     @property
@@ -189,7 +192,30 @@ class ShardedGraphSession:
                     self.halo_stats, self.routing,
                     mesh=self.mesh if self._use_mesh() else None,
                     use_pallas=self.use_pallas)
+            self._wire_executor_hook()
         return self._executor_obj
+
+    def set_trace_hook(self, cb) -> None:
+        """Wire an observability callback ``cb(label, shape_dict)`` to fire
+        on every NEW jit trace of any per-shard serve core or layer-executor
+        program (the engines' recompile watchdog). ``None`` unwires. A lazy
+        executor built later inherits the hook."""
+        self._trace_hook = cb
+        for i, core in enumerate(self.cores):
+            if cb is None:
+                core.on_trace = None
+            else:
+                core.on_trace = (lambda shape, _i=i:
+                                 cb(f"shard{_i}/core", shape))
+        self._wire_executor_hook()
+
+    def _wire_executor_hook(self) -> None:
+        if self._executor_obj is None:
+            return
+        cb = self._trace_hook
+        self._executor_obj.on_trace = (
+            None if cb is None
+            else (lambda label, shape: cb(f"executor/{label}", shape)))
 
     @property
     def executor_compile_count(self) -> int:
