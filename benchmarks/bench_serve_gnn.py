@@ -11,6 +11,7 @@ perf trajectory (kernels are tracked by the other sections).
 """
 from __future__ import annotations
 
+import gc
 import json
 from pathlib import Path
 
@@ -19,16 +20,18 @@ import numpy as np
 
 from repro.graphs.datasets import make_dataset
 from repro.models import gnn
-from repro.serve import (AdmissionController, GNNServeEngine, GraphStore,
-                         TenantPolicy)
+from repro.serve import (AdmissionController, CostEstimator, GNNServeEngine,
+                         GraphStore, SLOPolicy, SLOTracker, TenantPolicy,
+                         prometheus_text, spearman_rho)
 
 from .common import csv_row
 
 RESULTS = Path(__file__).resolve().parents[1] / "results"
 
 # bump when the emitted JSON layout changes (compare_bench.py warns on
-# cross-version diffs)
-SCHEMA_VERSION = 2
+# cross-version diffs). v3: cost-model + SLO leaves (the ``slo`` section,
+# ``cost_spearman_rho``).
+SCHEMA_VERSION = 3
 
 FAMILY_INITS = {
     "gcn": gnn.init_gcn, "sage": gnn.init_sage, "saint": gnn.init_saint,
@@ -124,6 +127,214 @@ def _bench_tenants(store: GraphStore, family: str, n_nodes: int,
     )
 
 
+def _degree_bands(store: GraphStore, graph: str, n_bands: int = 4):
+    """Node-id bands stratified by degree (ascending): the calibration
+    stream serves degree-homogeneous waves so per-batch predicted cost
+    actually VARIES — a uniformly random stream averages every batch to the
+    same cost and leaves rank correlation nothing to rank."""
+    csr = store.graphs[graph].csr
+    degs = np.asarray(csr.indptr[1:]) - np.asarray(csr.indptr[:-1])
+    order = np.argsort(degs, kind="stable")
+    return np.array_split(order, n_bands)
+
+
+def _replay_bit_exact(store: GraphStore, graph: str, family: str,
+                      engine: GNNServeEngine) -> bool:
+    """The batch_log oracle: replay the cost-aware engine's actual served
+    batch compositions straight through the raw session — cost-weighted
+    scheduling may REORDER service, but every answer must be bit-identical
+    to the cost-unaware compute path."""
+    sess = store.session(graph, family)
+    for batch in engine.batch_log:
+        seeds = np.asarray([q.node for q in batch], np.int64)
+        prepared = sess.prepare_batch(seeds)
+        logits = sess.finish_batch(prepared, sess.launch_batch(prepared))
+        got = np.stack([q.logits for q in batch])
+        if not np.array_equal(np.asarray(logits), got):
+            return False
+    return True
+
+
+def _bench_slo(store: GraphStore, family: str, n_nodes: int, batch: int,
+               n_good: int, seed: int = 0) -> dict:
+    """Closed-loop cost/SLO scenario, two parts.
+
+    **Calibration**: a single-tenant serial engine serves a graded cost
+    sweep — a leaf anchor plus hub-band batches in pow2 sizes up to a full
+    whale batch — so predicted per-batch units and measured service seconds
+    both spread. Each fixed composition is served ``reps`` times
+    (interleaved) and the gate ranks per-composition BEST-OF times (min,
+    like ``timeit`` — scheduler/GC spikes only ever add time) so host
+    timing noise can't shuffle adjacent ranks; the raw every-batch rho
+    stays as ``rho_raw``. The gate is the Spearman rank correlation of
+    the best-of times (``cost_spearman_rho``).
+
+    **Overload**: tenant ``hub`` submits hub-band nodes at a QPS it is
+    nominally ALLOWED — but its predicted cost-unit flow exceeds its
+    ``cost_rate`` budget, so admission throttles it on cost
+    (``hub_cost_throttled``). Its rejections burn its error budget, the
+    multi-window burn alert fires into the span tracer (and the Prometheus
+    export), and the SLO autotuner shrinks its effective queue depth. The
+    well-behaved ``good`` tenant's p99 must stay within 2x its solo run,
+    and the replayed ``batch_log`` oracle must stay bit-exact."""
+    rng = np.random.default_rng(seed)
+    bands = _degree_bands(store, "bench")
+    csr = store.graphs["bench"].csr
+
+    # --- calibration: a graded cost sweep through a costed engine --------
+    cal_cost = CostEstimator()
+    engine = GNNServeEngine(store, max_batch=batch, mode="subgraph")
+    engine.warmup("bench", family)
+    leaf_band, hub_band = bands[0], bands[-1]
+    comps = [rng.choice(leaf_band, size=min(2, leaf_band.size),
+                        replace=False).astype(np.int64)]
+    s = 2
+    while s <= batch:
+        comps.append(rng.choice(hub_band, size=min(s, hub_band.size),
+                                replace=False).astype(np.int64))
+        s *= 2
+    # prime the bucket high-water with one whale batch, then two throwaway
+    # cycles (estimator detached) so steady-state timing is what gets ranked
+    engine.submit_many("bench", family,
+                       rng.choice(hub_band, size=min(batch, hub_band.size),
+                                  replace=False))
+    engine.tick()
+    for _ in range(2):
+        for nodes in comps:
+            engine.submit_many("bench", family, nodes)
+            engine.tick()
+    engine.run_until_drained()
+    engine.cost = cal_cost
+    reps = 9
+    gc_was = gc.isenabled()
+    gc.disable()
+    try:
+        for _ in range(reps):
+            for nodes in comps:
+                engine.submit_many("bench", family, nodes)
+                engine.tick()
+        engine.run_until_drained()
+    finally:
+        if gc_was:
+            gc.enable()
+    pred, meas = cal_cost.predicted_vs_measured()
+    # best-of-reps (min, like timeit): scheduler/GC spikes only ever ADD
+    # time, so the fastest rep is the faithful per-composition cost
+    pred_med = np.median(pred.reshape(reps, len(comps)), axis=0)
+    meas_med = np.min(meas.reshape(reps, len(comps)), axis=0)
+    rho = spearman_rho(pred_med, meas_med)
+    raw = cal_cost.rank_correlation()
+    calibration = dict(batches_observed=cal_cost.batches_observed,
+                       compositions=[int(c.size) for c in comps],
+                       reps=reps,
+                       rho=(None if rho != rho else float(rho)),
+                       rho_raw=(None if raw != raw else float(raw)),
+                       estimator=cal_cost.snapshot())
+    engine.close()
+
+    # --- overload: cost-budgeted hub tenant vs a well-behaved tenant ----
+    hub_band = bands[-1]
+    probe = CostEstimator()
+    hub_units = float(np.mean([
+        probe.estimate("bench", n, csr, khop=2).units
+        for n in rng.choice(hub_band, size=min(16, hub_band.size),
+                            replace=False)]))
+    good_nodes = rng.integers(0, n_nodes, size=n_good)
+    policies = dict(
+        good=TenantPolicy(weight=8),
+        # generous QPS (never binds) — the COST budget is what holds:
+        # ~3 hub-scale queries of burst, ~3 hub queries/s sustained
+        hub=TenantPolicy(rate_qps=500.0, burst=500,
+                         max_queue_depth=2 * batch, weight=1,
+                         cost_rate=3.0 * hub_units,
+                         cost_burst=3.0 * hub_units),
+    )
+    slo_policies = dict(
+        hub=SLOPolicy(availability=0.99, window_s=4.0, short_window_s=0.5,
+                      burn_alert=2.0),
+        good=SLOPolicy(availability=0.999, window_s=4.0),
+    )
+
+    def one_run(with_hub: bool) -> tuple:
+        eng = GNNServeEngine(
+            store, max_batch=batch, mode="subgraph",
+            admission=AdmissionController(policies=dict(policies)),
+            cost=CostEstimator(),
+            slo=SLOTracker(dict(slo_policies)))
+        eng.warmup("bench", family)
+        for i in range(0, good_nodes.size, batch):
+            eng.submit_many("bench", family, good_nodes[i:i + batch],
+                            tenant="good")
+            if with_hub:          # hub-band whales, 2x the good volume
+                hub_nodes = rng.choice(hub_band,
+                                       size=min(2 * batch, hub_band.size),
+                                       replace=False)
+                eng.submit_many("bench", family, hub_nodes, tenant="hub")
+            # three service slots per arrival wave: capacity for the good
+            # batch plus the hub's cost-admitted trickle, so good-tenant
+            # p99 reflects scheduling rather than an undersized server
+            eng.tick()
+            eng.tick()
+            eng.tick()
+        eng.run_until_drained()
+        snap = eng.snapshot()
+        return eng, snap
+
+    solo_eng, solo = one_run(False)
+    solo_eng.close()
+    eng, mixed = one_run(True)
+    good, hub = mixed["tenants"]["good"], mixed["tenants"]["hub"]
+    p99_solo = solo["tenants"]["good"]["latency"]["p99_ms"]
+    p99_mixed = good["latency"]["p99_ms"]
+    slo_hub = mixed["slo"]["tenants"]["hub"]
+    burn_warnings = [w for w in eng.tracer.warning_events()
+                     if w.name == "slo_burn"]
+    prom = prometheus_text(mixed, eng.tracer)
+    replay_ok = _replay_bit_exact(store, "bench", family, eng)
+    eng.close()
+
+    return dict(
+        family=family,
+        cost_spearman_rho=calibration["rho"],
+        calibration=calibration,
+        policy=dict(hub_cost_rate=policies["hub"].cost_rate,
+                    hub_probe_units=hub_units),
+        good_solo=solo["tenants"]["good"],
+        good_mixed=good,
+        hub_mixed=hub,
+        hub_cost_throttled=hub["cost_throttled"],
+        hub_held_to_cost_budget=bool(hub["cost_throttled"] > 0),
+        hub_slo=slo_hub,
+        burn_alerts_fired=len(burn_warnings),
+        burn_alert_in_trace=bool(burn_warnings),
+        burn_alert_in_prometheus=(
+            'serve_slo_alerts_total{tenant="hub"}' in prom
+            and slo_hub["alerts"] > 0),
+        depth_autotuned=bool(slo_hub["depth_shrinks"] > 0),
+        good_p99_solo_ms=p99_solo,
+        good_p99_mixed_ms=p99_mixed,
+        good_p99_ratio=p99_mixed / max(p99_solo, 1e-9),
+        good_p99_within_2x_solo=bool(p99_mixed <= 2.0 * p99_solo),
+        replay_bit_exact=replay_ok,
+    )
+
+
+def _slo_row(section: dict, suffix: str = "") -> None:
+    """THE csv emitter of the slo section (shared by ``run()`` and
+    ``--slo``)."""
+    rho = section["cost_spearman_rho"]
+    csv_row("serve_gnn/slo",
+            section["good_p99_mixed_ms"] * 1e3,
+            f"rho={-1.0 if rho is None else rho:.3f};"
+            f"hub_cost_throttled={section['hub_cost_throttled']};"
+            f"burn_alerts={section['burn_alerts_fired']};"
+            f"depth_autotuned={section['depth_autotuned']};"
+            f"p99_ratio={section['good_p99_ratio']:.2f};"
+            f"within_2x={section['good_p99_within_2x_solo']};"
+            f"replay_bit_exact={section['replay_bit_exact']}"
+            f"{suffix}")
+
+
 def _tenants_row(section: dict, suffix: str = "") -> None:
     """THE csv emitter of the tenants section — shared by ``run()`` and the
     standalone ``--tenants`` entry so the row never drifts between them."""
@@ -149,6 +360,27 @@ def _merge_results(section: str, payload: dict) -> Path:
     summary[section] = payload
     out.write_text(json.dumps(summary, indent=2))
     return out
+
+
+def run_slo(full: bool = False) -> dict:
+    """Standalone ``--slo`` entry: cost calibration + the cost-budget/SLO
+    overload scenario only, merged into the existing results JSON."""
+    jax.config.update("jax_platform_name", "cpu")
+    scale = 1.0 if full else 0.15
+    batch = 32 if full else 16
+    hidden = 64 if full else 32
+    n_good = 320 if full else 96
+
+    d = make_dataset("cora", seed=0, scale=scale)
+    store = GraphStore(max_batch=batch)
+    store.register_graph("bench", d)
+    store.register_model("gcn", "gcn",
+                         gnn.init_gcn(jax.random.PRNGKey(0), d.x.shape[1],
+                                      hidden, d.n_classes))
+    section = _bench_slo(store, "gcn", d.n_nodes, batch, n_good)
+    out = _merge_results("slo", section)
+    _slo_row(section, suffix=f";wrote={out}")
+    return section
 
 
 def run_tenants(full: bool = False) -> dict:
@@ -228,6 +460,11 @@ def run(full: bool = False) -> dict:
         n_good=(320 if full else 96))
     _tenants_row(summary["tenants"])
 
+    # cost calibration + the cost-budget/SLO closed-loop overload scenario
+    summary["slo"] = _bench_slo(store, "gcn", d.n_nodes, batch,
+                                n_good=(320 if full else 96))
+    _slo_row(summary["slo"])
+
     RESULTS.mkdir(parents=True, exist_ok=True)
     out = RESULTS / "BENCH_serve_gnn.json"
     out.write_text(json.dumps(summary, indent=2))
@@ -242,8 +479,13 @@ if __name__ == "__main__":
     ap.add_argument("--tenants", action="store_true",
                     help="run only the multi-tenant overload scenario and "
                     "merge it into results/BENCH_serve_gnn.json")
+    ap.add_argument("--slo", action="store_true",
+                    help="run only the cost/SLO closed-loop scenario and "
+                    "merge it into results/BENCH_serve_gnn.json")
     args = ap.parse_args()
     if args.tenants:
         run_tenants(full=args.full)
+    elif args.slo:
+        run_slo(full=args.full)
     else:
         run(full=args.full)

@@ -49,8 +49,9 @@ from .common import csv_row
 RESULTS = Path(__file__).resolve().parents[1] / "results"
 
 # bump when the emitted JSON layout changes (compare_bench.py warns on
-# cross-version diffs)
-SCHEMA_VERSION = 2
+# cross-version diffs). v3: sharded snapshots carry ``whale_splits`` (and
+# cost/SLO leaves when a CostEstimator/SLOTracker is wired).
+SCHEMA_VERSION = 3
 
 FAMILY_INITS = {
     "gcn": gnn.init_gcn, "sage": gnn.init_sage, "saint": gnn.init_saint,

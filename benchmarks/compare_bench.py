@@ -5,7 +5,8 @@ Walks baseline and current JSON jointly and compares every metric leaf it
 knows about under tolerance bands:
 
   * **higher-is-better** — ``qps`` / ``qps_pipelined`` / ``qps_fifo_serial``
-    / ``halo_bytes_saved_measured`` / ``overlap_ratio``: a drop beyond the
+    / ``halo_bytes_saved_measured`` / ``overlap_ratio`` /
+    ``cost_spearman_rho`` (cost-model calibration drift): a drop beyond the
     warn band is a warning, beyond the hard band a failure.
   * **lower-is-better** — ``p50_ms`` / ``p99_ms`` / ``halo_bytes`` /
     ``serve_x_bytes_halo_aware``: a growth beyond the bands likewise.
@@ -24,8 +25,15 @@ right after regenerating a bench result:
 Timing leaves on smoke-scale runs are noisy, so microscopic baselines are
 skipped (latency < 0.05 ms, qps <= 0, overlap < 0.1, byte counts < 4096) —
 the gate targets order-of-magnitude regressions (a hidden recompile, a lost
-overlap, a halo blowup), not scheduler jitter. A ``schema_version``
+overlap, a halo blowup), not scheduler jitter. Per-stage ``batch_breakdown``
+latencies are worst-of-a-handful-of-batches statistics at smoke scale and
+swing several-x between identical runs, so they get a higher floor (5 ms)
+than the end-to-end query percentiles. A ``schema_version``
 mismatch between the two files is reported as a warning, never a failure.
+
+A MISSING or unreadable baseline is a warning and exit 0 (first run of a
+new bench has nothing to gate against); a missing current file is a plain
+failure message and exit 1 — neither ever tracebacks.
 """
 from __future__ import annotations
 
@@ -35,23 +43,32 @@ import sys
 from typing import List, Optional, Tuple
 
 HIGHER_BETTER = {"qps", "qps_pipelined", "qps_fifo_serial",
-                 "halo_bytes_saved_measured", "overlap_ratio"}
+                 "halo_bytes_saved_measured", "overlap_ratio",
+                 "cost_spearman_rho"}
 LOWER_BETTER = {"p50_ms", "p99_ms", "halo_bytes", "serve_x_bytes_halo_aware"}
 ZERO_TOLERANCE = {"steady_state_compiles"}
 
 # baseline floors below which a leaf is too noisy to gate on
 MIN_LATENCY_MS = 0.05
+MIN_STAGE_LATENCY_MS = 5.0
 MIN_OVERLAP = 0.1
 MIN_BYTES = 4096
+MIN_RHO = 0.5
 
 
-def _comparable(key: str, base: float) -> bool:
+def _comparable(key: str, base: float, path: str = "") -> bool:
     if key in ("p50_ms", "p99_ms"):
+        # per-stage breakdowns are max-of-a-handful-of-batches at smoke
+        # scale — only gate them once they are macroscopic
+        if "batch_breakdown" in path:
+            return base >= MIN_STAGE_LATENCY_MS
         return base >= MIN_LATENCY_MS
     if key.startswith("qps"):
         return base > 0
     if key == "overlap_ratio":
         return base >= MIN_OVERLAP
+    if key == "cost_spearman_rho":
+        return base >= MIN_RHO
     if key in ("halo_bytes", "serve_x_bytes_halo_aware",
                "halo_bytes_saved_measured"):
         return base >= MIN_BYTES
@@ -90,14 +107,14 @@ def compare(baseline: dict, current: dict, warn_ratio: float = 1.3,
                                 f"(zero-tolerance)")
             return
         if key in HIGHER_BETTER:
-            if not _comparable(key, float(b)):
+            if not _comparable(key, float(b), path):
                 return
             if c <= 0:
                 failures.append(f"{path}: dropped to {c:g} from {b:g}")
                 return
             ratio = float(b) / float(c)          # >1 means current is worse
         elif key in LOWER_BETTER:
-            if not _comparable(key, float(b)):
+            if not _comparable(key, float(b), path):
                 return
             if b <= 0:
                 return
@@ -134,10 +151,26 @@ def main(argv: Optional[List[str]] = None) -> int:
         ap.error(f"--warn-ratio {args.warn_ratio} exceeds "
                  f"--hard-ratio {args.hard_ratio}")
 
-    with open(args.baseline) as f:
-        baseline = json.load(f)
-    with open(args.current) as f:
-        current = json.load(f)
+    def _load(path: str):
+        try:
+            with open(path) as f:
+                return json.load(f)
+        except (OSError, ValueError) as e:
+            return e
+
+    baseline = _load(args.baseline)
+    if isinstance(baseline, Exception):
+        print(f"WARN  baseline {args.baseline} unavailable ({baseline}) — "
+              f"first run of a new bench has nothing to gate against")
+        print(f"OK: 0 failure(s), 1 warning(s) "
+              f"[no baseline vs {args.current}]")
+        return 0
+    current = _load(args.current)
+    if isinstance(current, Exception):
+        print(f"FAIL  current {args.current} unavailable ({current})")
+        print(f"REGRESSED: 1 failure(s), 0 warning(s) "
+              f"[{args.baseline} vs missing current]")
+        return 1
     failures, warnings, notes = compare(
         baseline, current, warn_ratio=args.warn_ratio,
         hard_ratio=args.hard_ratio)

@@ -27,7 +27,15 @@ Walkthrough:
   8. observability: every batch left a span tree (queue wait / extract /
      launch / compute) in the engine's trace ring buffer — exported here
      as a Perfetto-loadable Chrome trace and a Prometheus text snapshot,
-     with the recompile/transfer watchdog counters alongside.
+     with the recompile/transfer watchdog counters alongside;
+  9. cost accounting + SLOs: a ``CostEstimator`` predicts each query's cost
+     units at submit time (k-hop closure via the CSR index) and an
+     ``SLOTracker`` turns rejections/latency into error-budget burn. An
+     "ml-batch" tenant floods hub-node whales while staying nominally
+     under its QPS quota — the COST budget is what throttles it, its burn
+     rate breaches both alert windows (a structured ``slo_burn`` warning
+     fires into the span tracer), and the feedback loop shrinks its
+     effective queue depth, all while the "gold" tenant keeps serving.
 """
 from __future__ import annotations
 
@@ -41,9 +49,9 @@ import numpy as np
 from repro.core import frdc
 from repro.graphs.datasets import make_dataset
 from repro.models import gnn
-from repro.serve import (AdmissionController, GNNServeEngine, GraphStore,
-                         SpanTracer, TenantPolicy, prometheus_text,
-                         write_chrome_trace)
+from repro.serve import (AdmissionController, CostEstimator, GNNServeEngine,
+                         GraphStore, SLOPolicy, SLOTracker, SpanTracer,
+                         TenantPolicy, prometheus_text, write_chrome_trace)
 
 
 def _report(tag: str, snap: dict) -> None:
@@ -202,6 +210,62 @@ def main() -> None:
     print("    Prometheus snapshot (first lines):")
     for line in prom.splitlines()[:4]:
         print(f"      {line}")
+
+    # 9. cost accounting + SLOs: budgets, burn alerts, admission feedback ----
+    cost = CostEstimator()
+    csr = store.graphs["cora"].csr
+    degs = np.asarray(csr.indptr[1:]) - np.asarray(csr.indptr[:-1])
+    hubs = np.argsort(degs)[-max(32, args.batch):]
+    hub_units = float(np.mean([cost.estimate("cora", int(n), csr).units
+                               for n in hubs[-8:]]))
+    ce = GNNServeEngine(
+        store, max_batch=args.batch, mode="subgraph",
+        admission=AdmissionController(policies={
+            "gold": TenantPolicy(weight=4),
+            # the whale tenant's QPS quota is GENEROUS — only its
+            # cost-unit budget (~3 hub queries/s) binds
+            "ml-batch": TenantPolicy(rate_qps=500.0, burst=500,
+                                     max_queue_depth=2 * args.batch,
+                                     cost_rate=3.0 * hub_units,
+                                     cost_burst=3.0 * hub_units),
+        }),
+        cost=cost,
+        slo=SLOTracker({
+            "ml-batch": SLOPolicy(availability=0.99, window_s=4.0,
+                                  short_window_s=0.5, burn_alert=2.0),
+            "gold": SLOPolicy(availability=0.999, window_s=4.0),
+        }))
+    ce.warmup("cora", "gcn")
+    for i in range(0, nodes.size, args.batch):
+        # hub-band whales: nominally under the QPS limit, way over budget
+        ce.submit_many("cora", "gcn", rng.choice(hubs, 2 * args.batch),
+                       tenant="ml-batch")
+        ce.submit_many("cora", "gcn", nodes[i:i + args.batch],
+                       tenant="gold")
+        ce.tick()
+        ce.tick()
+        ce.tick()
+    ce.run_until_drained()
+    csnap = ce.snapshot()
+    for name in ("gold", "ml-batch"):
+        t = csnap["tenants"][name]
+        s = csnap["slo"]["tenants"][name]
+        print(f"  [cost {name}] admitted {t['cost_units']:.0f} units | "
+              f"cost-throttled {t['cost_throttled']} | attributed "
+              f"{t['attributed_cost_s']*1e3:.1f}ms of service | burn "
+              f"{s['burn_long']:.1f} | alerts {s['alerts']} | depth-scale "
+              f"{s['depth_scale']:.2f}")
+    burns = [w for w in ce.tracer.warning_events() if w.name == "slo_burn"]
+    assert csnap["tenants"]["ml-batch"]["cost_throttled"] > 0, \
+        "whale tenant was never held to its cost budget!"
+    assert burns, "no slo_burn alert fired!"
+    assert csnap["tenants"]["gold"]["queries"] == nodes.size
+    print(f"  whale tenant held to cost budget ({len(burns)} burn alert(s) "
+          f"fired, depth autotuned "
+          f"x{csnap['slo']['tenants']['ml-batch']['depth_scale']:.2f}); "
+          f"gold tenant fully served")
+    print(f"  calibration: {csnap['cost']['batches_observed']} batches, "
+          f"units/s {csnap['cost']['units_per_second']:.0f}")
 
 
 if __name__ == "__main__":

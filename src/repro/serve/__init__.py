@@ -21,11 +21,19 @@
                    recompile/transfer watchdogs.
 ``export``       — offline exporters over the trace ring buffer:
                    Chrome-trace JSON (Perfetto) + Prometheus text.
+``cost``         — submit-time per-query cost prediction (k-hop closure /
+                   halo / padding statics) + online calibration against
+                   measured batch time and pro-rata attribution.
+``slo``          — per-tenant SLO policies: error-budget burn-rate
+                   tracking, multi-window alerts, admission-depth
+                   feedback.
 """
 from .admission import (AdmissionController, AdmissionDecision,
                         DEFAULT_TENANT, TenantPolicy)
+from .cost import CostEstimate, CostEstimator, spearman_rho
 from .export import chrome_trace, prometheus_text, write_chrome_trace
 from .gnn_engine import GNNServeEngine, NodeQuery
+from .slo import SLOPolicy, SLOTracker
 from .gnn_session import CompiledGraphSession, GraphStore, SessionPlan
 from .metrics import LatencyStats, ServeMetrics, TenantMetrics
 from .sharded import (ShardedGraphSession, ShardedServeEngine, ShardPlan,
@@ -41,4 +49,6 @@ __all__ = [
     "ShardPlan", "ShardPlanner", "BatchTrace", "SpanTracer",
     "RecompileWatchdog", "TransferWatchdog", "WarningEvent",
     "chrome_trace", "prometheus_text", "write_chrome_trace",
+    "CostEstimate", "CostEstimator", "spearman_rho",
+    "SLOPolicy", "SLOTracker",
 ]

@@ -17,7 +17,9 @@ Two concerns live here, both previously inlined (or absent) in
   * **Scheduling** — the engine's queue pick generalizes the lazy
     oldest-head heap to **weighted start-time fair queueing across
     tenants**: each tenant carries a virtual time that advances by
-    ``batch_size / weight`` whenever one of its queues is served, and the
+    ``cost / weight`` whenever one of its queues is served (``cost``
+    defaulting to the batch size, or the batch's predicted cost units when
+    the engine carries a :class:`~repro.serve.cost.CostEstimator`), and the
     pick goes to the backlogged tenant with the smallest virtual start tag
     (FIFO oldest-head WITHIN a tenant — with a single tenant this is
     exactly the pre-tenancy scheduler). Higher-weight tenants therefore
@@ -60,11 +62,22 @@ class TenantPolicy:
                          proportionally to its weight (integer >= 1).
     ``max_queue_depth``  queued-backlog bound; submissions beyond it are
                          shed (``None`` = unbounded).
+    ``cost_rate``        cost budget in predicted cost units per second
+                         (``None`` disables cost charging): when the engine
+                         carries a :class:`~repro.serve.cost.CostEstimator`,
+                         a second token bucket charges each submission its
+                         PREDICTED units instead of 1 — a tenant nominally
+                         under its QPS limit but submitting hub-node whales
+                         drains this bucket and is throttled on cost.
+    ``cost_burst``       cost-bucket capacity; defaults to one second of
+                         budget (``max(1, cost_rate)``).
     """
     rate_qps: float = math.inf
     burst: Optional[float] = None
     weight: int = 1
     max_queue_depth: Optional[int] = None
+    cost_rate: Optional[float] = None
+    cost_burst: Optional[float] = None
 
     def __post_init__(self):
         if not self.rate_qps > 0:
@@ -77,6 +90,11 @@ class TenantPolicy:
         if self.max_queue_depth is not None and self.max_queue_depth < 1:
             raise ValueError(f"max_queue_depth must be >= 1, "
                              f"got {self.max_queue_depth}")
+        if self.cost_rate is not None and not self.cost_rate > 0:
+            raise ValueError(f"cost_rate must be > 0, got {self.cost_rate}")
+        if self.cost_burst is not None and not self.cost_burst >= 1:
+            raise ValueError(f"cost_burst must be >= 1, "
+                             f"got {self.cost_burst}")
 
     @property
     def bucket_capacity(self) -> float:
@@ -85,22 +103,38 @@ class TenantPolicy:
         return math.inf if math.isinf(self.rate_qps) \
             else max(1.0, self.rate_qps)
 
+    @property
+    def cost_bucket_capacity(self) -> float:
+        if self.cost_burst is not None:
+            return float(self.cost_burst)
+        return math.inf if self.cost_rate is None \
+            else max(1.0, self.cost_rate)
+
 
 @dataclasses.dataclass(frozen=True)
 class AdmissionDecision:
-    """Typed outcome of one ``submit()`` admission check."""
+    """Typed outcome of one ``submit()`` admission check. ``cost`` is the
+    predicted cost units the submission was charged (1.0 when no cost
+    estimator is wired in)."""
     action: str                      # ACCEPT | THROTTLE | SHED
     tenant: str
     reason: str = ""
     retry_after_s: float = 0.0
+    cost: float = 1.0
 
     @property
     def accepted(self) -> bool:
         return self.action == ACCEPT
 
+    @property
+    def cost_limited(self) -> bool:
+        """Whether the cost-unit budget (not the QPS rate) throttled it."""
+        return self.action == THROTTLE and self.reason.startswith("cost")
+
 
 class _TokenBucket:
-    """Continuous-refill token bucket (one token per admitted query)."""
+    """Continuous-refill token bucket. The admission rate bucket takes one
+    token per query; the cost bucket charges predicted cost units."""
 
     __slots__ = ("rate", "capacity", "tokens", "t_last")
 
@@ -110,17 +144,23 @@ class _TokenBucket:
         self.tokens = capacity
         self.t_last = now
 
-    def try_take(self, now: float) -> Tuple[bool, float]:
-        """Take one token; returns (ok, retry_after_s)."""
+    def try_take(self, now: float, cost: float = 1.0) -> Tuple[bool, float]:
+        """Take ``cost`` tokens; returns (ok, retry_after_s). The charge is
+        clamped to the bucket capacity so a single whale beyond the burst
+        needs a FULL bucket rather than being unadmittable forever."""
         if math.isinf(self.rate):
             return True, 0.0
+        need = min(float(cost), self.capacity)
         self.tokens = min(self.capacity,
                           self.tokens + (now - self.t_last) * self.rate)
         self.t_last = now
-        if self.tokens >= 1.0:
-            self.tokens -= 1.0
+        if self.tokens >= need:
+            self.tokens -= need
             return True, 0.0
-        return False, (1.0 - self.tokens) / self.rate
+        return False, (need - self.tokens) / self.rate
+
+    def refund(self, cost: float) -> None:
+        self.tokens = min(self.capacity, self.tokens + float(cost))
 
 
 class AdmissionController:
@@ -144,12 +184,26 @@ class AdmissionController:
         self.staleness_bound_s = float(staleness_bound_s)
         self._policies: Dict[str, TenantPolicy] = dict(policies or {})
         self._buckets: Dict[str, _TokenBucket] = {}
+        self._cost_buckets: Dict[str, _TokenBucket] = {}
         self._backlog: Dict[str, int] = {}
+        # SLO feedback: multiplier on a tenant's max_queue_depth (the
+        # SLOTracker's autotune shrinks it under sustained budget burn)
+        self._depth_scale: Dict[str, float] = {}
         # weighted virtual time: per-tenant finish tags + the global clock
         self._vtime: Dict[str, float] = {}
         self._vclock = 0.0
         # per-tenant lazy oldest-head heaps: (head t_submit, seq, key)
         self._heaps: Dict[str, List[Tuple[float, int, tuple]]] = {}
+        # the incremental pick() structure (the heap-over-virtual-start-
+        # tags refactor): a lazy min-heap of (virtual start, head t_submit,
+        # seq, tenant) scheduling tags. Entries go stale (served heads,
+        # advanced virtual clocks) and are corrected or dropped at pop
+        # time; ranks only ever increase, so the lazy-min argument of the
+        # pre-tenancy oldest-head heap carries over.
+        self._tags: List[Tuple[float, float, int, str]] = []
+        # tenants whose virtual time moved since the last pick (their tags
+        # must be refreshed before the next pop)
+        self._dirty: set = set()
         self._seq = 0
         self._admits_since_sweep = 0
         # scheduling decision of the most recent pick() that returned a
@@ -164,40 +218,78 @@ class AdmissionController:
         return self._policies.get(tenant, self.default_policy)
 
     def set_policy(self, tenant: str, policy: TenantPolicy) -> None:
-        """Install (or replace) a tenant's policy; its token bucket restarts
-        full at the new rate."""
+        """Install (or replace) a tenant's policy; its token buckets
+        restart full at the new rates."""
         self._policies[tenant] = policy
         self._buckets.pop(tenant, None)
+        self._cost_buckets.pop(tenant, None)
 
     def backlog(self, tenant: str) -> int:
         """Queries currently queued (not yet popped into a batch)."""
         return self._backlog.get(tenant, 0)
 
+    # ------------------------------------------------------- SLO feedback ---
+    def set_depth_scale(self, tenant: str, scale: float) -> None:
+        """Install the SLO autotuner's multiplier on the tenant's
+        ``max_queue_depth`` (clamped to (0, 1]; 1.0 clears the override)."""
+        scale = min(max(float(scale), 1e-6), 1.0)
+        if scale >= 1.0:
+            self._depth_scale.pop(tenant, None)
+        else:
+            self._depth_scale[tenant] = scale
+
+    def effective_depth(self, tenant: str) -> Optional[int]:
+        """The tenant's depth bound after SLO feedback (None = unbounded)."""
+        depth = self.policy(tenant).max_queue_depth
+        if depth is None:
+            return None
+        return max(1, int(depth * self._depth_scale.get(tenant, 1.0)))
+
     # --------------------------------------------------------- admission ----
-    def admit(self, tenant: str,
-              now: Optional[float] = None) -> AdmissionDecision:
-        """Decide one submission. Depth is checked before rate so a shed
-        (overload) submission does not also burn a rate token."""
+    def admit(self, tenant: str, now: Optional[float] = None,
+              cost: float = 1.0) -> AdmissionDecision:
+        """Decide one submission charged ``cost`` predicted units. Depth is
+        checked before either bucket so a shed (overload) submission does
+        not also burn tokens; the cost budget is checked before the QPS
+        rate (and refunded on a rate throttle) so a rejected submission
+        never burns both."""
         now = time.perf_counter() if now is None else now
         self._admits_since_sweep += 1
         if self._admits_since_sweep >= self.SWEEP_EVERY:
             self._sweep(now)
         pol = self.policy(tenant)
         depth = self._backlog.get(tenant, 0)
-        if pol.max_queue_depth is not None and depth >= pol.max_queue_depth:
-            return AdmissionDecision(
-                SHED, tenant,
-                reason=f"queue depth {depth} at limit {pol.max_queue_depth}")
+        limit = self.effective_depth(tenant)
+        if limit is not None and depth >= limit:
+            reason = f"queue depth {depth} at limit {limit}"
+            if limit != pol.max_queue_depth:
+                reason += f" (SLO-scaled from {pol.max_queue_depth})"
+            return AdmissionDecision(SHED, tenant, reason=reason, cost=cost)
+        cost_bucket = None
+        if pol.cost_rate is not None:
+            cost_bucket = self._cost_buckets.get(tenant)
+            if cost_bucket is None:
+                cost_bucket = _TokenBucket(pol.cost_rate,
+                                           pol.cost_bucket_capacity, now)
+                self._cost_buckets[tenant] = cost_bucket
+            ok, retry = cost_bucket.try_take(now, cost)
+            if not ok:
+                return AdmissionDecision(
+                    THROTTLE, tenant, retry_after_s=retry, cost=cost,
+                    reason=f"cost budget {pol.cost_rate:g} units/s "
+                           f"exceeded (charge {cost:g})")
         bucket = self._buckets.get(tenant)
         if bucket is None:
             bucket = _TokenBucket(pol.rate_qps, pol.bucket_capacity, now)
             self._buckets[tenant] = bucket
         ok, retry = bucket.try_take(now)
         if not ok:
+            if cost_bucket is not None:
+                cost_bucket.refund(cost)
             return AdmissionDecision(
-                THROTTLE, tenant, retry_after_s=retry,
+                THROTTLE, tenant, retry_after_s=retry, cost=cost,
                 reason=f"rate limit {pol.rate_qps:g} qps exceeded")
-        return AdmissionDecision(ACCEPT, tenant)
+        return AdmissionDecision(ACCEPT, tenant, cost=cost)
 
     def _sweep(self, now: float) -> None:
         """Drop quiescent per-tenant state, so high-cardinality tenant ids
@@ -209,10 +301,11 @@ class AdmissionController:
         (debt is only load-bearing while the tenant stays backlogged,
         which is exactly when its heap keeps the tag alive)."""
         self._admits_since_sweep = 0
-        for t, b in list(self._buckets.items()):
-            if math.isinf(b.rate) \
-                    or b.tokens + (now - b.t_last) * b.rate >= b.capacity:
-                del self._buckets[t]
+        for buckets in (self._buckets, self._cost_buckets):
+            for t, b in list(buckets.items()):
+                if math.isinf(b.rate) \
+                        or b.tokens + (now - b.t_last) * b.rate >= b.capacity:
+                    del buckets[t]
         for t in list(self._vtime):
             if t not in self._heaps and self._backlog.get(t, 0) == 0:
                 del self._vtime[t]
@@ -227,10 +320,17 @@ class AdmissionController:
     def push_head(self, key: tuple, tenant: str, t_submit: float) -> None:
         """Record that ``key``'s queue (re)gained a head submitted at
         ``t_submit`` — the lazy-heap push of the pre-tenancy scheduler, now
-        into the tenant's own heap."""
+        into the tenant's own heap PLUS the incremental pick() structure:
+        the tenant's scheduling tag."""
         self._seq += 1
         heapq.heappush(self._heaps.setdefault(tenant, []),
                        (t_submit, self._seq, key))
+        heapq.heappush(self._tags,
+                       (self._vstart(tenant), t_submit, self._seq, tenant))
+
+    def _vstart(self, tenant: str) -> float:
+        """The tenant's current virtual start tag."""
+        return max(self._vtime.get(tenant, 0.0), self._vclock)
 
     def _peek(self, tenant: str, queues: Dict[tuple, Deque]
               ) -> Optional[Tuple[float, tuple]]:
@@ -255,6 +355,16 @@ class AdmissionController:
             del self._heaps[tenant]
         return None
 
+    def _push_tag(self, tenant: str, queues: Dict[tuple, Deque]) -> None:
+        """Refresh one tenant's scheduling tag after its virtual time moved
+        (no-op for tenants with no live head)."""
+        cur = self._peek(tenant, queues)
+        if cur is None:
+            return
+        self._seq += 1
+        heapq.heappush(self._tags,
+                       (self._vstart(tenant), cur[0], self._seq, tenant))
+
     def pick(self, queues: Dict[tuple, Deque],
              now: Optional[float] = None) -> Optional[tuple]:
         """The queue to serve next.
@@ -265,45 +375,73 @@ class AdmissionController:
         head — which, with one tenant, IS the oldest-head pick of the
         pre-tenancy heap.
 
-        Cost: O(#currently-backlogged tenants) per pick, each a lazy
-        O(log #queues) peek (drained tenants leave the scan via the
-        ``_peek`` prune). An incremental tenant-level structure — a heap
-        over virtual start tags plus a global oldest-head tracker for the
-        staleness override — is the open optimization if concurrently
-        backlogged tenant counts grow past a few thousand.
+        Cost: the rank selection is O(log) amortized per pick via the
+        lazy tag heap (instead of the previous O(#backlogged tenants)
+        re-ranking scan with a heap peek per tenant). Lazy-min argument:
+        virtual starts and head timestamps only ever increase
+        (``on_served`` advances vtime; served heads are replaced by
+        younger ones; ``on_requeued`` restores go back through
+        ``push_head``, which pushes a fresh tag), so every backlogged
+        tenant always owns at least one tag ranked <= its true rank —
+        popping stale tags and re-pushing at most one corrected tag per
+        tenant per pick cannot skip the minimum. The staleness watchdog
+        stays a direct sweep of live queue heads (one float compare each):
+        overdue-ness is a function of wall-clock NOW, not of any event the
+        lazy structure could have witnessed.
         """
         now = time.perf_counter() if now is None else now
-        best_key, best_rank = None, None
+        horizon = now - self.staleness_bound_s
         overdue_key, overdue_t = None, math.inf
-        for tenant in list(self._heaps):
-            head = self._peek(tenant, queues)
-            if head is None:
+        for key, dq in queues.items():
+            if dq and dq[0].t_submit <= horizon \
+                    and dq[0].t_submit < overdue_t:
+                overdue_key, overdue_t = key, dq[0].t_submit
+        if overdue_key is not None:
+            tenant = overdue_key[-1]
+            self.last_pick = dict(tenant=tenant,
+                                  vtime=self._vstart(tenant), overdue=True)
+            return overdue_key
+        for tenant in self._dirty:
+            self._push_tag(tenant, queues)
+        self._dirty.clear()
+        fixed: set = set()
+        heap = self._tags
+        while heap:
+            vstart, head_t, _, tenant = heap[0]
+            cur = self._peek(tenant, queues)
+            if cur is None:
+                heapq.heappop(heap)
                 continue
-            t, key = head
-            if now - t >= self.staleness_bound_s and t < overdue_t:
-                overdue_key, overdue_t = key, t
-            rank = (max(self._vtime.get(tenant, 0.0), self._vclock), t)
-            if best_rank is None or rank < best_rank:
-                best_key, best_rank = key, rank
-        picked = best_key if overdue_key is None else overdue_key
-        if picked is not None:
-            tenant = picked[-1]
-            self.last_pick = dict(
-                tenant=tenant,
-                vtime=max(self._vtime.get(tenant, 0.0), self._vclock),
-                overdue=overdue_key is not None)
-        return picked
+            true_vstart = self._vstart(tenant)
+            if vstart != true_vstart or head_t != cur[0]:
+                heapq.heappop(heap)
+                if tenant not in fixed:
+                    fixed.add(tenant)
+                    self._seq += 1
+                    heapq.heappush(
+                        heap, (true_vstart, cur[0], self._seq, tenant))
+                continue
+            self.last_pick = dict(tenant=tenant, vtime=true_vstart,
+                                  overdue=False)
+            return cur[1]
+        return None
 
-    def on_served(self, tenant: str, n: int) -> None:
-        """Account one popped batch of ``n`` queries: the tenant's virtual
-        time advances by ``n / weight`` from its start tag (so a tenant
-        with twice the weight pays half the virtual cost per query), and
-        its queued backlog shrinks."""
+    def on_served(self, tenant: str, n: int,
+                  cost: Optional[float] = None) -> None:
+        """Account one popped batch: the tenant's virtual time advances by
+        ``cost / weight`` from its start tag — ``cost`` defaulting to the
+        batch size ``n``, or the batch's summed PREDICTED cost units when
+        the engine carries a cost estimator (so an expensive hub batch
+        pushes its tenant further back in virtual time than a cheap
+        full-cache batch of the same size) — and its queued backlog
+        shrinks."""
         w = self.policy(tenant).weight
         start = max(self._vtime.get(tenant, 0.0), self._vclock)
         self._vclock = start
-        self._vtime[tenant] = start + n / w
+        charge = float(n if cost is None else cost)
+        self._vtime[tenant] = start + charge / w
         self._backlog[tenant] = max(0, self._backlog.get(tenant, 0) - n)
+        self._dirty.add(tenant)
 
     def on_requeued(self, tenant: str, n: int) -> None:
         """A popped batch bounced back to its queue (extract/compute

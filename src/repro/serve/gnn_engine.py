@@ -40,8 +40,11 @@ import numpy as np
 
 from .admission import (DEFAULT_TENANT, AdmissionController,
                         AdmissionDecision)
+from .cost import CostEstimate, CostEstimator
 from .gnn_session import CompiledGraphSession, GraphStore
 from .metrics import ServeMetrics
+from .session_core import FAMILY_AGG_LAYERS
+from .slo import SLOTracker
 from .trace import RecompileWatchdog, SpanTracer, TransferWatchdog
 
 
@@ -63,6 +66,8 @@ class NodeQuery:
     pred: Optional[int] = None
     tenant: str = DEFAULT_TENANT
     admission: Optional[AdmissionDecision] = None
+    # submit-time predicted cost (None when the engine has no estimator)
+    cost: Optional[CostEstimate] = None
     # trace context: submit() stamps qid/t_submit/admission above; when the
     # query is picked into a batch this links it to that batch's BatchTrace
     trace_id: int = -1
@@ -105,7 +110,9 @@ class GNNServeEngine:
                  mode: str = "auto", full_cache_max_nodes: int = 200_000,
                  keep_finished: int = 100_000, pipeline_depth: int = 0,
                  admission: Optional[AdmissionController] = None,
-                 tracer: Optional[SpanTracer] = None, trace: bool = True):
+                 tracer: Optional[SpanTracer] = None, trace: bool = True,
+                 cost: Optional[CostEstimator] = None,
+                 slo: Optional[SLOTracker] = None):
         if mode not in ("auto", "full", "subgraph"):
             raise ValueError(mode)
         self.store = store
@@ -152,6 +159,17 @@ class GNNServeEngine:
         self.recompile_watchdog = RecompileWatchdog(self.tracer)
         self.transfer_watchdog = TransferWatchdog(self.tracer)
         self._wired_sessions: set = set()
+        # closed-loop cost/SLO observability (both opt-in; None preserves
+        # the cost-unaware engine exactly): the estimator predicts each
+        # submission's cost units from host statics — admission charges
+        # them, fair queueing weights by them, and measured batch time
+        # calibrates them — while the SLO tracker turns the answered/
+        # rejected stream into error budgets that feed back into admission
+        # depth. Both are driven under _qlock.
+        self.cost = cost
+        self.slo = slo
+        if slo is not None and slo.tracer is None:
+            slo.tracer = self.tracer
 
     # ------------------------------------------------------------ intake ----
     def submit(self, graph: str, model: str, node: int,
@@ -176,11 +194,22 @@ class GNNServeEngine:
         q = NodeQuery(graph=graph, model=model, node=node, tenant=tenant)
         q.qid, self._next_qid = self._next_qid, self._next_qid + 1
         key = self._queue_key(graph, model, node, tenant)
+        # cost prediction is pure host work over cached topology statics —
+        # never under the lock (first touch of a node walks its closure)
+        q.cost = self._estimate_cost(graph, model, node)
+        charge = q.cost.units if q.cost is not None else 1.0
         with self._qlock:
             q.t_submit = time.perf_counter()
-            q.admission = self.admission.admit(tenant, q.t_submit)
-            self.metrics.record_admission(tenant, q.admission.action)
+            q.admission = self.admission.admit(tenant, q.t_submit,
+                                               cost=charge)
+            self.metrics.record_admission(
+                tenant, q.admission.action,
+                cost=(charge if q.admission.accepted else 0.0),
+                cost_limited=q.admission.cost_limited)
             if not q.admission.accepted:
+                if self.slo is not None:
+                    self.slo.observe(tenant, q.t_submit, rejected=True)
+                    self.slo.check(q.t_submit, self.admission)
                 return q
             self.admission.on_enqueued(tenant)
             dq = self._queues.setdefault(key, deque())
@@ -200,6 +229,35 @@ class GNNServeEngine:
         batches never mix tenants — per-tenant latency attribution and the
         sharded engine's single-owner co-batching both survive tenancy."""
         return (graph, model, tenant)
+
+    # ------------------------------------------------------- cost model ----
+    def _estimate_cost(self, graph: str, model: str,
+                       node: int) -> Optional[CostEstimate]:
+        """Submit-time cost prediction (None without an estimator). Pure
+        host statics: the graph entry's cached CSR index, the model
+        family's aggregation depth, and the halo-row hook — no session is
+        resolved, so submit never compiles anything."""
+        if self.cost is None:
+            return None
+        entry = self.store.graphs[graph]
+        if self.mode == "full" or (
+                self.mode == "auto"
+                and entry.data.n_nodes <= self.full_cache_max_nodes):
+            return self.cost.estimate(graph, node, entry.csr,
+                                      full_cache=True)
+        family = self.store.models[model].family
+        halo_rows, row_bytes = self._cost_halo_rows(graph, model, node)
+        return self.cost.estimate(
+            graph, node, entry.csr,
+            khop=FAMILY_AGG_LAYERS.get(family, 2),
+            halo_rows=halo_rows, row_bytes=row_bytes)
+
+    def _cost_halo_rows(self, graph: str, model: str,
+                        node: int) -> Tuple[int, int]:
+        """(halo feature rows, bytes per row) the query's seed will pull
+        from remote shards — 0 on the single-host path; the sharded engine
+        overrides this from its static halo signatures."""
+        return 0, 0
 
     def submit_many(self, graph: str, model: str, nodes: np.ndarray,
                     tenant: str = DEFAULT_TENANT) -> List[NodeQuery]:
@@ -334,8 +392,16 @@ class GNNServeEngine:
         with self._qlock:
             batch = self._pop_batch(key, session)
             if batch:
-                # virtual-time + backlog accounting of the service start
-                self.admission.on_served(key[-1], len(batch))
+                # virtual-time + backlog accounting of the service start;
+                # with a cost model the virtual charge is the batch's
+                # predicted units, so expensive batches push their tenant
+                # further back than cheap ones of the same size
+                served_cost = None
+                if self.cost is not None:
+                    served_cost = sum(q.cost.units for q in batch
+                                      if q.cost is not None)
+                self.admission.on_served(key[-1], len(batch),
+                                         cost=served_cost)
         if not batch:
             return None
         t0 = time.perf_counter()
@@ -416,6 +482,27 @@ class GNNServeEngine:
         compute_attr_s = t_done - max(inf.t_launch, self._last_done)
         self.metrics.record_stages(inf.extract_s, compute_attr_s)
         self._last_done = t_done
+        # cost calibration + attribution: the batch's measured service
+        # seconds (host extraction + de-overlapped device compute) fold
+        # into the estimator's units-per-second EWMAs and split back
+        # across the member queries pro rata by predicted units
+        if self.cost is not None:
+            units = [q.cost.units if q.cost is not None else 0.0
+                     for q in inf.batch]
+            pred_units = sum(units)
+            service_s = inf.extract_s + compute_attr_s
+            n_pad = 0
+            if inf.prepared is not None:
+                n_pad = max((int(g.staged.x_pad.shape[0])
+                             for g in inf.prepared.groups), default=0)
+            self.cost.observe_batch(pred_units, service_s, n_pad=n_pad)
+            shares = self.cost.attribute(units, service_s)
+            for q, share in zip(inf.batch, shares):
+                self.metrics.record_tenant_cost_attributed(q.tenant, share)
+            if inf.trace is not None:
+                inf.trace.cost = dict(
+                    pred_units=pred_units, measured_s=service_s,
+                    n_pad=n_pad, units=units, attributed_s=shares)
         if inf.trace is not None:
             t_le = inf.t_launch_end or t_done
             inf.trace.span("launch", inf.t_launch, t_le)
@@ -438,6 +525,11 @@ class GNNServeEngine:
         self.batch_log.append(list(inf.batch))
         with self._qlock:
             self._unanswered -= len(inf.batch)
+            if self.slo is not None:
+                for q in inf.batch:
+                    self.slo.observe(q.tenant, t_done,
+                                     latency_s=q.latency_s)
+                self.slo.check(t_done, self.admission)
         return len(inf.batch)
 
     # ------------------------------------------------------------- serve ----
@@ -582,9 +674,14 @@ class GNNServeEngine:
 
     def snapshot(self) -> dict:
         inval = sum(s.invalidations for s in self._sessions())
-        return self.metrics.snapshot(extra=dict(
+        extra = dict(
             compiles=self.compile_count, invalidations=inval,
             pending=self.pending, pipeline_depth=self.pipeline_depth,
             watchdogs=dict(recompile=self.recompile_watchdog.snapshot(),
                            transfer=self.transfer_watchdog.snapshot()),
-            trace=self.tracer.snapshot()))
+            trace=self.tracer.snapshot())
+        if self.cost is not None:
+            extra["cost"] = self.cost.snapshot()
+        if self.slo is not None:
+            extra["slo"] = self.slo.snapshot(time.perf_counter())
+        return self.metrics.snapshot(extra=extra)

@@ -74,6 +74,12 @@ class TenantMetrics:
     throttled: int = 0
     shed: int = 0
     queries: int = 0
+    # cost accounting (all 0 until the engine wires a CostEstimator):
+    # predicted units admitted, rejections charged to the cost budget
+    # specifically, and measured service seconds attributed pro rata
+    cost_units: float = 0.0
+    cost_throttled: int = 0
+    attributed_cost_s: float = 0.0
     latency: LatencyStats = dataclasses.field(default_factory=LatencyStats)
 
     @property
@@ -103,6 +109,9 @@ class TenantMetrics:
                     reject_rate=self.reject_rate,
                     queries=self.queries,
                     qps=self.queries / max(elapsed_s, 1e-9),
+                    cost_units=self.cost_units,
+                    cost_throttled=self.cost_throttled,
+                    attributed_cost_s=self.attributed_cost_s,
                     latency=self.latency.summary())
 
 
@@ -149,12 +158,21 @@ class ServeMetrics:
             tm = self.tenants[name] = TenantMetrics()
         return tm
 
-    def record_admission(self, tenant: str, action: str) -> None:
+    def record_admission(self, tenant: str, action: str,
+                         cost: float = 0.0,
+                         cost_limited: bool = False) -> None:
+        """Fold one admission outcome in; an accepted submission's
+        predicted ``cost`` units are counted against the tenant, and a
+        throttle charged to the COST budget (vs the QPS rate) is split out
+        into ``cost_throttled``."""
         tm = self.tenant(tenant)
         if action == "accept":
             tm.accepted += 1
+            tm.cost_units += float(cost)
         elif action == "throttle":
             tm.throttled += 1
+            if cost_limited:
+                tm.cost_throttled += 1
         else:
             tm.shed += 1
 
@@ -162,6 +180,12 @@ class ServeMetrics:
         tm = self.tenant(tenant)
         tm.queries += 1
         tm.latency.record(latency_s)
+
+    def record_tenant_cost_attributed(self, tenant: str,
+                                      seconds: float) -> None:
+        """Credit a tenant its pro-rata share of one batch's measured
+        service seconds (the cost attribution the estimator computes)."""
+        self.tenant(tenant).attributed_cost_s += float(seconds)
 
     def record_stages(self, extract_s: float, compute_s: float) -> None:
         """Record one batch's per-stage breakdown (both histogrammed and

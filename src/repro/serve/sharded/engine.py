@@ -57,12 +57,12 @@ class ShardedServeEngine(GNNServeEngine):
                  pipeline_depth: int = 0, halo_aware: bool = True,
                  staleness_s: float = 0.25,
                  halo_window: Optional[int] = None, admission=None,
-                 tracer=None, trace: bool = True):
+                 tracer=None, trace: bool = True, cost=None, slo=None):
         super().__init__(store, max_batch=max_batch, mode=mode,
                          full_cache_max_nodes=full_cache_max_nodes,
                          keep_finished=keep_finished,
                          pipeline_depth=pipeline_depth, admission=admission,
-                         tracer=tracer, trace=trace)
+                         tracer=tracer, trace=trace, cost=cost, slo=slo)
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
         self.n_shards = n_shards
@@ -76,6 +76,8 @@ class ShardedServeEngine(GNNServeEngine):
         self.halo_window = halo_window
         self.halo_tiles_shared = 0       # co-batched shared halo tiles
         self.halo_bytes_saved = 0        # est. serve/x bytes they deduplicate
+        self.whale_splits = 0            # batches closed early to avoid
+        #                                  co-batching two predicted whales
         # formation stats of the most recent _pop_batch, stashed for the
         # batch's trace (single extract worker: read before the next pop)
         self._last_formation: dict = {}
@@ -141,6 +143,18 @@ class ShardedServeEngine(GNNServeEngine):
             self._feat_bytes_cache[(graph, model)] = b
         return b
 
+    def _cost_halo_rows(self, graph: str, model: str,
+                        node: int) -> Tuple[int, int]:
+        """Predicted halo traffic of one seed from its static halo
+        signature: every remote FRDC tile the signature names is
+        ``frdc.TILE`` feature rows of ``serve/x`` gather — the same
+        per-tile accounting the halo plan's ``payload_bytes`` uses. Reads
+        only the cached signature/routing state ``_queue_key`` resolves on
+        the same submit path."""
+        session = self._get_session((graph, model))
+        sig = self._seed_signature(session, graph, model, node)
+        return len(sig) * frdc.TILE, self._feat_row_bytes(graph, model)
+
     def _prepare_formation(self, key: tuple, session) -> None:
         """Warm the halo-signature cache for every request the upcoming
         formation may touch — OUTSIDE ``_qlock``, so the locked pop does no
@@ -185,6 +199,14 @@ class ShardedServeEngine(GNNServeEngine):
         sig = set(self._seed_signature(session, graph, model, batch[0].node))
         row_bytes = self._feat_row_bytes(graph, model)
         form_shared, form_saved = 0, 0
+        # whale avoidance: with a cost model, a batch already carrying one
+        # predicted whale never greedily picks up another — two whales in
+        # one micro-batch make its padded bucket (and so EVERY member's
+        # latency) pay for both closures. The staleness bound still wins:
+        # an overdue whale is taken, never skipped.
+        has_whale = self.cost is not None \
+            and self.cost.is_whale(batch[0].cost)
+        form_whale_split = False
         while len(batch) < limit and dq:
             # staleness bound: the earliest overdue request anywhere in the
             # window wins over signature grouping (the deque is in submit
@@ -200,14 +222,22 @@ class ShardedServeEngine(GNNServeEngine):
                 q = dq[overdue_i]
                 del dq[overdue_i]
             else:
-                best_i, best_score = 0, -1
+                best_i, best_score = None, -1
                 for i, cand in enumerate(dq):
                     if i >= window:
                         break
+                    if has_whale and self.cost.is_whale(cand.cost):
+                        continue
                     score = len(sig & self._seed_signature(
                         session, graph, model, cand.node))
                     if score > best_score:
                         best_i, best_score = i, score
+                if best_i is None:
+                    # every in-window candidate is another whale: close
+                    # the batch early and leave them for their own batches
+                    self.whale_splits += 1
+                    form_whale_split = True
+                    break
                 q = dq[best_i]
                 del dq[best_i]
             csig = self._seed_signature(session, graph, model, q.node)
@@ -219,9 +249,13 @@ class ShardedServeEngine(GNNServeEngine):
                 form_saved += shared * frdc.TILE * row_bytes
             sig |= csig
             batch.append(q)
+            if self.cost is not None and self.cost.is_whale(q.cost):
+                has_whale = True
         self._last_formation = dict(tiles=len(sig),
                                     tiles_shared=form_shared,
                                     bytes_saved=form_saved)
+        if form_whale_split:
+            self._last_formation["whale_split"] = True
         return batch
 
     # ------------------------------------------------------- trace hooks ---
@@ -271,5 +305,6 @@ class ShardedServeEngine(GNNServeEngine):
                                           for s in self._sessions()),
                     halo_aware=self.halo_aware,
                     halo_tiles_shared=self.halo_tiles_shared,
-                    halo_bytes_saved=self.halo_bytes_saved)
+                    halo_bytes_saved=self.halo_bytes_saved,
+                    whale_splits=self.whale_splits)
         return snap

@@ -42,6 +42,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import logging
+import threading
 import time
 from typing import Callable, Dict, List, Optional
 
@@ -102,6 +103,10 @@ class BatchTrace:
     error: str = ""
     requeued: bool = False
     kept: str = ""
+    # cost-model view of the batch: summed predicted units, measured
+    # service seconds, per-query predicted units, attribution — filled by
+    # the engine's complete stage when a CostEstimator is wired in
+    cost: Dict[str, object] = dataclasses.field(default_factory=dict)
 
     def span(self, name: str, t0: float, t1: float, **attrs) -> SpanEvent:
         ev = SpanEvent(name, t0, t1, attrs)
@@ -130,6 +135,7 @@ class BatchTrace:
                     overdue=self.overdue, full_cache=self.full_cache,
                     n_queries=len(self.queries), queries=list(self.queries),
                     bucket=dict(self.bucket), halo=dict(self.halo),
+                    cost=dict(self.cost),
                     error=self.error, requeued=self.requeued, kept=self.kept,
                     spans=[s.to_json() for s in self.spans])
 
@@ -157,7 +163,13 @@ class SpanTracer:
     have been seen) are kept as outliers; otherwise 1-in-``sample_every``
     batches are kept. ``sample_every=1`` records everything (the acceptance
     and benchmark-export setting); ``enabled=False`` makes every call a
-    no-op without the engines having to branch on None."""
+    no-op without the engines having to branch on None.
+
+    Thread safety: the pipelined engines commit traces from worker threads
+    while exporters snapshot the ring from the caller's thread, so ring and
+    counter mutation is serialized under an internal lock — a
+    :meth:`records` snapshot taken mid-append can never see a torn ring
+    (a ``_pos`` read racing the wrap-around slice)."""
 
     OUTLIER_MIN_SAMPLES = 32
 
@@ -175,6 +187,7 @@ class SpanTracer:
         self.enabled = enabled
         self._ring: List[object] = []
         self._pos = 0
+        self._lock = threading.Lock()
         self._next_id = 0
         self.batches_seen = 0
         self.batches_recorded = 0
@@ -192,10 +205,12 @@ class SpanTracer:
         list). Cheap — retention is decided at :meth:`commit`."""
         if not self.enabled:
             return None
-        tr = BatchTrace(trace_id=self._next_id, key=key, tenant=tenant,
+        with self._lock:
+            trace_id = self._next_id
+            self._next_id += 1
+        tr = BatchTrace(trace_id=trace_id, key=key, tenant=tenant,
                         shard=shard, t_start=t_pick, vtime=vtime,
                         overdue=overdue)
-        self._next_id += 1
         tr.queries = [dict(qid=q.qid, node=q.node, t_submit=q.t_submit,
                            queue_wait_s=t_pick - q.t_submit) for q in batch]
         for q in batch:          # link each query to its batch's trace
@@ -216,31 +231,33 @@ class SpanTracer:
         trace.requeued = requeued
         if trace.t_end <= trace.t_start:
             trace.t_end = time.perf_counter()
-        self.batches_seen += 1
-        kept = ""
-        if error or requeued:
-            kept = "error"
-            self.errors_recorded += 1
-        elif self._is_outlier(trace.total_s):
-            kept = "outlier"
-            self.outliers_recorded += 1
-        elif (self.batches_seen - 1) % self.sample_every == 0:
-            kept = "sampled"
-        self._push_total(trace.total_s)
-        if kept:
-            trace.kept = kept
-            self._store(trace)
-            self.batches_recorded += 1
+        with self._lock:
+            self.batches_seen += 1
+            kept = ""
+            if error or requeued:
+                kept = "error"
+                self.errors_recorded += 1
+            elif self._is_outlier(trace.total_s):
+                kept = "outlier"
+                self.outliers_recorded += 1
+            elif (self.batches_seen - 1) % self.sample_every == 0:
+                kept = "sampled"
+            self._push_total(trace.total_s)
+            if kept:
+                trace.kept = kept
+                self._store(trace)
+                self.batches_recorded += 1
         return bool(kept)
 
     def warning(self, name: str, **attrs) -> WarningEvent:
         """Record an always-kept structured warning event (watchdogs)."""
-        ev = WarningEvent(trace_id=self._next_id, name=name,
-                          t=time.perf_counter(), attrs=attrs)
-        self._next_id += 1
-        if self.enabled:
-            self._store(ev)
-            self.warnings_recorded += 1
+        with self._lock:
+            ev = WarningEvent(trace_id=self._next_id, name=name,
+                              t=time.perf_counter(), attrs=attrs)
+            self._next_id += 1
+            if self.enabled:
+                self._store(ev)
+                self.warnings_recorded += 1
         return ev
 
     def _push_total(self, total_s: float) -> None:
@@ -263,8 +280,11 @@ class SpanTracer:
 
     # ------------------------------------------------------------ access ----
     def records(self) -> List[object]:
-        """Retained records, oldest first."""
-        return self._ring[self._pos:] + self._ring[:self._pos]
+        """Retained records, oldest first (a consistent copy: the slice is
+        taken under the ring lock, so concurrent commits from pipeline
+        worker threads can never tear the wrap-around)."""
+        with self._lock:
+            return self._ring[self._pos:] + self._ring[:self._pos]
 
     def batch_traces(self) -> List[BatchTrace]:
         return [r for r in self.records() if isinstance(r, BatchTrace)]
@@ -273,7 +293,8 @@ class SpanTracer:
         return [r for r in self.records() if isinstance(r, WarningEvent)]
 
     def clear(self) -> None:
-        self._ring, self._pos = [], 0
+        with self._lock:
+            self._ring, self._pos = [], 0
 
     def snapshot(self) -> dict:
         return dict(schema_version=TRACE_SCHEMA_VERSION,

@@ -1,0 +1,529 @@
+"""Cost-model + SLO tests: submit-time cost prediction (topology-only,
+deterministic), the cost-budget admission lane, cost-weighted fair queueing,
+error-budget burn alerts + depth autotune on an injected clock, whale-aware
+sharded batch formation, the Prometheus cost/SLO series, and — above all —
+the bit-exactness oracle: a cost-aware engine may reorder service but must
+answer every query identically to the cost-unaware path."""
+import json
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.graphs import sampling
+from repro.graphs.datasets import make_dataset
+from repro.models import gnn
+from repro.serve import (AdmissionController, CostEstimator, GNNServeEngine,
+                         GraphStore, SLOPolicy, SLOTracker, ShardedServeEngine,
+                         SpanTracer, TenantPolicy, prometheus_text,
+                         spearman_rho)
+
+jax.config.update("jax_platform_name", "cpu")
+
+HIDDEN = 16
+BATCH = 8
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_dataset("cora", seed=0, scale=0.1)
+
+
+@pytest.fixture(scope="module")
+def store(data):
+    st = GraphStore(max_batch=BATCH)
+    st.register_graph("g", data)
+    key = jax.random.PRNGKey(0)
+    f, c = data.x.shape[1], data.n_classes
+    st.register_model("gcn", "gcn", gnn.init_gcn(key, f, HIDDEN, c))
+    return st
+
+
+def _degrees(csr):
+    return np.asarray(csr.indptr[1:]) - np.asarray(csr.indptr[:-1])
+
+
+# ------------------------------------------------------------ spearman_rho --
+
+def test_spearman_rho_basic():
+    assert spearman_rho([1, 2, 3, 4], [10, 20, 30, 40]) == pytest.approx(1.0)
+    assert spearman_rho([1, 2, 3, 4], [4, 3, 2, 1]) == pytest.approx(-1.0)
+    # monotone in rank but not linear in value: still exactly 1
+    assert spearman_rho([1, 2, 3], [1, 100, 10000]) == pytest.approx(1.0)
+
+
+def test_spearman_rho_ties_and_degenerate():
+    # average ranks for ties: a tied pair must not flip the sign
+    assert spearman_rho([1, 2, 2, 4], [1, 2, 3, 4]) > 0.9
+    assert np.isnan(spearman_rho([1, 2], [1, 2]))          # < 3 points
+    assert np.isnan(spearman_rho([5, 5, 5], [1, 2, 3]))    # constant series
+    with pytest.raises(ValueError):
+        spearman_rho([1, 2, 3], [1, 2])
+
+
+# ----------------------------------------------- estimator edge cases (sat) --
+
+def test_full_cache_cost_is_o1(store):
+    """A full-cache hit is O(1) no matter how hubby the node is."""
+    est = CostEstimator()
+    csr = store.graphs["g"].csr
+    hub = int(np.argmax(_degrees(csr)))
+    e = est.estimate("g", hub, csr, full_cache=True)
+    assert e.full_cache
+    assert e.units == CostEstimator.FULL_CACHE_UNITS
+    assert e.units <= est.estimate("g", hub, csr).units
+
+
+def test_isolated_node_minimal_cost():
+    """An isolated node's closure is itself: the cheapest possible query."""
+    edges = np.array([[0, 1, 1, 2], [1, 0, 2, 1]], np.int64)
+    csr = sampling.to_csr(edges, 4)                 # node 3 has no edges
+    est = CostEstimator()
+    iso = est.estimate("tiny", 3, csr)
+    assert iso.closure_nodes == 1 and iso.closure_edges == 0
+    for n in (0, 1, 2):
+        assert est.estimate("tiny", n, csr).units >= iso.units
+
+
+def test_hub_node_cost_dominates(store):
+    """The max-degree hub at full k costs at least any leaf, and more hops
+    never cost less."""
+    est = CostEstimator()
+    csr = store.graphs["g"].csr
+    degs = _degrees(csr)
+    hub, leaf = int(np.argmax(degs)), int(np.argmin(degs))
+    hub_e = est.estimate("g", hub, csr, khop=2)
+    assert hub_e.units >= est.estimate("g", leaf, csr, khop=2).units
+    assert hub_e.units >= est.estimate("g", hub, csr, khop=1).units
+
+
+def test_cost_deterministic_across_feature_updates(store, data):
+    """Estimates are pure functions of topology: updating features must not
+    move a single field of the prediction."""
+    est = CostEstimator()
+    csr = store.graphs["g"].csr
+    nodes = np.random.default_rng(0).integers(0, data.n_nodes, size=16)
+    before = [est.estimate("g", int(n), csr) for n in nodes]
+    store.update_features("g", data.x + 1.0)
+    after = [est.estimate("g", int(n), csr) for n in nodes]
+    assert before == after
+    store.update_features("g", data.x)              # restore for other tests
+
+
+def test_estimate_halo_rows_and_attribution():
+    edges = np.array([[0, 1], [1, 0]], np.int64)
+    csr = sampling.to_csr(edges, 2)
+    est = CostEstimator()
+    plain = est.estimate("h", 0, csr)
+    halo = est.estimate("h", 0, csr, halo_rows=8, row_bytes=64)
+    assert halo.halo_bytes == 8 * 64
+    assert halo.units > plain.units
+    shares = est.attribute([1.0, 3.0], 4.0)
+    assert shares == pytest.approx([1.0, 3.0])
+    assert est.attribute([0.0, 0.0], 4.0) == pytest.approx([2.0, 2.0])
+
+
+def test_whale_threshold():
+    est = CostEstimator(whale_units=100.0)
+    from repro.serve import CostEstimate
+    assert est.is_whale(CostEstimate(units=100.0))
+    assert not est.is_whale(CostEstimate(units=99.0))
+    assert not est.is_whale(None)
+
+
+def test_calibration_rank_correlation():
+    est = CostEstimator()
+    for u, s in [(10, 0.01), (20, 0.02), (40, 0.04), (80, 0.08)]:
+        est.observe_batch(u, s, n_pad=64)
+    assert est.rank_correlation() == pytest.approx(1.0)
+    assert est.units_per_second(64) == pytest.approx(1000.0)
+    snap = est.snapshot()
+    assert snap["batches_observed"] == 4
+    assert snap["rank_correlation"] == pytest.approx(1.0)
+
+
+# ----------------------------------------------------- cost-budget admission --
+
+def test_cost_bucket_throttles_on_cost_not_qps():
+    adm = AdmissionController(policies=dict(
+        t=TenantPolicy(cost_rate=10.0, cost_burst=20.0)))
+    # 20 units of burst: two 10-unit queries pass, the third is cost-limited
+    assert adm.admit("t", now=0.0, cost=10.0).accepted
+    assert adm.admit("t", now=0.0, cost=10.0).accepted
+    d = adm.admit("t", now=0.0, cost=10.0)
+    assert not d.accepted and d.cost_limited
+    # the budget refills at cost_rate units/s
+    assert adm.admit("t", now=1.0, cost=10.0).accepted
+
+
+def test_cost_charge_clamped_to_capacity():
+    """A single whale above the whole bucket capacity must still be
+    admissible from a full bucket — the charge clamps, it doesn't starve."""
+    adm = AdmissionController(policies=dict(
+        t=TenantPolicy(cost_rate=10.0, cost_burst=16.0)))
+    assert adm.admit("t", now=0.0, cost=1000.0).accepted
+    assert not adm.admit("t", now=0.0, cost=1.0).accepted
+
+
+def test_depth_scale_feedback():
+    adm = AdmissionController(policies=dict(
+        t=TenantPolicy(max_queue_depth=64)))
+    assert adm.effective_depth("t") == 64
+    adm.set_depth_scale("t", 0.25)
+    assert adm.effective_depth("t") == 16
+    adm.set_depth_scale("t", 1.0)
+    assert adm.effective_depth("t") == 64
+
+
+def test_cost_weighted_fair_queueing_vtime():
+    """on_served(cost=...) advances virtual time by cost/weight: after one
+    expensive batch the tenant must wait behind a cheap equal-weight peer."""
+    from collections import deque
+
+    class _Q:                                       # duck-typed queue head
+        def __init__(self, t):
+            self.t_submit = t
+
+    adm = AdmissionController(policies=dict(a=TenantPolicy(),
+                                            b=TenantPolicy()))
+    queues = {("g", "m", "a"): deque([_Q(0.0)]),
+              ("g", "m", "b"): deque([_Q(0.0)])}
+    adm.push_head(("g", "m", "a"), "a", 0.0)
+    adm.push_head(("g", "m", "b"), "b", 0.0)
+    first = adm.pick(queues, now=0.0)
+    assert first is not None
+    tenant = adm.last_pick["tenant"]
+    # whoever went first gets charged a WHALE; the other a pittance
+    adm.on_served(tenant, 1, cost=1000.0)
+    other = "b" if tenant == "a" else "a"
+    key = ("g", "m", tenant)
+    queues[key].popleft()
+    queues[key].append(_Q(0.1))
+    adm.push_head(key, tenant, 0.1)
+    assert adm.pick(queues, now=0.2) == ("g", "m", other)
+    assert adm.last_pick["tenant"] == other
+
+
+# ------------------------------------------------------- SLO burn tracking --
+
+def test_burn_alert_fires_on_multi_window_breach():
+    tracer = SpanTracer()
+    slo = SLOTracker(dict(t=SLOPolicy(availability=0.9, window_s=10.0,
+                                      short_window_s=1.0, burn_alert=2.0)),
+                     tracer=tracer)
+    # 50% bad over both windows: burn = 0.5 / 0.1 = 5 >= 2
+    for i in range(20):
+        slo.observe("t", now=9.0 + 0.05 * i, rejected=(i % 2 == 0))
+    fired = slo.check(now=10.0)
+    assert len(fired) == 1 and fired[0]["tenant"] == "t"
+    assert fired[0]["burn_long"] >= 2.0 and fired[0]["burn_short"] >= 2.0
+    events = [w for w in tracer.warning_events() if w.name == "slo_burn"]
+    assert len(events) == 1
+    # cooldown: an immediate re-check must not re-fire
+    assert slo.check(now=10.01) == []
+    # ... but after the cooldown (one short window) it may
+    slo.observe("t", now=11.0, rejected=True)
+    assert len(slo.check(now=11.0)) == 1
+
+
+def test_burn_alert_needs_both_windows():
+    """A long-ago burst that left the short window must NOT page."""
+    slo = SLOTracker(dict(t=SLOPolicy(availability=0.9, window_s=10.0,
+                                      short_window_s=1.0, burn_alert=2.0)))
+    for i in range(10):
+        slo.observe("t", now=0.1 * i, rejected=True)
+    for i in range(10):
+        slo.observe("t", now=8.0 + 0.1 * i, rejected=False)
+    assert slo.check(now=9.0) == []
+
+
+def test_autotune_shrinks_then_relaxes_depth():
+    adm = AdmissionController(policies=dict(
+        t=TenantPolicy(max_queue_depth=64)))
+    slo = SLOTracker(dict(t=SLOPolicy(availability=0.9, window_s=10.0,
+                                      short_window_s=1.0, burn_alert=2.0,
+                                      min_depth_scale=0.25)))
+    for i in range(20):
+        slo.observe("t", now=9.0 + 0.05 * i, rejected=True)
+    slo.check(now=10.0, admission=adm)
+    assert adm.effective_depth("t") == 32            # one x0.5 shrink
+    snap = slo.snapshot(now=10.0)["tenants"]["t"]
+    assert snap["depth_shrinks"] == 1
+    assert snap["depth_scale"] == pytest.approx(0.5)
+    # a healthy stretch relaxes the scale back up
+    for i in range(40):
+        slo.observe("t", now=25.0 + 0.1 * i, rejected=False)
+    slo.check(now=30.0, admission=adm)
+    assert adm.effective_depth("t") > 32
+
+
+def test_latency_slower_than_target_burns():
+    slo = SLOTracker(dict(t=SLOPolicy(target_p99_ms=10.0,
+                                      availability=0.9, window_s=10.0)))
+    slo.observe("t", now=1.0, latency_s=0.005)       # fast: good
+    slo.observe("t", now=1.0, latency_s=0.500)       # slow: burns
+    snap = slo.snapshot(now=1.0)["tenants"]["t"]
+    assert snap["good"] == 1 and snap["bad"] == 1
+
+
+# --------------------------------------------------- engine: bit-exactness --
+
+def _serve_costed(store, data, cost, slo, seed=1):
+    engine = GNNServeEngine(store, max_batch=BATCH, mode="subgraph",
+                            cost=cost, slo=slo)
+    engine.tracer.sample_every = 1
+    nodes = np.random.default_rng(seed).integers(0, data.n_nodes,
+                                                 size=4 * BATCH)
+    queries = engine.submit_many("g", "gcn", nodes)
+    engine.run_until_drained()
+    return engine, queries
+
+
+def test_cost_aware_engine_bit_exact(store, data):
+    """The closed-loop cost/SLO machinery may reorder service but must not
+    perturb a single logit: replay the cost-aware engine's actual batch
+    compositions through the raw session and compare bit-for-bit."""
+    engine, queries = _serve_costed(
+        store, data, CostEstimator(),
+        SLOTracker(dict(default=SLOPolicy(availability=0.99))))
+    assert all(q.done for q in queries)
+    sess = store.session("g", "gcn")
+    for batch in engine.batch_log:
+        seeds = np.asarray([q.node for q in batch], np.int64)
+        prepared = sess.prepare_batch(seeds)
+        logits = sess.finish_batch(prepared, sess.launch_batch(prepared))
+        got = np.stack([q.logits for q in batch])
+        np.testing.assert_array_equal(np.asarray(logits), got)
+    engine.close()
+
+
+def test_engine_cost_attribution_and_snapshot(store, data):
+    cost = CostEstimator()
+    engine, queries = _serve_costed(
+        store, data, cost,
+        SLOTracker(dict(default=SLOPolicy(availability=0.99))))
+    snap = engine.snapshot()
+    assert snap["cost"]["queries_estimated"] == len(queries)
+    assert snap["cost"]["batches_observed"] == len(engine.batch_log)
+    tm = snap["tenants"]["default"]
+    assert tm["cost_units"] > 0
+    assert tm["attributed_cost_s"] > 0
+    # measured seconds are conserved across the attribution split
+    total_measured = sum(t.cost["measured_s"]
+                         for t in engine.tracer.batch_traces()
+                         if t.cost)
+    assert tm["attributed_cost_s"] <= total_measured * 1.01 \
+        + 1e-9
+    assert "slo" in snap and "default" in snap["slo"]["tenants"]
+    engine.close()
+
+
+def test_engine_without_cost_unchanged(store, data):
+    """cost=None/slo=None is the exact pre-cost engine: no cost leaves in
+    the snapshot, no per-query estimates."""
+    engine = GNNServeEngine(store, max_batch=BATCH, mode="subgraph")
+    qs = engine.submit_many("g", "gcn", np.arange(BATCH))
+    engine.run_until_drained()
+    snap = engine.snapshot()
+    assert "cost" not in snap and "slo" not in snap
+    assert all(q.cost is None for q in qs)
+    engine.close()
+
+
+# ------------------------------------------------- sharded whale avoidance --
+
+def test_sharded_no_two_whales_cobatched(store, data):
+    """With a cost model wired, halo-aware formation never greedily packs
+    two predicted whales into one batch."""
+    cost = CostEstimator()
+    # staleness_s high: the overdue override deliberately TAKES whales (an
+    # overdue request is never skipped), which is not what this test pins
+    engine = ShardedServeEngine(store, 2, max_batch=BATCH, mode="subgraph",
+                                cost=cost, staleness_s=30.0)
+    # threshold from the ENGINE's own estimates (halo rows included), so
+    # is_whale agrees between formation and the assertions below
+    units = np.array([engine._estimate_cost("g", "gcn", int(n)).units
+                      for n in range(data.n_nodes)])
+    threshold = float(np.percentile(units, 90))
+    cost.whale_units = threshold
+    rng = np.random.default_rng(2)
+    whales = np.nonzero(units >= threshold)[0]
+    minnows = np.nonzero(units < threshold)[0]
+    nodes = np.concatenate([rng.choice(whales, size=2 * BATCH),
+                            rng.choice(minnows, size=2 * BATCH)])
+    rng.shuffle(nodes)
+    queries = engine.submit_many("g", "gcn", nodes)
+    engine.run_until_drained()
+    assert all(q.done for q in queries)
+    for batch in engine.batch_log:
+        n_whales = sum(1 for q in batch if cost.is_whale(q.cost))
+        assert n_whales <= 1
+    # the stream above forces at least one early batch close
+    assert engine.whale_splits > 0
+    assert engine.snapshot()["whale_splits"] == engine.whale_splits
+    engine.close()
+
+
+# ------------------------------------------------------- prometheus export --
+
+def test_prometheus_help_type_headers_and_cost_series(store, data):
+    cost = CostEstimator()
+    engine, _ = _serve_costed(
+        store, data, cost,
+        SLOTracker(dict(default=SLOPolicy(availability=0.99))))
+    text = prometheus_text(engine.snapshot(), engine.tracer)
+    engine.close()
+    lines = text.splitlines()
+    seen_header = set()
+    seen_sample = set()
+    for ln in lines:
+        if ln.startswith("# HELP ") or ln.startswith("# TYPE "):
+            name = ln.split()[2]
+            # headers precede every sample of their metric, exactly once
+            assert name not in seen_sample
+            if ln.startswith("# TYPE "):
+                assert ln.split()[3] in ("counter", "gauge")
+                assert name not in seen_header
+                seen_header.add(name)
+        elif ln and not ln.startswith("#"):
+            seen_sample.add(ln.split("{")[0].split(" ")[0])
+    assert seen_sample and seen_header >= seen_sample
+    for series in ("serve_tenant_cost_units_total",
+                   "serve_tenant_cost_attributed_seconds_total",
+                   "serve_cost_rank_correlation",
+                   "serve_slo_burn_rate",
+                   "serve_slo_budget_remaining"):
+        assert any(ln.startswith(series) for ln in lines), series
+
+
+# --------------------------------------------------- compare_bench gating --
+
+def test_compare_bench_graceful_missing_baseline(tmp_path, capsys):
+    import sys
+    import pathlib
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+    from benchmarks.compare_bench import main
+
+    cur = tmp_path / "cur.json"
+    cur.write_text(json.dumps(dict(schema_version=3)))
+    assert main([str(tmp_path / "missing.json"), str(cur)]) == 0
+    assert "WARN" in capsys.readouterr().out
+    # unreadable (invalid JSON) baseline: same graceful path
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    assert main([str(bad), str(cur)]) == 0
+    # a MISSING CURRENT file is a plain failure, not a traceback
+    assert main([str(cur), str(tmp_path / "missing.json")]) == 1
+
+
+def test_compare_bench_gates_cost_rho_drift(tmp_path):
+    import sys
+    import pathlib
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+    from benchmarks.compare_bench import main
+
+    base = dict(schema_version=3, slo=dict(cost_spearman_rho=1.0))
+    pb = tmp_path / "base.json"
+    pb.write_text(json.dumps(base))
+    drifted = dict(schema_version=3, slo=dict(cost_spearman_rho=0.4))
+    pc = tmp_path / "drift.json"
+    pc.write_text(json.dumps(drifted))
+    assert main([str(pb), str(pc)]) == 1            # 2.5x worse: hard fail
+    ok = dict(schema_version=3, slo=dict(cost_spearman_rho=0.9))
+    pk = tmp_path / "ok.json"
+    pk.write_text(json.dumps(ok))
+    assert main([str(pb), str(pk)]) == 0
+    # sub-floor baselines are too noisy to gate on
+    noisy = dict(schema_version=3, slo=dict(cost_spearman_rho=0.3))
+    pn = tmp_path / "noisy.json"
+    pn.write_text(json.dumps(noisy))
+    assert main([str(pn), str(pc)]) == 0
+
+
+# ------------------------------------------------- tracer under concurrency --
+
+def test_tracer_snapshot_safe_under_concurrent_writers():
+    """Hammer commit/warning from threads while snapshotting: no torn
+    reads, no exceptions, monotone unique trace ids."""
+    tracer = SpanTracer(capacity=64, sample_every=1)
+    stop = threading.Event()
+    errors = []
+
+    class _Query:
+        def __init__(self, qid):
+            self.qid, self.node, self.t_submit = qid, qid, 0.0
+            self.trace_id = None
+
+    def writer():
+        import time as _time
+        try:
+            qid = 0
+            while not stop.is_set():
+                t = _time.perf_counter()
+                tr = tracer.begin(("g", "m", "default"), "default", None,
+                                  [_Query(qid)], t)
+                tr.span("extract", t, t + 1e-4)
+                tr.span("compute", t + 1e-4, t + 2e-4)
+                tracer.commit(tr)
+                tracer.warning("w", k=1)
+                qid += 1
+        except Exception as e:          # pragma: no cover
+            errors.append(e)
+
+    def reader():
+        try:
+            while not stop.is_set():
+                recs = tracer.records()
+                ids = [t.trace_id for t in recs]
+                assert len(ids) == len(set(ids))
+                tracer.warning_events()
+        except Exception as e:          # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer) for _ in range(3)] \
+        + [threading.Thread(target=reader) for _ in range(2)]
+    for t in threads:
+        t.start()
+    import time
+    time.sleep(0.3)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors
+    # counters stayed coherent under the races
+    assert tracer.batches_recorded <= tracer.batches_seen
+    assert len(tracer.records()) <= tracer.capacity
+
+
+def test_tracer_consistent_with_pipelined_engine(store, data):
+    """Regression: with pipeline_depth > 1 the extract thread commits traces
+    while the main thread snapshots — records() must never tear."""
+    engine = GNNServeEngine(store, max_batch=BATCH, mode="subgraph",
+                            pipeline_depth=2, cost=CostEstimator())
+    engine.tracer.sample_every = 1
+    nodes = np.random.default_rng(3).integers(0, data.n_nodes,
+                                              size=6 * BATCH)
+    errors = []
+    stop = threading.Event()
+
+    def snapshotter():
+        try:
+            while not stop.is_set():
+                for tr in engine.tracer.records():
+                    d = tr.to_json()
+                    assert d["trace_id"] == tr.trace_id
+        except Exception as e:          # pragma: no cover
+            errors.append(e)
+
+    th = threading.Thread(target=snapshotter)
+    th.start()
+    queries = engine.submit_many("g", "gcn", nodes)
+    engine.run_until_drained()
+    stop.set()
+    th.join()
+    assert not errors
+    assert all(q.done for q in queries)
+    traces = engine.tracer.batch_traces()
+    assert traces and all(t.cost for t in traces)
+    engine.close()
