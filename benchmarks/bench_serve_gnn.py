@@ -30,12 +30,14 @@ RESULTS = Path(__file__).resolve().parents[1] / "results"
 
 # bump when the emitted JSON layout changes (compare_bench.py warns on
 # cross-version diffs). v3: cost-model + SLO leaves (the ``slo`` section,
-# ``cost_spearman_rho``).
-SCHEMA_VERSION = 3
+# ``cost_spearman_rho``). v4: the ``kernels`` section (fused-vs-unfused
+# launch footprint + per-layer latency, multi-bucket dispatch reduction).
+SCHEMA_VERSION = 4
 
 FAMILY_INITS = {
     "gcn": gnn.init_gcn, "sage": gnn.init_sage, "saint": gnn.init_saint,
 }
+N_LAYERS = {"gcn": 2, "sage": 2, "saint": 3}
 
 
 def _serve_wave(engine: GNNServeEngine, graph: str, model: str,
@@ -54,7 +56,18 @@ def _bench_mode(store: GraphStore, family: str, mode: str, n_queries: int,
     warm_compiles = engine.warmup("bench", family)
     c0 = engine.compile_count
     nodes = np.random.default_rng(seed).integers(0, n_nodes, size=n_queries)
-    _serve_wave(engine, "bench", family, nodes, batch)
+    # a collector pass landing inside a sub-ms full-cache wave dominates its
+    # p99, and WHICH wave it lands in shifts with the process's unrelated
+    # allocation history — pause the collector for the measured waves (same
+    # idiom as the SLO section's calibration loop)
+    gc.collect()
+    gc_was = gc.isenabled()
+    gc.disable()
+    try:
+        _serve_wave(engine, "bench", family, nodes, batch)
+    finally:
+        if gc_was:
+            gc.enable()
     snap = engine.snapshot()
     snap["warmup_compiles"] = warm_compiles
     snap["steady_state_compiles"] = engine.compile_count - c0
@@ -153,6 +166,158 @@ def _replay_bit_exact(store: GraphStore, graph: str, family: str,
         if not np.array_equal(np.asarray(logits), got):
             return False
     return True
+
+
+def _kernel_path_stats(store: GraphStore, family: str,
+                       seeds: np.ndarray, repeats: int) -> tuple:
+    """Serve one bucketed batch through ``store``'s kernel path and measure
+    its launch footprint: the traced-program equation/pallas counts of the
+    ACTUAL jitted forward (via ``ops.launch_stats`` on the staged operands),
+    the fused trace-time kernel counter, and a best-of-``repeats`` forward
+    latency. Returns (stats dict, logits) — logits so the caller can assert
+    fused/unfused bitwise identity."""
+    import time
+
+    import jax.numpy as jnp
+
+    from repro.kernels import fused_layer
+    from repro.kernels import ops as kernel_ops
+
+    sess = store.session("bench", family)
+    fused_layer.reset_counters()
+    logits = np.asarray(sess.serve_subgraph(seeds))       # warmup + trace
+    fused_calls = fused_layer.KERNEL_CALLS["fused"]
+    prepared = sess.prepare_batch(np.asarray(seeds, np.int64))
+    g = prepared.groups[0]
+    tr = kernel_ops.launch_stats(
+        g.core._serve_one, jnp.asarray(g.staged.x_pad), prepared.bn,
+        g.staged.adjs, jnp.asarray(g.staged.pos_pad))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        np.asarray(sess.serve_subgraph(seeds))
+        best = min(best, time.perf_counter() - t0)
+    n_layers = N_LAYERS[family]
+    stats = dict(
+        plan=sess.plan.name(),
+        pallas_launches=tr["pallas_calls"],
+        traced_ops=tr["eqns"],
+        ops_per_layer=tr["eqns"] / n_layers,
+        fused_kernel_calls=fused_calls,
+        latency_ms=best * 1e3,
+        layer_latency_ms=best * 1e3 / n_layers,
+    )
+    return stats, logits
+
+
+def _bench_kernels(d, batch: int, hidden: int, repeats: int = 3) -> dict:
+    """Fused-vs-unfused kernel path comparison, per family: the traced
+    launch footprint (the fused path collapses each layer's whole op chain
+    into ONE ``pallas_call``), per-layer latency both ways, and the bitwise
+    identity of their outputs. Forces the kernels on (CPU runs them in
+    interpret mode — latency here tracks regressions of the kernel path
+    itself, the launch counts are backend-independent trace facts)."""
+    from repro.kernels import ops as kernel_ops
+
+    seeds = np.random.default_rng(7).integers(0, d.n_nodes, size=batch)
+    out: dict = dict(note="interpret-mode kernels (CPU); launch counts are "
+                          "trace-time facts, latencies gate the kernel "
+                          "path's own regressions", families={})
+    kernel_ops.force_kernels(True)
+    try:
+        for fam in FAMILY_INITS:
+            per: dict = {}
+            logits = {}
+            for tag, fused in (("unfused", False), ("fused", True)):
+                store = GraphStore(max_batch=batch, use_pallas=True,
+                                   fused=fused)
+                store.register_graph("bench", d)
+                store.register_model(
+                    fam, fam, FAMILY_INITS[fam](jax.random.PRNGKey(0),
+                                                d.x.shape[1], hidden,
+                                                d.n_classes))
+                per[tag], logits[tag] = _kernel_path_stats(
+                    store, fam, seeds, repeats)
+            n_layers = N_LAYERS[fam]
+            per["n_layers"] = n_layers
+            per["launches_per_layer_fused"] = (
+                per["fused"]["fused_kernel_calls"] / n_layers)
+            per["op_reduction"] = (per["unfused"]["ops_per_layer"]
+                                   / max(per["fused"]["ops_per_layer"], 1e-9))
+            per["bit_exact"] = bool(
+                np.array_equal(logits["fused"], logits["unfused"]))
+            out["families"][fam] = per
+    finally:
+        kernel_ops.force_kernels(False)
+    return out
+
+
+def _bench_multi_bucket(store: GraphStore, family: str, n_nodes: int,
+                        batch: int, n_queries: int, depth: int = 3,
+                        seed: int = 2) -> dict:
+    """Serial vs multi-bucket co-launch on the identical query stream: the
+    coalesced engine serves several padded buckets per pipeline tick as ONE
+    device dispatch (``ServeCore.launch_many``), so its dispatch count
+    drops below one-per-batch while every answer stays bit-identical to
+    the serial path (the replayed ``batch_log`` oracle)."""
+    nodes = np.random.default_rng(seed).integers(0, n_nodes, size=n_queries)
+
+    def one(multi: bool, measured: bool = True) -> tuple:
+        if measured:
+            # warm pass on a throwaway engine: the co-launch compositions'
+            # ``_serve_many`` traces live on the store's ServeCores, so the
+            # measured pass below runs pure steady state for BOTH paths
+            one(multi, measured=False)
+        engine = GNNServeEngine(store, max_batch=batch, mode="subgraph",
+                                pipeline_depth=depth, multi_bucket=multi)
+        engine.warmup("bench", family)
+        # the store's sessions (and their dispatch counters) outlive each
+        # engine — count only THIS run's steady-state dispatches
+        d0 = engine.dispatch_count
+        engine.submit_many("bench", family, nodes)
+        engine.run_until_drained()
+        snap = engine.snapshot()
+        n_batches = len(engine.batch_log)
+        disp = engine.dispatch_count - d0
+        replay = (_replay_bit_exact(store, "bench", family, engine)
+                  if measured else True)
+        engine.close()
+        return snap, disp, n_batches, replay
+
+    s_snap, s_disp, s_nb, s_ok = one(False)
+    m_snap, m_disp, m_nb, m_ok = one(True)
+    return dict(
+        family=family, pipeline_depth=depth,
+        n_batches_serial=s_nb, n_batches_multi=m_nb,
+        serial_dispatches=s_disp, coalesced_dispatches=m_disp,
+        dispatch_reduction=s_disp / max(m_disp, 1),
+        qps_serial=s_snap["qps"], qps_multi=m_snap["qps"],
+        replay_bit_exact=bool(s_ok and m_ok),
+    )
+
+
+def _kernels_rows(section: dict, suffix: str = "") -> None:
+    """THE csv emitters of the kernels section (shared by ``run()`` and
+    ``--kernels``)."""
+    for fam, per in section["families"].items():
+        csv_row(f"serve_gnn/kernels/{fam}",
+                per["fused"]["latency_ms"] * 1e3,
+                f"ops_per_layer_unfused={per['unfused']['ops_per_layer']:.1f};"
+                f"ops_per_layer_fused={per['fused']['ops_per_layer']:.1f};"
+                f"launches_per_layer_fused="
+                f"{per['launches_per_layer_fused']:.2f};"
+                f"op_reduction={per['op_reduction']:.1f}x;"
+                f"layer_ms_unfused={per['unfused']['layer_latency_ms']:.2f};"
+                f"layer_ms_fused={per['fused']['layer_latency_ms']:.2f};"
+                f"bit_exact={per['bit_exact']}")
+    mb = section["multi_bucket"]
+    csv_row("serve_gnn/kernels/multi_bucket", 0.0,
+            f"batches={mb['n_batches_multi']};"
+            f"serial_dispatches={mb['serial_dispatches']};"
+            f"coalesced_dispatches={mb['coalesced_dispatches']};"
+            f"dispatch_reduction={mb['dispatch_reduction']:.2f}x;"
+            f"replay_bit_exact={mb['replay_bit_exact']}"
+            f"{suffix}")
 
 
 def _bench_slo(store: GraphStore, family: str, n_nodes: int, batch: int,
@@ -404,6 +569,29 @@ def run_tenants(full: bool = False) -> dict:
     return section
 
 
+def run_kernels(full: bool = False) -> dict:
+    """Standalone ``--kernels`` entry: the fused-vs-unfused launch footprint
+    and the multi-bucket co-launch comparison only, merged into the
+    existing results JSON."""
+    jax.config.update("jax_platform_name", "cpu")
+    scale = 1.0 if full else 0.15
+    batch = 32 if full else 16
+    hidden = 64 if full else 32
+
+    d = make_dataset("cora", seed=0, scale=scale)
+    section = _bench_kernels(d, batch, hidden)
+    store = GraphStore(max_batch=batch)
+    store.register_graph("bench", d)
+    store.register_model("gcn", "gcn",
+                         gnn.init_gcn(jax.random.PRNGKey(0), d.x.shape[1],
+                                      hidden, d.n_classes))
+    section["multi_bucket"] = _bench_multi_bucket(
+        store, "gcn", d.n_nodes, batch, n_queries=6 * batch)
+    out = _merge_results("kernels", section)
+    _kernels_rows(section, suffix=f";wrote={out}")
+    return section
+
+
 def run(full: bool = False) -> dict:
     jax.config.update("jax_platform_name", "cpu")
     scale = 1.0 if full else 0.15
@@ -465,6 +653,12 @@ def run(full: bool = False) -> dict:
                                 n_good=(320 if full else 96))
     _slo_row(summary["slo"])
 
+    # fused-vs-unfused kernel launch footprint + multi-bucket co-launch
+    summary["kernels"] = _bench_kernels(d, batch, hidden)
+    summary["kernels"]["multi_bucket"] = _bench_multi_bucket(
+        store, "gcn", d.n_nodes, batch, n_queries=6 * batch)
+    _kernels_rows(summary["kernels"])
+
     RESULTS.mkdir(parents=True, exist_ok=True)
     out = RESULTS / "BENCH_serve_gnn.json"
     out.write_text(json.dumps(summary, indent=2))
@@ -482,10 +676,16 @@ if __name__ == "__main__":
     ap.add_argument("--slo", action="store_true",
                     help="run only the cost/SLO closed-loop scenario and "
                     "merge it into results/BENCH_serve_gnn.json")
+    ap.add_argument("--kernels", action="store_true",
+                    help="run only the fused-vs-unfused launch footprint + "
+                    "multi-bucket co-launch comparison and merge it into "
+                    "results/BENCH_serve_gnn.json")
     args = ap.parse_args()
     if args.tenants:
         run_tenants(full=args.full)
     elif args.slo:
         run_slo(full=args.full)
+    elif args.kernels:
+        run_kernels(full=args.full)
     else:
         run(full=args.full)

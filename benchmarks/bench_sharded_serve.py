@@ -50,8 +50,10 @@ RESULTS = Path(__file__).resolve().parents[1] / "results"
 
 # bump when the emitted JSON layout changes (compare_bench.py warns on
 # cross-version diffs). v3: sharded snapshots carry ``whale_splits`` (and
-# cost/SLO leaves when a CostEstimator/SLOTracker is wired).
-SCHEMA_VERSION = 3
+# cost/SLO leaves when a CostEstimator/SLOTracker is wired). v4: the
+# ``kernels`` section (multi-bucket co-launch dispatch reduction per shard
+# count + the fused sharded path's bit-exactness).
+SCHEMA_VERSION = 4
 
 FAMILY_INITS = {
     "gcn": gnn.init_gcn, "sage": gnn.init_sage, "saint": gnn.init_saint,
@@ -194,6 +196,89 @@ def _bench_tenants_sharded(store, fam: str, p: int, executor: str,
                 tenants=snap["tenants"], tenant_mixed_batches=mixed)
 
 
+def _multi_bucket_compare(store, fam: str, p: int, executor: str,
+                          nodes: np.ndarray, batch: int) -> dict:
+    """Serial vs multi-bucket co-launch through the sharded engine: with
+    coalescing on, each pump tick dispatches every core's share of the
+    formed batches as ONE ``launch_many`` program per core, so the dispatch
+    count drops below one-per-batch. Every answer is replayed through a
+    single-host session (the ``batch_log`` oracle) — co-launching and
+    sharding together must stay bit-identical to the unsharded forward."""
+    oracle = store.session("bench", fam)
+    # sharded queues alternate owner shards, so a pump tick only holds >= 2
+    # batches of the SAME core once the pipeline is ~2 batches deep per
+    # shard — scale the depth with the shard count
+    depth = 2 * p
+
+    def one(multi: bool, measured: bool = True) -> tuple:
+        if measured:        # warm the co-launch composition traces first
+            one(multi, measured=False)
+        engine = ShardedServeEngine(store, p, max_batch=batch,
+                                    mode="subgraph", executor=executor,
+                                    pipeline_depth=depth,
+                                    multi_bucket=multi)
+        engine.warmup("bench", fam)
+        d0 = engine.dispatch_count
+        engine.submit_many("bench", fam, nodes)
+        engine.run_until_drained()
+        snap = engine.snapshot()
+        n_batches = len(engine.batch_log)
+        disp = engine.dispatch_count - d0
+        replay = measured and all(
+            np.array_equal(
+                np.stack([q.logits for q in b]),
+                np.asarray(oracle.serve_subgraph(
+                    np.asarray([q.node for q in b], np.int64))))
+            for b in engine.batch_log)
+        engine.close()
+        return snap, disp, n_batches, replay
+
+    s_snap, s_disp, s_nb, s_ok = one(False)
+    m_snap, m_disp, m_nb, m_ok = one(True)
+    return dict(
+        n_shards=p, pipeline_depth=depth,
+        n_batches_serial=s_nb, n_batches_multi=m_nb,
+        serial_dispatches=s_disp, coalesced_dispatches=m_disp,
+        dispatch_reduction=s_disp / max(m_disp, 1),
+        qps_serial=s_snap["qps"], qps_multi=m_snap["qps"],
+        replay_bit_exact=bool(s_ok and m_ok),
+    )
+
+
+def _fused_sharded_bit_exact(d, fam: str, p: int, batch: int,
+                             hidden: int) -> bool:
+    """Serve one batch through a FUSED sharded session (kernels forced on,
+    interpret mode off-TPU) and compare bitwise against the UNFUSED sharded
+    forward — the fused-path half of the sharded bit-exactness acceptance
+    (fusing a layer must never change its arithmetic), recorded where the
+    gate can see it. The oracle is the sharded unfused path: sharded serving
+    itself sits one fp-reassociation ulp from the single-host forward (the
+    intra+halo aggregation split), fused or not."""
+    from repro.kernels import ops as kernel_ops
+
+    def build(fused: bool) -> GraphStore:
+        st = GraphStore(max_batch=batch, use_pallas=True, fused=fused)
+        st.register_graph("bench", d)
+        st.register_model(fam, fam,
+                          FAMILY_INITS[fam](jax.random.PRNGKey(0),
+                                            d.x.shape[1], hidden,
+                                            d.n_classes))
+        return st
+
+    seeds = np.random.default_rng(5).integers(0, d.n_nodes, size=batch)
+    kernel_ops.force_kernels(True)
+    try:
+        want = np.asarray(
+            build(False).sharded_session("bench", fam, p)
+            .serve_subgraph(seeds))
+        got = np.asarray(
+            build(True).sharded_session("bench", fam, p)
+            .serve_subgraph(seeds))
+    finally:
+        kernel_ops.force_kernels(False)
+    return bool(np.array_equal(got, want))
+
+
 def run(full: bool = False, executor: str = "host",
         pipeline: bool = False) -> dict:
     # the SPMD comparison needs P host devices; only effective when jax has
@@ -311,6 +396,26 @@ def run(full: bool = False, executor: str = "host",
             f"gold_qps={ten['tenants']['gold']['qps']:.1f};"
             f"base_qps={ten['tenants']['base']['qps']:.1f};"
             f"mixed_batches={ten['tenant_mixed_batches']}")
+
+    # multi-bucket co-launch per shard count + the fused sharded path's
+    # bitwise identity with the unfused single-host forward
+    summary["kernels"] = {
+        f"P{p}": _multi_bucket_compare(store, "gcn", p, executor, nodes,
+                                       batch)
+        for p in SHARD_COUNTS}
+    summary["kernels"]["fused_sharded_bit_exact"] = _fused_sharded_bit_exact(
+        d, "gcn", SHARD_COUNTS[0], batch, hidden)
+    for p in SHARD_COUNTS:
+        mb = summary["kernels"][f"P{p}"]
+        csv_row(f"sharded_serve/kernels/P{p}/multi_bucket", 0.0,
+                f"batches={mb['n_batches_multi']};"
+                f"serial_dispatches={mb['serial_dispatches']};"
+                f"coalesced_dispatches={mb['coalesced_dispatches']};"
+                f"dispatch_reduction={mb['dispatch_reduction']:.2f}x;"
+                f"replay_bit_exact={mb['replay_bit_exact']}")
+    csv_row("sharded_serve/kernels/fused", 0.0,
+            f"fused_sharded_bit_exact="
+            f"{summary['kernels']['fused_sharded_bit_exact']}")
 
     RESULTS.mkdir(parents=True, exist_ok=True)
     out = RESULTS / "BENCH_sharded_serve.json"

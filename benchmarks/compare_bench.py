@@ -6,13 +6,18 @@ knows about under tolerance bands:
 
   * **higher-is-better** — ``qps`` / ``qps_pipelined`` / ``qps_fifo_serial``
     / ``halo_bytes_saved_measured`` / ``overlap_ratio`` /
-    ``cost_spearman_rho`` (cost-model calibration drift): a drop beyond the
+    ``cost_spearman_rho`` (cost-model calibration drift) /
+    ``op_reduction`` (the fused kernels' traced-op collapse) /
+    ``dispatch_reduction`` (multi-bucket co-launch): a drop beyond the
     warn band is a warning, beyond the hard band a failure.
   * **lower-is-better** — ``p50_ms`` / ``p99_ms`` / ``halo_bytes`` /
-    ``serve_x_bytes_halo_aware``: a growth beyond the bands likewise.
-  * **zero-tolerance** — ``steady_state_compiles``: any INCREASE over the
-    baseline is an immediate failure (the zero-steady-state-recompiles
-    invariant; no band applies).
+    ``serve_x_bytes_halo_aware`` / ``ops_per_layer`` /
+    ``layer_latency_ms``: a growth beyond the bands likewise.
+  * **zero-tolerance** — ``steady_state_compiles`` (the
+    zero-steady-state-recompiles invariant) and
+    ``launches_per_layer_fused`` (a fused layer IS one Pallas launch):
+    any INCREASE over the baseline is an immediate failure; no band
+    applies.
 
 Default bands: warn at >= 1.3x, hard-fail at >= 2.0x (``--warn-ratio`` /
 ``--hard-ratio``; ``--strict`` promotes warnings to failures). Exit code 0
@@ -44,9 +49,10 @@ from typing import List, Optional, Tuple
 
 HIGHER_BETTER = {"qps", "qps_pipelined", "qps_fifo_serial",
                  "halo_bytes_saved_measured", "overlap_ratio",
-                 "cost_spearman_rho"}
-LOWER_BETTER = {"p50_ms", "p99_ms", "halo_bytes", "serve_x_bytes_halo_aware"}
-ZERO_TOLERANCE = {"steady_state_compiles"}
+                 "cost_spearman_rho", "op_reduction", "dispatch_reduction"}
+LOWER_BETTER = {"p50_ms", "p99_ms", "halo_bytes", "serve_x_bytes_halo_aware",
+                "ops_per_layer", "layer_latency_ms"}
+ZERO_TOLERANCE = {"steady_state_compiles", "launches_per_layer_fused"}
 
 # baseline floors below which a leaf is too noisy to gate on
 MIN_LATENCY_MS = 0.05
@@ -57,6 +63,8 @@ MIN_RHO = 0.5
 
 
 def _comparable(key: str, base: float, path: str = "") -> bool:
+    if key == "layer_latency_ms":
+        return base >= MIN_LATENCY_MS
     if key in ("p50_ms", "p99_ms"):
         # per-stage breakdowns are max-of-a-handful-of-batches at smoke
         # scale — only gate them once they are macroscopic

@@ -2,11 +2,20 @@
 variant and reports the three roofline terms vs the recorded baseline.
 
     PYTHONPATH=src python -m benchmarks.perf_hillclimb --cell A1
+
+``--bspmm`` instead sweeps the Pallas BSpMM (rows, feats) block-shape grid
+(plus the kernel-native default and optionally the fused per-layer path) on
+a real served forward and RECORDS every measurement into the persistent
+tuner cache (``results/tuner_cache.json`` by default) that
+``GraphStore(tuner_cache=...)`` seeds ``SessionPlan.bspmm_block`` from:
+
+    PYTHONPATH=src python -m benchmarks.perf_hillclimb --bspmm --fused
 """
 from __future__ import annotations
 
 import argparse
 import json
+import time
 from pathlib import Path
 
 RESULTS = Path(__file__).resolve().parents[1] / "results"
@@ -127,11 +136,95 @@ def summarize(names):
               f"{a['roofline_fraction']:7.4f}")
 
 
+def bspmm_block_candidates(n_feat: int):
+    """The (rows, feats) sweep space: the kernel-native default (None)
+    plus every legal 2D-grid shape from small candidate row/feat tilings
+    (legality via the kernel's own capability probe, so the sweep and the
+    kernel cannot disagree about the space)."""
+    from repro.kernels.bspmm_kernel import block_probe
+    cands = [None]
+    for rows in (4, 8, 16, 32):
+        for feats in (None, 32, 64, 128):
+            blk = (rows, feats)
+            # probe both the packed and fp paths — a serve forward runs both
+            if (block_probe(blk, n_feat, True) is None
+                    and block_probe(blk, n_feat, False) is None):
+                cands.append(blk)
+    return cands
+
+
+def sweep_bspmm(dataset: str = "cora", scale: float = 0.1,
+                family: str = "gcn", fused: bool = False,
+                cache_path=None, repeats: int = 3, batch: int = 8) -> dict:
+    """Time a served subgraph forward per block-shape candidate (and per
+    fused flag when ``fused``) and record every measurement into the
+    persistent tuner cache. Returns {tag: latency_s} for the report."""
+    import numpy as np
+    import jax
+    from repro.graphs.datasets import make_dataset
+    from repro.kernels import ops as kernel_ops
+    from repro.models import gnn
+    from repro.serve.gnn_session import GraphStore
+    from repro.serve.tuner_cache import TunerCache, graph_stats
+
+    cache = TunerCache(cache_path or RESULTS / "tuner_cache.json")
+    data = make_dataset(dataset, seed=0, scale=scale)
+    stats = graph_stats(data)
+    seeds = np.random.default_rng(0).integers(0, data.n_nodes, size=batch)
+    kernel_ops.force_kernels(True)
+    timings = {}
+    try:
+        for use_fused in ([False, True] if fused else [False]):
+            for blk in bspmm_block_candidates(int(data.x.shape[1])):
+                st = GraphStore(max_batch=batch, use_pallas=True,
+                                bspmm_block=blk, fused=use_fused)
+                st.register_graph("g", data)
+                key = jax.random.PRNGKey(0)
+                f, c = data.x.shape[1], data.n_classes
+                init = {"gcn": gnn.init_gcn, "sage": gnn.init_sage,
+                        "saint": gnn.init_saint}[family]
+                st.register_model(family, family, init(key, f, 16, c))
+                sess = st.session("g", family)
+                sess.serve_subgraph(seeds)          # warmup/compile
+                best = float("inf")
+                for _ in range(repeats):
+                    t0 = time.perf_counter()
+                    np.asarray(sess.serve_subgraph(seeds))
+                    best = min(best, time.perf_counter() - t0)
+                k = cache.record(stats, blk, best, fused=use_fused)
+                timings[k] = best
+                print(f"[bspmm] {k}: {best * 1e3:.3f} ms")
+    finally:
+        kernel_ops.force_kernels(False)
+    pick = cache.lookup(stats, fused=fused)
+    print(f"[bspmm] fastest block for fused={fused}: {pick} "
+          f"(cache: {cache.path})")
+    return timings
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--cell", required=True,
+    ap.add_argument("--cell", default=None,
                     help="variant name or prefix (A/B/C runs all of a cell)")
+    ap.add_argument("--bspmm", action="store_true",
+                    help="sweep the Pallas BSpMM block-shape space and "
+                         "record results into the tuner cache")
+    ap.add_argument("--dataset", default="cora")
+    ap.add_argument("--scale", type=float, default=0.1)
+    ap.add_argument("--family", default="gcn",
+                    choices=["gcn", "sage", "saint"])
+    ap.add_argument("--fused", action="store_true",
+                    help="also sweep the fused per-layer kernel path")
+    ap.add_argument("--cache", default=None,
+                    help="tuner cache path (default results/tuner_cache.json)")
+    ap.add_argument("--repeats", type=int, default=3)
     args = ap.parse_args()
+    if args.bspmm:
+        sweep_bspmm(args.dataset, args.scale, args.family, args.fused,
+                    cache_path=args.cache, repeats=args.repeats)
+        return
+    if not args.cell:
+        ap.error("one of --cell or --bspmm is required")
     names = [n for n in VARIANTS if n.startswith(args.cell)]
     for n in names:
         if not (RESULTS / "perf" / f"{n}.json").exists():

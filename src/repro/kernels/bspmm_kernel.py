@@ -24,10 +24,23 @@ Two kernels:
   * ``bspmm_bits``  — packed ±1 activations (BSpMM.BB?; Algorithm 1 proper);
   * ``bspmm_fp``    — fp activations (BSpMM.FB?): the gathered (32, F) rows
     hit the MXU via a (4, 32) mask matmul instead of Step ④/⑤.
+
+Two grid layouts per kernel:
+  * default (``block_shape=None``): 1D grid over the flattened group list —
+    the accumulator persists across grid steps (group_first resets, the last
+    nonzero group of each tile-row flushes);
+  * 2D block grid (``block_shape=(rows, feats)``): ``rows/TILE`` tile-rows x
+    one feature block per grid step. Each step walks its tile-rows' group
+    ranges off the scalar-prefetched ``grp_ptr`` with DOUBLE-BUFFERED DMA
+    (the next group's packed columns stream in while the current one
+    accumulates), writes its output block once, and — unlike the 1D grid —
+    never visits ``pad_frdc`` bucket-padding groups (they live past
+    ``grp_ptr[-1]``).
 """
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -175,45 +188,295 @@ def _group_last(adj: FRDCMatrix) -> jax.Array:
     return (nonzero & (adj.group_row != nxt_row)).astype(jnp.int32)
 
 
-def _resolve_block(block_shape, f: int, packed_width: bool) -> int:
-    """Validate the (rows, feats) block-shape tunable and return the padded
-    feature width of one grid step's output block.
+# ---------------------------------------------------------------------------
+# 2D block grid: multi-row output blocks x feature blocks
+# ---------------------------------------------------------------------------
 
-    The supported grid today is one FRDC tile-row (``TILE`` output rows) per
-    step over the full feature width; ``feats`` pads the feature dimension
-    up to a multiple of the requested block width (exact — zero columns).
-    Multi-row blocks and a feature-block grid are the open TPU tuning
-    directions this seam exists for; asking for them is an explicit error,
-    not a silent fallback. Packed-word paths (``packed_width``) carry their
-    features as 32-bit words, so the block width must be word-aligned there
-    and the kernel keeps its word-native width.
+class BlockPlan(NamedTuple):
+    """Resolved (rows, feats) block tunable for the 2D grid.
+
+    ``rows``: output rows per grid step — a positive multiple of TILE.
+    ``feats``: feature width per grid step, or None for the full width.
     """
+    rows: int
+    feats: Optional[int]
+
+
+def block_probe(block_shape, f: int, packed_width: bool) -> Optional[str]:
+    """Capability probe for a (rows, feats) block shape: ``None`` when the
+    grid supports it, else ONE message naming the violation AND the legal
+    block-shape space (word alignment, real feature width) — callers get the
+    whole picture from any rejection instead of three divergent branches."""
     if block_shape is None:
-        return f
+        return None
+    if packed_width:
+        feat_space = (f"a positive multiple of the {WORD}-bit word or "
+                      f"exactly the real feature width {f} (packed kernels "
+                      f"carry word-native features)")
+    else:
+        feat_space = (f"any positive width (the fp feature dim is "
+                      f"zero-padded to the block grid; real width {f})")
+    space = (f"legal BSpMM block shapes: rows = a positive multiple of the "
+             f"FRDC tile-row height {TILE}; feats = None (full width) or "
+             f"{feat_space}")
     rows, feats = block_shape
-    if int(rows) != TILE:
-        raise ValueError(
-            f"bspmm block rows must be the FRDC tile-row height {TILE} "
-            f"(got {rows}); multi-row output blocks are the open TPU "
-            f"block-shape tuning direction")
+    rows = int(rows)
+    if rows <= 0 or rows % TILE:
+        return (f"unsupported bspmm block {tuple(block_shape)!r}: rows "
+                f"{rows} is not a positive multiple of {TILE}; {space}")
     if feats is None:
-        return f
+        return None
     feats = int(feats)
     if feats <= 0:
-        raise ValueError(f"block feats must be positive, got {feats}")
-    if packed_width:
-        # the packed kernels keep their word-native storage width, so a
-        # block is legal when word-aligned OR exactly the REAL feature
-        # width (which may be narrower than the padded word width — the
-        # tail-masked last word); validation must therefore see the real
-        # width, not the word-padded one
-        if feats % WORD and feats != f:
-            raise ValueError(
-                f"packed BSpMM features are {WORD}-bit words; block feats "
-                f"{feats} must be word-aligned or equal the real feature "
-                f"width {f}")
+        return (f"unsupported bspmm block {tuple(block_shape)!r}: feats "
+                f"{feats} is not positive; {space}")
+    if packed_width and feats % WORD and feats != f:
+        return (f"unsupported bspmm block {tuple(block_shape)!r}: feats "
+                f"{feats} is neither word-aligned nor the real feature "
+                f"width; {space}")
+    return None
+
+
+def _block_plan(block_shape, f: int, packed_width: bool) -> Optional[BlockPlan]:
+    """Validate the tunable; None routes to the 1D grid, a BlockPlan to the
+    2D grid."""
+    reason = block_probe(block_shape, f, packed_width)
+    if reason is not None:
+        raise ValueError(reason)
+    if block_shape is None:
+        return None
+    rows, feats = block_shape
+    return BlockPlan(int(rows), None if feats is None else int(feats))
+
+
+def _resolve_block(block_shape, f: int, packed_width: bool) -> int:
+    """Validate the (rows, feats) block-shape tunable and return the padded
+    feature width of one grid step's output row-block.
+
+    Packed-word paths (``packed_width``) keep their word-native storage
+    width; fp paths zero-pad the feature dimension up to a multiple of the
+    block width (exact). Rejections carry the full legal block-shape space —
+    see :func:`block_probe`, which is also the non-raising capability test.
+    """
+    plan = _block_plan(block_shape, f, packed_width)
+    if plan is None or plan.feats is None or packed_width:
         return f
-    return -(-f // feats) * feats
+    return -(-f // plan.feats) * plan.feats
+
+
+def _gather_copy_grid(x_hbm, xg_ref, copy_sems, col_idx_ref, g, t, slot,
+                      f0, fw):
+    """Step-② DMA descriptor on the 2D grid: neighbor slab ``t`` of group
+    ``g``, feature block ``[f0, f0+fw)``, into double-buffer slot ``slot``.
+
+    Same discipline as :func:`_gather_copy`: the start AND wait halves are
+    built through this ONE helper so the wait always carries the descriptor
+    the copy was started with (source slice, destination, semaphore)."""
+    row4 = col_idx_ref[g, t] * TILE
+    return pltpu.make_async_copy(
+        x_hbm.at[pl.ds(row4, TILE), pl.ds(f0, fw)],
+        xg_ref.at[slot, pl.ds(t * TILE, TILE)],
+        copy_sems.at[slot, t])
+
+
+def _coarsen_group(tiles_ref, g) -> jax.Array:
+    """Scalar-prefetched tiles row ``g`` -> (TILE,) uint32 adjacency words
+    (Step ③ with SMEM-friendly scalar reads)."""
+    t32 = jnp.stack([tiles_ref[g, t] for t in range(GROUP)])
+    return _coarsen_one(t32.reshape(1, GROUP))
+
+
+def _grid_walk(col_idx_ref, grp_ptr_ref, x_hbm, xg_ref, copy_sems,
+               tr, f0, fw, process):
+    """Double-buffered walk over tile-row ``tr``'s group range.
+
+    Groups come from the scalar-prefetched ``grp_ptr`` (``pad_frdc`` bucket
+    padding lives past ``grp_ptr[-1]`` and is never visited). While group
+    ``i`` is processed out of slot ``i % 2``, group ``i+1``'s eight slabs
+    stream into the other slot — the DMA overlap the 1D grid gets from the
+    pipelined grid steps, kept here where one grid step owns many groups.
+    ``process(g, slot)`` consumes the gathered slab."""
+    g_lo = grp_ptr_ref[tr]
+    n_g = grp_ptr_ref[tr + 1] - g_lo
+
+    @pl.when(n_g > 0)
+    def _():
+        for t in range(GROUP):
+            _gather_copy_grid(x_hbm, xg_ref, copy_sems, col_idx_ref,
+                              g_lo, t, 0, f0, fw).start()
+
+    def body(i, _):
+        g = g_lo + i
+        slot = jax.lax.rem(i, 2)
+
+        @pl.when(i + 1 < n_g)
+        def _():
+            for t in range(GROUP):
+                _gather_copy_grid(x_hbm, xg_ref, copy_sems, col_idx_ref,
+                                  g + 1, t, jax.lax.rem(i + 1, 2),
+                                  f0, fw).start()
+        for t in range(GROUP):
+            _gather_copy_grid(x_hbm, xg_ref, copy_sems, col_idx_ref,
+                              g, t, slot, f0, fw).wait()
+        process(g, slot)
+        return 0
+
+    jax.lax.fori_loop(0, n_g, body, 0)
+
+
+def _fp_grid_kernel(col_idx_ref, grp_ptr_ref, tiles_ref, x_hbm, out_ref,
+                    acc_ref, xg_ref, copy_sems, *, tb_rows: int, fw: int):
+    rb = pl.program_id(0)
+    f0 = pl.program_id(1) * fw
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    for tb in range(tb_rows):
+        def process(g, slot, tb=tb):
+            a_words = _coarsen_group(tiles_ref, g)             # (TILE,)
+            k = jnp.arange(GROUP * TILE, dtype=jnp.uint32)
+            mask = ((a_words[:, None] >> k) & 1).astype(xg_ref.dtype)
+            acc_ref[tb * TILE:(tb + 1) * TILE, :] += jax.lax.dot(
+                mask, xg_ref[slot], preferred_element_type=acc_ref.dtype)
+
+        _grid_walk(col_idx_ref, grp_ptr_ref, x_hbm, xg_ref, copy_sems,
+                   rb * tb_rows + tb, f0, fw, process)
+    out_ref[...] = acc_ref[...]
+
+
+def _bits_grid_kernel(col_idx_ref, grp_ptr_ref, tiles_ref, x_hbm, out_ref,
+                      acc_ref, xg_ref, copy_sems, *, tb_rows: int, fbw: int,
+                      trinary_s2: bool, binarize: bool, n_feat: int):
+    rb = pl.program_id(0)
+    w0 = pl.program_id(1) * fbw
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    for tb in range(tb_rows):
+        def process(g, slot, tb=tb):
+            a_words = _coarsen_group(tiles_ref, g)             # (TILE,)
+            bt = _bit_transpose(xg_ref[slot])                  # (fbw, 32)
+            for i in range(TILE):
+                a = a_words[i]
+                if trinary_s2:
+                    c = (jax.lax.population_count(a & bt).astype(jnp.int32)
+                         - jax.lax.population_count(a & ~bt).astype(jnp.int32))
+                else:
+                    c = (2 * jax.lax.population_count(a & bt).astype(jnp.int32)
+                         - jax.lax.population_count(a).astype(jnp.int32))
+                acc_ref[tb * TILE + i, :] += c.reshape(-1)
+
+        _grid_walk(col_idx_ref, grp_ptr_ref, x_hbm, xg_ref, copy_sems,
+                   rb * tb_rows + tb, w0, fbw, process)
+
+    # rows whose group range is empty keep 0 counts — binarize packs them as
+    # sign(0) = +1, matching the 1D grid's prefill semantics with no alias
+    if binarize:
+        signs = (acc_ref[...] >= 0)
+        grouped = signs.reshape(tb_rows * TILE, fbw, WORD).astype(jnp.uint32)
+        w = jnp.left_shift(jnp.uint32(1), jnp.arange(WORD, dtype=jnp.uint32))
+        packed = jnp.sum(grouped * w, axis=-1, dtype=jnp.uint32)
+        if n_feat % WORD:
+            tail = jnp.uint32((1 << (n_feat % WORD)) - 1)
+            widx = w0 + jnp.arange(fbw, dtype=jnp.int32)
+            wmask = jnp.where(widx == n_feat // WORD, tail,
+                              jnp.uint32(0xFFFFFFFF))
+            packed = packed & wmask[None, :]
+        out_ref[...] = packed
+    else:
+        out_ref[...] = acc_ref[...]
+
+
+def _grid_dims(adj: FRDCMatrix, plan: BlockPlan, width: int):
+    """Grid geometry + the grp_ptr cover for the padded row blocks.
+
+    Returns (tb_rows, n_rb, fw, n_fb, grp_ptr) where ``grp_ptr`` is extended
+    with repeats of its last value so every padded tile-row has an EMPTY
+    group range (the pad groups past ``grp_ptr[-1]`` stay unvisited)."""
+    tb_rows = plan.rows // TILE
+    n_rb = -(-adj.n_tile_rows // tb_rows)
+    fw = width if plan.feats is None else min(plan.feats, width)
+    n_fb = -(-width // fw)
+    gp = adj.grp_ptr
+    extra = n_rb * tb_rows - adj.n_tile_rows
+    if extra:
+        gp = jnp.concatenate(
+            [gp, jnp.broadcast_to(gp[-1], (extra,)).astype(gp.dtype)])
+    return tb_rows, n_rb, fw, n_fb, gp
+
+
+def _bspmm_fp_grid(adj: FRDCMatrix, x: jax.Array, plan: BlockPlan,
+                   interpret: bool) -> jax.Array:
+    n, f = x.shape
+    tb_rows, n_rb, fw, n_fb, gp = _grid_dims(adj, plan, f)
+    f_pad = n_fb * fw
+    x_p = jnp.pad(x, (((0, (-n) % TILE), (0, f_pad - f))))
+    r4 = adj.n_tile_rows * TILE
+
+    out = pl.pallas_call(
+        functools.partial(_fp_grid_kernel, tb_rows=tb_rows, fw=fw),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(n_rb, n_fb),
+            in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+            out_specs=pl.BlockSpec((tb_rows * TILE, fw),
+                                   lambda rb, fb, ci, gp_, ti: (rb, fb)),
+            scratch_shapes=[
+                pltpu.VMEM((tb_rows * TILE, fw), x.dtype),
+                pltpu.VMEM((2, GROUP * TILE, fw), x.dtype),
+                pltpu.SemaphoreType.DMA((2, GROUP)),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_rb * tb_rows * TILE, f_pad),
+                                       x.dtype),
+        interpret=interpret,
+    )(adj.col_idx, gp, adj.tiles.astype(jnp.int32), x_p)
+    return out[:r4, :f]
+
+
+def _bspmm_bits_grid(adj: FRDCMatrix, x_packed: jax.Array, f: int,
+                     binarize: bool, trinary_mode: str, plan: BlockPlan,
+                     interpret: bool) -> jax.Array:
+    n, wf = x_packed.shape
+    feats_w = None if (plan.feats is None or plan.feats % WORD) \
+        else plan.feats // WORD
+    tb_rows, n_rb, fbw, n_fb, gp = _grid_dims(
+        adj, BlockPlan(plan.rows, feats_w), wf)
+    wf_pad = n_fb * fbw
+    x_p = jnp.pad(x_packed, (((0, (-n) % TILE), (0, wf_pad - wf))))
+    r4 = adj.n_tile_rows * TILE
+    rb_rows = tb_rows * TILE
+
+    if binarize:
+        out_shape = jax.ShapeDtypeStruct((n_rb * rb_rows, wf_pad), jnp.uint32)
+        out_spec = pl.BlockSpec((rb_rows, fbw),
+                                lambda rb, fb, ci, gp_, ti: (rb, fb))
+    else:
+        out_shape = jax.ShapeDtypeStruct((n_rb * rb_rows, wf_pad * WORD),
+                                         jnp.int32)
+        out_spec = pl.BlockSpec((rb_rows, fbw * WORD),
+                                lambda rb, fb, ci, gp_, ti: (rb, fb))
+
+    kernel = functools.partial(
+        _bits_grid_kernel, tb_rows=tb_rows, fbw=fbw,
+        trinary_s2=(trinary_mode == "s2_and_andnot"),
+        binarize=binarize, n_feat=f)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(n_rb, n_fb),
+            in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+            out_specs=out_spec,
+            scratch_shapes=[
+                pltpu.VMEM((rb_rows, fbw * WORD), jnp.int32),
+                pltpu.VMEM((2, GROUP * TILE, fbw), jnp.uint32),
+                pltpu.SemaphoreType.DMA((2, GROUP)),
+            ],
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(adj.col_idx, gp, adj.tiles.astype(jnp.int32), x_p)
+    return out[:r4, :wf] if binarize else out[:r4, :wf * WORD]
 
 
 def bspmm_bits(adj: FRDCMatrix, x_packed: jax.Array, n_feat: int | None = None,
@@ -224,13 +487,18 @@ def bspmm_bits(adj: FRDCMatrix, x_packed: jax.Array, n_feat: int | None = None,
     ``x_packed``: (N, Wf) uint32. Returns (R4, Wf) uint32 bits when
     ``binarize`` else (R4, F) int32 counts, R4 = n_tile_rows*4 (crop to
     n_rows at the caller). Rows with no groups keep the prefill value
-    (0 counts / all-ones bits == sign(0)).
+    (0 counts / all-ones bits == sign(0)). A ``block_shape`` routes to the
+    2D block grid (multi-row x word-aligned feature blocks); None keeps the
+    1D flattened-group grid.
     """
     n, wf = x_packed.shape
     f = wf * WORD if n_feat is None else int(n_feat)
     # validate the block tunable against the ACTUAL feature width (a caller
     # may serve n_feat narrower than the padded word width wf * WORD)
-    _resolve_block(block_shape, f, packed_width=True)
+    plan = _block_plan(block_shape, f, packed_width=True)
+    if plan is not None:
+        return _bspmm_bits_grid(adj, x_packed, f, binarize, trinary_mode,
+                                plan, interpret)
     pad_rows = (-n) % TILE
     x_p = jnp.pad(x_packed, ((0, pad_rows), (0, 0)))
     r4 = adj.n_tile_rows * TILE
@@ -282,12 +550,16 @@ def bspmm_fp(adj: FRDCMatrix, x: jax.Array, interpret: bool = True,
 
     ``x``: (N, F) float. Returns (R4, F) float; caller applies row/col scales
     and crops to n_rows. Col scales must already be folded into ``x``.
-    ``block_shape``: optional (rows, feats) tunable — feats pads the feature
-    dimension to the block-width grid (exact), rows must stay the tile-row
-    height for now (see :func:`_resolve_block`).
+    ``block_shape``: optional (rows, feats) tunable routing to the 2D block
+    grid — multi-row output blocks x feature blocks, feats zero-padded to
+    the block grid (exact); None keeps the 1D flattened-group grid (see
+    :func:`block_probe` for the legal space).
     """
     n, f = x.shape
-    f_pad = _resolve_block(block_shape, f, packed_width=False)
+    plan = _block_plan(block_shape, f, packed_width=False)
+    if plan is not None:
+        return _bspmm_fp_grid(adj, x, plan, interpret)
+    f_pad = f
     pad_rows = (-n) % TILE
     x_p = jnp.pad(x, ((0, pad_rows), (0, f_pad - f)))
     r4 = adj.n_tile_rows * TILE

@@ -18,7 +18,7 @@ from repro.core import bitops, bspmm as bspmm_core
 from repro.core.binarize import BinTensor
 from repro.core.frdc import FRDCMatrix, TILE
 
-from . import bmm_kernel, bspmm_kernel, pack_kernel
+from . import bmm_kernel, bspmm_kernel, fused_layer, pack_kernel
 
 _FORCE_KERNELS = False
 
@@ -38,6 +38,59 @@ def _use_kernels() -> bool:
 
 def _interpret() -> bool:
     return not _on_tpu()
+
+
+def kernels_active(use_pallas: bool = True) -> bool:
+    """Whether a ``use_pallas`` request actually routes through Pallas
+    (TPU backend, or ``force_kernels`` in tests)."""
+    return use_pallas and _use_kernels()
+
+
+def launch_stats(fn, *args) -> dict:
+    """Trace ``fn(*args)`` and count its device-operation footprint.
+
+    Returns ``dict(eqns=..., pallas_calls=...)`` where ``eqns`` is the
+    number of jaxpr equations (recursing through control-flow/pjit
+    sub-jaxprs, but treating each ``pallas_call`` as ONE opaque equation —
+    its body is a single launch no matter how much math it folds in) and
+    ``pallas_calls`` the number of Pallas launches among them. ``eqns`` is
+    an upper bound on device dispatches before XLA fusion; the delta
+    between the unfused and fused serve paths is the launches-per-layer
+    reduction the fused kernels buy, measured on the ACTUAL traced
+    program rather than asserted."""
+    closed = jax.make_jaxpr(fn)(*args)
+
+    def _jaxprs_in(v):
+        if isinstance(v, jax.core.ClosedJaxpr):
+            yield v.jaxpr
+        elif isinstance(v, jax.core.Jaxpr):
+            yield v
+        elif isinstance(v, (list, tuple)):
+            for item in v:
+                yield from _jaxprs_in(item)
+
+    def _count(jaxpr):
+        eqns = pallas = 0
+        for eqn in jaxpr.eqns:
+            eqns += 1
+            if eqn.primitive.name == "pallas_call":
+                pallas += 1
+                continue                     # one launch, however big
+            for v in eqn.params.values():
+                for sub in _jaxprs_in(v):
+                    e, p = _count(sub)
+                    eqns += e
+                    pallas += p
+        return eqns, pallas
+
+    eqns, pallas = _count(closed.jaxpr)
+    return dict(eqns=eqns, pallas_calls=pallas)
+
+
+def interpret_mode() -> bool:
+    """Interpret flag callers must pass to kernels they launch directly
+    (e.g. ``fused_layer.fused_call``)."""
+    return _interpret()
 
 
 def bmm_xnor(a_packed: jax.Array, b_packed: jax.Array, n_bits: int,
@@ -101,7 +154,8 @@ def _serve_bits_backend(adj: FRDCMatrix, x_packed: jax.Array,
 
 
 @contextlib.contextmanager
-def serve_kernels(enabled: bool = True, block_shape=None):
+def serve_kernels(enabled: bool = True, block_shape=None,
+                  fused: bool = False):
     """Route BSpMM aggregation through the Pallas kernels while active.
 
     The serving sessions enter this at jit TRACE time (``use_pallas``
@@ -112,12 +166,25 @@ def serve_kernels(enabled: bool = True, block_shape=None):
     (``SessionPlan.bspmm_block``), forwarded to every kernel call the
     context routes — the TPU block-shape tuning seam; None keeps the
     kernel-native defaults. Yields whether the kernels are actually active.
+
+    ``fused=True`` installs the VALUE-level aggregation backends from
+    :mod:`repro.kernels.fused_layer` instead of the standalone
+    ``pallas_call`` kernels — the form a fused per-layer kernel BODY can
+    trace (Pallas cannot nest launches). The caller is then responsible
+    for wrapping each layer in ``fused_layer.fused_call`` so the whole
+    layer compiles to one launch; results stay bitwise identical to the
+    unfused kernels (the walks accumulate in kernel order).
     """
     if not (enabled and _use_kernels()):
         yield False
         return
-    fp = functools.partial(_serve_fp_backend, block_shape=block_shape)
-    bits = functools.partial(_serve_bits_backend, block_shape=block_shape)
+    if fused:
+        fp = functools.partial(fused_layer.agg_fp, block_shape=block_shape)
+        bits = functools.partial(fused_layer.agg_counts,
+                                 block_shape=block_shape)
+    else:
+        fp = functools.partial(_serve_fp_backend, block_shape=block_shape)
+        bits = functools.partial(_serve_bits_backend, block_shape=block_shape)
     with bspmm_core.override_backends(fp=fp, bits=bits):
         yield True
 

@@ -192,6 +192,43 @@ def quantize_gcn(params: GCNParams) -> GCNQuant:
     return GCNQuant(quantize_weight(params.w1), quantize_weight(params.w2))
 
 
+def gcn_bitgnn_layers(q: GCNQuant, scheme: str = "bin",
+                      trinary_mode: str = "s3_two_popc") -> list:
+    """Per-layer callables ``fn(bn_tap, h, mats)`` decomposing the GCN
+    bitgnn forward. ``mats`` holds the adjacency operands ("adj" fp-scaled,
+    "bin" the 0/1 layer-1 matrix). The monolithic forward composes these
+    verbatim; the fused serving path wraps each in ONE Pallas kernel."""
+    if scheme == "full":
+        l1 = abstraction.MMSpMM("BMM.BBF", "BSpMM.FBF")
+        l2 = abstraction.MMSpMM("BMM.BBF", "BSpMM.FBF")
+        return [
+            lambda bn, h, mats: jax.nn.relu(
+                l1(quantize_act(bn(h)), q.w1, mats["adj"])),
+            lambda bn, h, mats: l2(quantize_act(bn(h)), q.w2, mats["adj"]),
+        ]
+    if scheme != "bin":
+        raise ValueError(scheme)
+    l1 = abstraction.MMSpMM("BMM.FBB", "BSpMM.BBB")
+    l2 = abstraction.MMSpMM("BMM.BBF", "BSpMM.FBF")
+    return [
+        lambda bn, h, mats: l1(bn(h), q.w1, mats["bin"],
+                               trinary_mode=trinary_mode, out_scale=False),
+        lambda bn, h, mats: l2(h, q.w2, mats["adj"]),
+    ]
+
+
+def _run_bitgnn_layers(layers: list, x, mats: dict,
+                       bn_stats: Optional[tuple],
+                       return_bn_stats: bool):
+    bn = _BNTap(bn_stats)
+    h = x
+    for fn in layers:
+        h = fn(bn, h, mats)
+    if return_bn_stats:
+        return h, tuple(bn.collected)
+    return h
+
+
 def gcn_forward_bitgnn(q: GCNQuant, x, adj: frdc.FRDCMatrix,
                        adj_bin: frdc.FRDCMatrix, scheme: str = "bin",
                        trinary_mode: str = "s3_two_popc",
@@ -208,24 +245,9 @@ def gcn_forward_bitgnn(q: GCNQuant, x, adj: frdc.FRDCMatrix,
     ``return_bn_stats=True`` additionally returns the stats computed from this
     batch (full-graph BN calibration for the serving subsystem).
     """
-    bn = _BNTap(bn_stats)
-    if scheme == "full":
-        l1 = abstraction.MMSpMM("BMM.BBF", "BSpMM.FBF")
-        h = l1(quantize_act(bn(x)), q.w1, adj)
-        h = jax.nn.relu(h)
-        l2 = abstraction.MMSpMM("BMM.BBF", "BSpMM.FBF")
-        out = l2(quantize_act(bn(h)), q.w2, adj)
-    elif scheme == "bin":
-        l1 = abstraction.MMSpMM("BMM.FBB", "BSpMM.BBB")
-        h_bits = l1(bn(x), q.w1, adj_bin, trinary_mode=trinary_mode,
-                    out_scale=False)
-        l2 = abstraction.MMSpMM("BMM.BBF", "BSpMM.FBF")
-        out = l2(h_bits, q.w2, adj)
-    else:
-        raise ValueError(scheme)
-    if return_bn_stats:
-        return out, tuple(bn.collected)
-    return out
+    return _run_bitgnn_layers(gcn_bitgnn_layers(q, scheme, trinary_mode),
+                              x, {"adj": adj, "bin": adj_bin},
+                              bn_stats, return_bn_stats)
 
 
 # ---------------------------------------------------------------------------
@@ -259,6 +281,21 @@ def quantize_sage(params: SAGEParams) -> SAGEQuant:
     return SAGEQuant(*(quantize_weight(w) for w in params))
 
 
+def _branch_add_layer(w_self: BinTensor, w_agg: BinTensor, relu: bool):
+    """One SAGE/SAINT layer: BMM self + BSpMM(BMM agg), merged by ADD."""
+    def fn(bn, h, mats):
+        hq = quantize_act(bn(h))
+        out = bmm(hq, w_self, "BBF") \
+            + bspmm(mats["adj"], bmm(hq, w_agg, "BBF"), "FBF")
+        return jax.nn.relu(out) if relu else out
+    return fn
+
+
+def sage_bitgnn_layers(q: SAGEQuant) -> list:
+    return [_branch_add_layer(q.w1_self, q.w1_agg, True),
+            _branch_add_layer(q.w2_self, q.w2_agg, False)]
+
+
 def sage_forward_bitgnn(q: SAGEQuant, x, adj_mean: frdc.FRDCMatrix,
                         bn_stats: Optional[tuple] = None,
                         return_bn_stats: bool = False):
@@ -267,17 +304,8 @@ def sage_forward_bitgnn(q: SAGEQuant, x, adj_mean: frdc.FRDCMatrix,
     transform — ``(A @ xb) @ W == A @ (xb @ W)`` — so the packed path is
     bit-exact with the Bi-GCN training forward while running the cheap
     (hidden-width) BSpMM."""
-    bn = _BNTap(bn_stats)
-    xq = quantize_act(bn(x))
-    h = bmm(xq, q.w1_self, "BBF") \
-        + bspmm(adj_mean, bmm(xq, q.w1_agg, "BBF"), "FBF")
-    h = jax.nn.relu(h)
-    hq = quantize_act(bn(h))
-    out = bmm(hq, q.w2_self, "BBF") \
-        + bspmm(adj_mean, bmm(hq, q.w2_agg, "BBF"), "FBF")
-    if return_bn_stats:
-        return out, tuple(bn.collected)
-    return out
+    return _run_bitgnn_layers(sage_bitgnn_layers(q), x, {"adj": adj_mean},
+                              bn_stats, return_bn_stats)
 
 
 # ---------------------------------------------------------------------------
@@ -304,22 +332,29 @@ def quantize_saint(params: SAINTParams) -> SAINTQuant:
     return SAINTQuant(*(quantize_weight(w) for w in params))
 
 
+def saint_bitgnn_layers(q: SAINTQuant) -> list:
+    return [_branch_add_layer(q.w1_self, q.w1_agg, True),
+            _branch_add_layer(q.w2_self, q.w2_agg, True),
+            lambda bn, h, mats: bmm(quantize_act(bn(h)), q.w_fc, "BBF")]
+
+
 def saint_forward_bitgnn(q: SAINTQuant, x, adj_sum: frdc.FRDCMatrix,
                          bn_stats: Optional[tuple] = None,
                          return_bn_stats: bool = False):
-    bn = _BNTap(bn_stats)
-    xq = quantize_act(bn(x))
-    h = bmm(xq, q.w1_self, "BBF") \
-        + bspmm(adj_sum, bmm(xq, q.w1_agg, "BBF"), "FBF")
-    h = jax.nn.relu(h)
-    hq = quantize_act(bn(h))
-    h = bmm(hq, q.w2_self, "BBF") \
-        + bspmm(adj_sum, bmm(hq, q.w2_agg, "BBF"), "FBF")
-    h = jax.nn.relu(h)
-    out = bmm(quantize_act(bn(h)), q.w_fc, "BBF")
-    if return_bn_stats:
-        return out, tuple(bn.collected)
-    return out
+    return _run_bitgnn_layers(saint_bitgnn_layers(q), x, {"adj": adj_sum},
+                              bn_stats, return_bn_stats)
+
+
+def bitgnn_layers(family: str, q, scheme: str = "bin",
+                  trinary_mode: str = "s3_two_popc") -> list:
+    """Family dispatch for the per-layer decomposition (fused serving)."""
+    if family == "gcn":
+        return gcn_bitgnn_layers(q, scheme, trinary_mode)
+    if family == "sage":
+        return sage_bitgnn_layers(q)
+    if family == "saint":
+        return saint_bitgnn_layers(q)
+    raise ValueError(f"unknown bitgnn family: {family!r}")
 
 
 # ---------------------------------------------------------------------------

@@ -43,7 +43,7 @@ from .admission import (DEFAULT_TENANT, AdmissionController,
 from .cost import CostEstimate, CostEstimator
 from .gnn_session import CompiledGraphSession, GraphStore
 from .metrics import ServeMetrics
-from .session_core import FAMILY_AGG_LAYERS
+from .session_core import FAMILY_AGG_LAYERS, launch_prepared_many
 from .slo import SLOTracker
 from .trace import RecompileWatchdog, SpanTracer, TransferWatchdog
 
@@ -101,6 +101,7 @@ class _Inflight:
     t_launch_end: float = 0.0
     devs: Optional[list] = None
     trace: Optional[object] = None    # BatchTrace (when tracing is on)
+    coalesced: int = 1                # buckets sharing this batch's dispatch
 
 
 class GNNServeEngine:
@@ -112,7 +113,8 @@ class GNNServeEngine:
                  admission: Optional[AdmissionController] = None,
                  tracer: Optional[SpanTracer] = None, trace: bool = True,
                  cost: Optional[CostEstimator] = None,
-                 slo: Optional[SLOTracker] = None):
+                 slo: Optional[SLOTracker] = None,
+                 multi_bucket: bool = False):
         if mode not in ("auto", "full", "subgraph"):
             raise ValueError(mode)
         self.store = store
@@ -124,6 +126,12 @@ class GNNServeEngine:
         self.mode = mode
         self.full_cache_max_nodes = full_cache_max_nodes
         self.pipeline_depth = int(pipeline_depth)
+        # multi-bucket co-launch: a pipelined fill defers its launches and
+        # dispatches every newly extracted bucket as ONE jitted program per
+        # serve core (ServeCore.launch_many) — fewer dispatches per tick,
+        # bit-exact vs serial launches. Needs pipeline_depth >= 2 to ever
+        # coalesce; no effect on the serial (depth 0) loop.
+        self.multi_bucket = bool(multi_bucket)
         self.metrics = ServeMetrics()
         self._queues: Dict[tuple, Deque[NodeQuery]] = {}
         self._next_qid = 0
@@ -289,6 +297,14 @@ class GNNServeEngine:
         """Total jit traces across all sessions this engine has touched —
         the 'zero steady-state recompiles' acceptance counter."""
         return sum(s.compile_count for s in self._sessions())
+
+    @property
+    def dispatch_count(self) -> int:
+        """Total device dispatches across the engine's sessions — the
+        launches-per-tick regression counter (a multi-bucket co-launch of K
+        buckets moves this by 1, not K)."""
+        return sum(getattr(s, "dispatch_count", 0)
+                   for s in self._sessions())
 
     # --------------------------------------------------------- scheduling ---
     def _heap_push(self, key: tuple, t: float) -> None:
@@ -457,6 +473,38 @@ class GNNServeEngine:
             self.transfer_watchdog.check_launched(inf.devs)
         inf.t_launch_end = time.perf_counter()
 
+    def _launch_coalesced(self, infs: List[_Inflight]) -> None:
+        """Multi-bucket COMPUTE head: co-dispatch every deferred batch's
+        staged buckets as one jitted program per serve core
+        (:func:`~repro.serve.session_core.launch_prepared_many` — bit-exact
+        vs the serial launches). Full-cache batches (already resolved at
+        extract) just get their launch window stamped. A failure requeues
+        EVERY deferred batch and drops them from the pipeline, mirroring
+        the single-batch launch failure path."""
+        t0 = time.perf_counter()
+        device_infs = [inf for inf in infs if inf.prepared is not None]
+        try:
+            devs_lists = launch_prepared_many(
+                [inf.prepared for inf in device_infs])
+        except BaseException as e:
+            for inf in infs:
+                try:
+                    self._inflight.remove(inf)
+                except ValueError:
+                    pass
+                self._requeue(inf.key, inf.batch)
+                self.tracer.commit(inf.trace, error=repr(e), requeued=True)
+                inf.trace = None
+            raise
+        t1 = time.perf_counter()
+        for inf, devs in zip(device_infs, devs_lists):
+            inf.devs = devs
+            self.transfer_watchdog.check_launched(inf.devs)
+        for inf in infs:
+            inf.t_launch, inf.t_launch_end = t0, t1
+            inf.coalesced = len(device_infs) if inf.prepared is not None \
+                else 1
+
     def _complete_stage(self, inf: _Inflight) -> int:
         """COMPUTE tail: block on the device result, gather per-query
         answers, record metrics. Returns queries answered.
@@ -505,7 +553,15 @@ class GNNServeEngine:
                     n_pad=n_pad, units=units, attributed_s=shares)
         if inf.trace is not None:
             t_le = inf.t_launch_end or t_done
-            inf.trace.span("launch", inf.t_launch, t_le)
+            # co-launched batches share one dispatch: their launch spans
+            # carry the coalesced bucket count (and literally the same
+            # [t0, t1) window) so a trace shows one device dispatch per
+            # multi-bucket tick, not one per batch
+            if inf.coalesced > 1:
+                inf.trace.span("launch", inf.t_launch, t_le,
+                               coalesced=inf.coalesced)
+            else:
+                inf.trace.span("launch", inf.t_launch, t_le)
             # the wall span launch_end -> done plus the de-overlapped time
             # this batch actually contributed (what record_stages summed)
             inf.trace.span("compute", t_le, t_done,
@@ -544,7 +600,10 @@ class GNNServeEngine:
     def _pump(self, block: bool) -> int:
         """Advance the pipeline: keep one extraction on the worker and up to
         ``pipeline_depth`` launched forwards in flight; complete the oldest
-        batch when the pipeline is full (always, when ``block``)."""
+        batch when the pipeline is full (always, when ``block``). With
+        ``multi_bucket`` the fill's launches are DEFERRED and every bucket
+        extracted this tick goes out as one co-dispatch after the fill."""
+        deferred: List[_Inflight] = []
         while len(self._inflight) < self.pipeline_depth:
             if self._extract_future is None:
                 if not self._queued():
@@ -565,8 +624,14 @@ class GNNServeEngine:
             if self._queued():
                 self._extract_future = self._worker().submit(
                     self._extract_stage)
-            self._compute(inf, launch_only=True)
-            self._inflight.append(inf)
+            if self.multi_bucket:
+                deferred.append(inf)
+                self._inflight.append(inf)
+            else:
+                self._compute(inf, launch_only=True)
+                self._inflight.append(inf)
+        if deferred:
+            self._launch_coalesced(deferred)
         # complete the oldest batch when the pipeline is full — or when the
         # input is drained AND its device result is already available:
         # light traffic must not strand launched batches behind a depth
@@ -676,7 +741,9 @@ class GNNServeEngine:
         inval = sum(s.invalidations for s in self._sessions())
         extra = dict(
             compiles=self.compile_count, invalidations=inval,
+            dispatches=self.dispatch_count,
             pending=self.pending, pipeline_depth=self.pipeline_depth,
+            multi_bucket=self.multi_bucket,
             watchdogs=dict(recompile=self.recompile_watchdog.snapshot(),
                            transfer=self.transfer_watchdog.snapshot()),
             trace=self.tracer.snapshot())

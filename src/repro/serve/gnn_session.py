@@ -256,6 +256,11 @@ class CompiledGraphSession:
         """Number of jit traces of the bucketed subgraph forward."""
         return self.core.compile_count
 
+    @property
+    def dispatch_count(self) -> int:
+        """Device dispatches issued (a multi-bucket co-launch counts 1)."""
+        return self.core.n_dispatches
+
     def set_trace_hook(self, cb) -> None:
         """Wire an observability callback ``cb(label, shape_dict)`` to fire
         on every NEW jit trace of this session's serve core (the engines'
@@ -376,7 +381,7 @@ class CompiledGraphSession:
     def load(cls, directory: Path, graph: GraphEntry, model: ModelEntry,
              khop: Optional[int] = None, max_batch: Optional[int] = None,
              use_pallas: bool = False, incremental: bool = False,
-             bspmm_block="unchanged",
+             bspmm_block="unchanged", fused="unchanged",
              ) -> Optional["CompiledGraphSession"]:
         """Restore a session artifact; returns None on any mismatch (missing
         files, different graph/model/features, or a khop/max_batch that
@@ -401,6 +406,9 @@ class CompiledGraphSession:
         # the block shape is baked into the compiled executables (trace-time
         # choice): a store asking for a different one must recompile
         if bspmm_block != "unchanged" and plan.bspmm_block != bspmm_block:
+            return None
+        # same trace-time-baked reasoning for the fused-kernel selection
+        if fused != "unchanged" and plan.fused != fused:
             return None
         like = {"qparams": session_core.quantize_family(model.family,
                                                         model.params),
@@ -429,7 +437,9 @@ class GraphStore:
     def __init__(self, cache_dir: Optional[str] = None, khop: int = 2,
                  max_batch: int = 32, use_pallas: bool = False,
                  incremental: bool = False,
-                 bspmm_block: Optional[Tuple[int, int]] = None):
+                 bspmm_block: Optional[Tuple[int, int]] = None,
+                 fused: bool = False,
+                 tuner_cache: Optional[str] = None):
         self.cache_dir = Path(cache_dir) if cache_dir else None
         self.khop = khop
         self.max_batch = max_batch
@@ -440,6 +450,16 @@ class GraphStore:
         # kernel-native defaults. The TPU block-shape tuning seam.
         self.bspmm_block = (None if bspmm_block is None
                             else tuple(bspmm_block))
+        # fused per-layer kernel selection (SessionPlan.fused), recorded in
+        # every plan this store builds — trace-time choice like the block
+        # shape, so it participates in artifact mismatch checks too.
+        self.fused = bool(fused)
+        # optional persistent tuner cache (benchmarks/perf_hillclimb.py
+        # sweeps): when the store has NO explicit bspmm_block, a cache hit
+        # for the graph's stats fingerprint seeds the plan's block shape.
+        from repro.serve import tuner_cache as tuner_cache_mod
+        self.tuner_cache = (tuner_cache_mod.TunerCache(tuner_cache)
+                            if tuner_cache else None)
         self.graphs: Dict[str, GraphEntry] = {}
         self.models: Dict[str, ModelEntry] = {}
         self._sessions: Dict[Tuple[str, str], CompiledGraphSession] = {}
@@ -477,6 +497,16 @@ class GraphStore:
         if changed is not None:
             entry.record_change(changed)
 
+    def _plan_block(self, g: GraphEntry) -> Optional[Tuple[int, int]]:
+        """The block shape new plans get: an explicit store override wins;
+        otherwise a tuner-cache hit for this graph's stats fingerprint
+        (same backend + fused flag) seeds it; else kernel defaults."""
+        if self.bspmm_block is not None or self.tuner_cache is None:
+            return self.bspmm_block
+        from repro.serve.tuner_cache import graph_stats
+        return self.tuner_cache.lookup(graph_stats(g.data),
+                                       fused=self.fused)
+
     # --------------------------------------------------------- compile ----
     def session(self, graph: str, model: str, tune: bool = False,
                 tune_repeats: int = 2) -> CompiledGraphSession:
@@ -488,17 +518,19 @@ class GraphStore:
         sess = None
         sess_dir = (self.cache_dir / f"{graph}__{model}"
                     if self.cache_dir else None)
+        blk = self._plan_block(g)
         if sess_dir is not None:
             sess = CompiledGraphSession.load(
                 sess_dir, g, m, khop=self.khop, max_batch=self.max_batch,
                 use_pallas=self.use_pallas, incremental=self.incremental,
-                bspmm_block=self.bspmm_block)
+                bspmm_block=blk, fused=self.fused)
         if sess is None:
             qparams = session_core.quantize_family(m.family, m.params)
             plan = (session_core.tune_plan(g.data, m.family, qparams,
                                            repeats=tune_repeats)
                     if tune else session_core.default_plan(m.family))
-            plan = dataclasses.replace(plan, bspmm_block=self.bspmm_block)
+            plan = dataclasses.replace(plan, bspmm_block=blk,
+                                       fused=self.fused)
             sess = CompiledGraphSession(
                 g, m, plan, qparams, khop=self.khop,
                 max_batch=self.max_batch, use_pallas=self.use_pallas,
@@ -530,17 +562,19 @@ class GraphStore:
         sess = None
         sess_dir = (self.cache_dir / f"{graph}__{model}__P{n_shards}"
                     if self.cache_dir else None)
+        blk = self._plan_block(g)
         if sess_dir is not None:
             sess = ShardedGraphSession.load(
                 sess_dir, g, m, khop=self.khop, max_batch=self.max_batch,
                 use_pallas=self.use_pallas, mesh=mesh, executor=executor,
-                bn_mode=bn_mode, bspmm_block=self.bspmm_block)
+                bn_mode=bn_mode, bspmm_block=blk, fused=self.fused)
         if sess is None:
             qparams = session_core.quantize_family(m.family, m.params)
             plan = (session_core.tune_plan(g.data, m.family, qparams,
                                            repeats=tune_repeats)
                     if tune else session_core.default_plan(m.family))
-            plan = dataclasses.replace(plan, bspmm_block=self.bspmm_block)
+            plan = dataclasses.replace(plan, bspmm_block=blk,
+                                       fused=self.fused)
             shard_plan = ShardPlanner(n_shards).plan(g.data, m.family)
             sess = ShardedGraphSession(
                 g, m, plan, qparams, shard_plan, khop=self.khop,

@@ -76,6 +76,13 @@ class SessionPlan:
     full feature width). It rides in ``plan.json`` with the rest of the
     plan, so a TPU block-shape sweep (ROADMAP open item) records its winner
     in the same artifact the tuner's variant choice lives in.
+
+    ``fused`` selects the fused per-layer kernel path: each GNN layer —
+    BN, binary transform, BSpMM aggregation, combine/activation — compiles
+    to ONE Pallas launch (:mod:`repro.kernels.fused_layer`). Bitwise
+    identical to the unfused path; only effective where the kernels are
+    active (``use_pallas`` on TPU / ``force_kernels``), and calibration
+    passes (which must RECORD bn stats) always run unfused.
     """
     family: str
     scheme: str                       # gcn: "full" | "bin"; else "fixed"
@@ -84,13 +91,15 @@ class SessionPlan:
     tuned_latency_s: float = float("nan")
     output_delta: float = float("nan")
     bspmm_block: Optional[Tuple[int, int]] = None
+    fused: bool = False
 
     def name(self) -> str:
         layers = ";".join(f"{m}+{s}" for m, s in self.layer_variants)
         blk = ("" if self.bspmm_block is None
                else f"|blk{self.bspmm_block[0]}x{self.bspmm_block[1]}")
+        fz = "|fused" if self.fused else ""
         return f"{self.family}/{self.scheme}[{layers}|{self.trinary_mode}" \
-               f"{blk}]"
+               f"{blk}{fz}]"
 
     def to_json(self) -> dict:
         return dict(family=self.family, scheme=self.scheme,
@@ -99,7 +108,8 @@ class SessionPlan:
                     tuned_latency_s=self.tuned_latency_s,
                     output_delta=self.output_delta,
                     bspmm_block=(None if self.bspmm_block is None
-                                 else list(self.bspmm_block)))
+                                 else list(self.bspmm_block)),
+                    fused=self.fused)
 
     @classmethod
     def from_json(cls, d: dict) -> "SessionPlan":
@@ -109,7 +119,8 @@ class SessionPlan:
                    layer_variants=tuple(tuple(v) for v in d["layer_variants"]),
                    tuned_latency_s=d.get("tuned_latency_s", float("nan")),
                    output_delta=d.get("output_delta", float("nan")),
-                   bspmm_block=None if blk is None else tuple(blk))
+                   bspmm_block=None if blk is None else tuple(blk),
+                   fused=bool(d.get("fused", False)))
 
 
 def quantize_family(family: str, params):
@@ -129,6 +140,12 @@ def family_forward(plan: SessionPlan, qparams, x,
     compiled executables. ``plan.bspmm_block`` rides along as the kernels'
     block-shape selection.
     """
+    fused = (plan.fused and kernel_ops.kernels_active(use_pallas)
+             and kw.get("bn_stats") is not None
+             and not kw.get("return_bn_stats", False))
+    if fused:
+        return _fused_family_forward(plan, qparams, x, adjs,
+                                     kw["bn_stats"])
     with kernel_ops.serve_kernels(use_pallas, block_shape=plan.bspmm_block):
         if plan.family == "gcn":
             return gnn.gcn_forward_bitgnn(
@@ -137,6 +154,68 @@ def family_forward(plan: SessionPlan, qparams, x,
         if plan.family == "sage":
             return gnn.sage_forward_bitgnn(qparams, x, adjs["mean"], **kw)
         return gnn.saint_forward_bitgnn(qparams, x, adjs["sum"], **kw)
+
+
+def _fused_family_forward(plan: SessionPlan, qparams, x,
+                          adjs: Dict[str, frdc.FRDCMatrix],
+                          bn_stats: tuple):
+    """Serve the forward as ONE Pallas kernel per layer.
+
+    Each layer callable from :func:`repro.models.gnn.bitgnn_layers` is
+    traced inside a single ``fused_layer.fused_call`` launch with the
+    VALUE-level aggregation backends installed (``serve_kernels(fused=
+    True)``) — BN, transform, aggregation and activation all land in one
+    kernel body. Traced values (activations, bn stats, FRDC fields) enter
+    as kernel operands; concrete weights ride in the layer closures. The
+    inter-layer carry is ARRAY-only: a binary carry (gcn "bin" layer 1,
+    ``out_scale=False`` => unit scales) crosses the boundary as its packed
+    words and is re-wrapped inside the next body — ``BinTensor.n`` must
+    stay a python int, which a kernel boundary would not preserve.
+
+    Bitwise identical to the unfused path: the value walks accumulate in
+    kernel order, and the BN-site cursor threads across layers at trace
+    time exactly as the monolithic forward's ``_BNTap`` does.
+    """
+    from repro.kernels import fused_layer
+
+    layers = gnn.bitgnn_layers(plan.family, qparams, plan.scheme,
+                               plan.trinary_mode)
+    key = {"gcn": None, "sage": "mean", "saint": "sum"}[plan.family]
+    mats_src = adjs if key is None else {"adj": adjs[key]}
+    arrs = {k: frdc_arrays(m) for k, m in mats_src.items()}
+    interp = kernel_ops.interpret_mode()
+
+    h = x
+    site = 0
+    bin_n = None
+    meta: dict = {}
+    with kernel_ops.serve_kernels(True, block_shape=plan.bspmm_block,
+                                  fused=True):
+        for fn in layers:
+            def body(h_in, stats, ar, fn=fn, start=site, bin_n=bin_n):
+                mats = {k: frdc_rebuild(ar[k], mats_src[k].n_rows,
+                                        mats_src[k].n_cols, mats_src[k].nnz)
+                        for k in ar}
+                tap = gnn._BNTap(stats)
+                tap._i = start
+                hh = h_in
+                if bin_n is not None:
+                    hh = BinTensor(
+                        packed=h_in,
+                        scale=jnp.ones((h_in.shape[0], 1), jnp.float32),
+                        n=bin_n)
+                out = fn(tap, hh, mats)
+                meta["site"] = tap._i
+                if isinstance(out, BinTensor):
+                    meta["bin_n"] = out.n
+                    return out.packed
+                meta["bin_n"] = None
+                return out
+
+            h = fused_layer.fused_call(body, h, bn_stats, arrs,
+                                       interpret=interp)
+            site, bin_n = meta["site"], meta["bin_n"]
+    return h
 
 
 # ---------------------------------------------------------------------------
@@ -479,6 +558,10 @@ class ServeCore:
         self._n_water = 0
         self._g_water: Dict[Tuple[int, str], int] = {}
         self._jit_serve = jax.jit(self._serve)
+        self._jit_serve_many = jax.jit(self._serve_many)
+        # device dispatches issued (a launch_many of K buckets counts 1) —
+        # the launches-per-tick regression metric benches and tests key on
+        self.n_dispatches = 0
 
     @property
     def compile_count(self) -> int:
@@ -486,11 +569,25 @@ class ServeCore:
 
     def _serve(self, x, bn, adjs, seeds):
         self._n_traces += 1
+        return self._serve_one(x, bn, adjs, seeds)
+
+    def _serve_one(self, x, bn, adjs, seeds):
         n_pad = x.shape[0]
         mats = {k: frdc_rebuild(v, n_pad, n_pad) for k, v in adjs.items()}
         out = family_forward(self.plan, self.qparams, x, mats,
                              use_pallas=self.use_pallas, bn_stats=bn)
         return out[seeds]
+
+    def _serve_many(self, batches):
+        """K bucketed forwards UNROLLED into one jitted program (one device
+        dispatch serves K staged buckets). Unrolled — not vmapped — so each
+        batch's sub-jaxpr is exactly ``_serve_one``'s and the K outputs stay
+        bitwise identical to K serial launches; buckets of different padded
+        shapes (and different captured ``bn``) co-launch freely. One program
+        trace counts as ONE compile regardless of K."""
+        self._n_traces += 1
+        return tuple(self._serve_one(x, bn, adjs, seeds)
+                     for (x, bn, adjs, seeds) in batches)
 
     def _pad_mats(self, mats: Dict[str, frdc.FRDCMatrix], n_sub: int):
         n_pad = bucket_pow2(max(n_sub, self._n_water),
@@ -524,6 +621,7 @@ class ServeCore:
         jax's async dispatch this returns before the device finishes, so the
         caller can overlap the next batch's extraction with it."""
         c0 = self._n_traces
+        self.n_dispatches += 1
         out = self._jit_serve(jnp.asarray(staged.x_pad), bn, staged.adjs,
                               jnp.asarray(staged.pos_pad))
         if self._n_traces > c0 and self.on_trace is not None:
@@ -534,6 +632,32 @@ class ServeCore:
                 groups={str(k): int(a["group_row"].shape[0])
                         for k, a in staged.adjs.items()}))
         return out
+
+    def launch_many(self, entries: List[Tuple["StagedBatch", tuple]]
+                    ) -> List[jax.Array]:
+        """Dispatch SEVERAL staged buckets as one jitted program (one device
+        dispatch, K results). ``entries``: (staged, bn) pairs — each bucket
+        launches under its own captured calibration. Bitwise identical to K
+        serial :meth:`launch` calls (the program is the K ``_serve_one``
+        bodies unrolled); the jit cache keys on the (K, shapes) pytree, so a
+        workload whose tick widths vary pays one extra trace per distinct
+        composition during warmup."""
+        if len(entries) == 1:
+            staged, bn = entries[0]
+            return [self.launch(staged, bn)]
+        c0 = self._n_traces
+        self.n_dispatches += 1
+        batches = tuple(
+            (jnp.asarray(s.x_pad), bn, s.adjs, jnp.asarray(s.pos_pad))
+            for s, bn in entries)
+        outs = self._jit_serve_many(batches)
+        if self._n_traces > c0 and self.on_trace is not None:
+            self.on_trace(dict(
+                multi=len(entries),
+                n_pad=[int(s.x_pad.shape[0]) for s, _ in entries],
+                groups=[{str(k): int(a["group_row"].shape[0])
+                         for k, a in s.adjs.items()} for s, _ in entries]))
+        return list(outs)
 
     def finish(self, out_dev: jax.Array, staged: "StagedBatch") -> np.ndarray:
         """COMPUTE-stage tail: block on the device result and crop the seed
@@ -630,6 +754,31 @@ class PreparedBatch:
             out = np.zeros((self.n_uniq,) + tuple(self.out_shape),
                            np.float32)
         return out[self.inverse]
+
+
+def launch_prepared_many(prepared: List[PreparedBatch]
+                         ) -> List[List[jax.Array]]:
+    """Co-dispatch several prepared batches: every staged group is bucketed
+    by its owning :class:`ServeCore` and each core issues ONE
+    :meth:`ServeCore.launch_many` dispatch for its whole share — one device
+    dispatch per core per tick instead of one per batch. Returns the
+    per-batch device-handle lists in exactly the order
+    ``[p.launch() for p in prepared]`` would, and each handle is bitwise
+    identical to what the serial launches produce (the co-launched program
+    is the serial bodies unrolled). Groups keep their batch's CAPTURED
+    ``bn`` — co-launching never re-reads live calibration."""
+    by_core: Dict[int, Tuple[ServeCore, list]] = {}
+    slots: List[List[Optional[jax.Array]]] = []
+    for bi, p in enumerate(prepared):
+        slots.append([None] * len(p.groups))
+        for gi, g in enumerate(p.groups):
+            _, entries = by_core.setdefault(id(g.core), (g.core, []))
+            entries.append((g.staged, p.bn, bi, gi))
+    for core, entries in by_core.values():
+        outs = core.launch_many([(s, bn) for s, bn, _, _ in entries])
+        for (_, _, bi, gi), dv in zip(entries, outs):
+            slots[bi][gi] = dv
+    return slots
 
 
 # ---------------------------------------------------------------------------

@@ -57,12 +57,14 @@ class ShardedServeEngine(GNNServeEngine):
                  pipeline_depth: int = 0, halo_aware: bool = True,
                  staleness_s: float = 0.25,
                  halo_window: Optional[int] = None, admission=None,
-                 tracer=None, trace: bool = True, cost=None, slo=None):
+                 tracer=None, trace: bool = True, cost=None, slo=None,
+                 multi_bucket: bool = False):
         super().__init__(store, max_batch=max_batch, mode=mode,
                          full_cache_max_nodes=full_cache_max_nodes,
                          keep_finished=keep_finished,
                          pipeline_depth=pipeline_depth, admission=admission,
-                         tracer=tracer, trace=trace, cost=cost, slo=slo)
+                         tracer=tracer, trace=trace, cost=cost, slo=slo,
+                         multi_bucket=multi_bucket)
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
         self.n_shards = n_shards

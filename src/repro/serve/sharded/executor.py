@@ -60,14 +60,24 @@ from .routing import RoutingTable
 
 
 def layer_compute(step: LayerStep, trinary_mode: str, use_pallas: bool,
-                  st, bn_stats, rem, intra, halo):
+                  st, bn_stats, rem, intra, halo, fused: bool = False):
     """The traced core of one layer step, shared verbatim by both executors
     (identical jaxpr => identical XLA rewrites => bit-identical results).
 
     ``st``: this shard's padded carried state; ``bn_stats``: (mu, sd) or
     None; ``rem``: the (n_halo_pad, F) exchanged halo operand (None for
     exchange-free steps); ``intra``/``halo``: the shard's uniformly padded
-    FRDC matrices of ``step.kind``."""
+    FRDC matrices of ``step.kind``.
+
+    ``fused=True`` (``SessionPlan.fused``, only where the kernels are
+    active) emits the whole step — BN, transform, intra+halo aggregation,
+    combine — as ONE Pallas launch through
+    :func:`repro.kernels.fused_layer.fused_call` instead of separate
+    dispatches; the exchange stays outside (``rem`` is already this
+    shard's gathered halo operand)."""
+    if fused and kernel_ops.kernels_active(use_pallas):
+        return _fused_layer_compute(step, trinary_mode, st, bn_stats, rem,
+                                    intra, halo)
     z = session_core.apply_bn(st, *bn_stats) if bn_stats is not None else st
     operand, aux = step.pre(z)
     if step.kind is None:
@@ -79,6 +89,41 @@ def layer_compute(step: LayerStep, trinary_mode: str, use_pallas: bool,
     else:
         y = kernel_ops.serve_fp_pair(intra, halo, operand, rem, use_pallas)
     return step.post(aux, y)
+
+
+def _fused_layer_compute(step: LayerStep, trinary_mode: str,
+                         st, bn_stats, rem, intra, halo):
+    """One-launch form of :func:`layer_compute`: the step body traced inside
+    a single ``fused_call`` kernel, aggregating through the value-level
+    walks (kernel-order, so bitwise identical to the unfused kernels under
+    the same jit). FRDC operands cross the kernel boundary as their array
+    fields — the static row/col counts must stay python ints."""
+    from repro.kernels import fused_layer
+
+    dims = None
+    ia = ha = None
+    if step.kind is not None:
+        ia = session_core.frdc_arrays(intra)
+        ha = session_core.frdc_arrays(halo)
+        dims = (intra.n_rows, intra.n_cols, halo.n_rows, halo.n_cols)
+
+    def body(st_, bn_, rem_, ia_, ha_):
+        z = session_core.apply_bn(st_, *bn_) if bn_ is not None else st_
+        operand, aux = step.pre(z)
+        if step.kind is None:
+            y = operand
+        else:
+            im = session_core.frdc_rebuild(ia_, dims[0], dims[1])
+            hm = session_core.frdc_rebuild(ha_, dims[2], dims[3])
+            if step.packed:
+                y = fused_layer.agg_counts(im, operand, trinary_mode) \
+                    + fused_layer.agg_counts(hm, rem_, trinary_mode)
+            else:
+                y = fused_layer.agg_fp_pair(im, hm, operand, rem_)
+        return step.post(aux, y)
+
+    return fused_layer.fused_call(body, st, bn_stats, rem, ia, ha,
+                                  interpret=kernel_ops.interpret_mode())
 
 
 class _PaddedExecutor(LayerExecutor):
@@ -198,6 +243,7 @@ class HostLayerExecutor(_PaddedExecutor):
             return self._fns[key]
         step = program[i]
         trinary, up = self.plan.trinary_mode, self.use_pallas
+        fused = self.plan.fused
         npd, nhp = self.spmd.n_local_pad, self.spmd.n_halo_pad
         ifields, hfields = self._fields[step.kind] if step.kind else ((), ())
 
@@ -217,7 +263,7 @@ class HostLayerExecutor(_PaddedExecutor):
                 halo = session_core.frdc_rebuild(
                     {f: next(it) for f in hfields}, npd, nhp)
             return layer_compute(step, trinary, up, st, bn_stats, rem,
-                                 intra, halo)
+                                 intra, halo, fused=fused)
 
         self._fns[key] = jax.jit(fn)
         return self._fns[key]
@@ -324,6 +370,7 @@ class SpmdLayerExecutor(_PaddedExecutor):
         npd, nhp = self.spmd.n_local_pad, self.spmd.n_halo_pad
         kind, nshift = step.kind, p - 1
         trinary, up = self.plan.trinary_mode, self.use_pallas
+        fused = self.plan.fused
         perms = self._perms
         ifields, hfields = self._fields[kind] if kind else ((), ())
         frozen_bn = step.bn_site is not None and not calibrate
@@ -369,7 +416,7 @@ class SpmdLayerExecutor(_PaddedExecutor):
                 rem = halo_mod.ring_scatter(operand, sched[0::2],
                                             sched[1::2], perms, nhp)
             new = layer_compute(step, trinary, up, st, bn_stats, rem,
-                                intra, halo)
+                                intra, halo, fused=fused)
             if calib_bn:
                 return new[None], bn_stats[0][None], bn_stats[1][None]
             return new[None]

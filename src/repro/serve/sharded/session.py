@@ -144,6 +144,12 @@ class ShardedGraphSession:
         return [c.compile_count for c in self.cores]
 
     @property
+    def dispatch_count(self) -> int:
+        """Device dispatches across the per-shard serve cores (a
+        multi-bucket co-launch counts 1 per participating core)."""
+        return sum(c.n_dispatches for c in self.cores)
+
+    @property
     def invalidations(self) -> int:
         return self._invalidations
 
@@ -392,14 +398,27 @@ class ShardedGraphSession:
         n = self.shard_plan.n_nodes
         n_max = [0] * self.n_shards
         g_max: List[Dict[str, int]] = [{} for _ in range(self.n_shards)]
+
+        def _probe(s: int, seeds: np.ndarray) -> None:
+            sub_nodes, mats, _ = self._extract(seeds)
+            n_max[s] = max(n_max[s], sub_nodes.size)
+            for k, m in mats.items():
+                g_max[s][k] = max(g_max[s].get(k, 0), m.n_groups)
+
         for _ in range(probes):
             seeds = np.unique(rng.integers(0, n, size=self.max_batch))
             owners = self.routing.owner(seeds)
             for s in np.unique(owners):
-                sub_nodes, mats, _ = self._extract(seeds[owners == s])
-                n_max[s] = max(n_max[s], sub_nodes.size)
-                for k, m in mats.items():
-                    g_max[s][k] = max(g_max[s].get(k, 0), m.n_groups)
+                _probe(s, seeds[owners == s])
+            # steady state forms SINGLE-owner batches up to max_batch wide
+            # (per-owner queues), so a mixed-owner probe understates every
+            # shard's closure — also probe each shard at full batch width
+            # from its own contiguous node range
+            for s in range(self.n_shards):
+                lo, hi = self.routing.shard_range(s)
+                if hi > lo:
+                    _probe(s, np.unique(rng.integers(lo, hi,
+                                                     size=self.max_batch)))
         for s, core in enumerate(self.cores):
             if n_max[s] == 0:
                 continue
@@ -453,6 +472,7 @@ class ShardedGraphSession:
              max_batch: Optional[int] = None, use_pallas: bool = False,
              mesh=None, executor: str = "host",
              bn_mode: str = "single_host", bspmm_block="unchanged",
+             fused="unchanged",
              ) -> Optional["ShardedGraphSession"]:
         """Restore a sharded artifact WITHOUT re-partitioning or re-tuning;
         returns None on any mismatch so the caller replans. ``executor`` /
@@ -472,8 +492,11 @@ class ShardedGraphSession:
         if session_core.session_fingerprint(graph, model) \
                 != sidecar["fingerprint"]:
             return None
-        # trace-time kernel choice: a different block shape must recompile
+        # trace-time kernel choices: a different block shape or fused
+        # selection must recompile
         if bspmm_block != "unchanged" and plan.bspmm_block != bspmm_block:
+            return None
+        if fused != "unchanged" and plan.fused != fused:
             return None
         fam = model.family
         has_dinv = fam in ("gcn", "sage")

@@ -472,15 +472,24 @@ def test_bspmm_block_recorded_and_roundtrips(tmp_path, data):
 
 def test_bspmm_block_validation():
     """Unsupported block shapes fail loudly at the kernel seam (no silent
-    fallback): non-tile row counts and packed-width feature blocks."""
+    fallback): non-tile-multiple row counts and unaligned packed feature
+    blocks. Multi-row blocks are legal since the 2D grid landed; the
+    capability probe answers without raising and every rejection names the
+    full legal block-shape space."""
     from repro.kernels import bspmm_kernel
     assert bspmm_kernel._resolve_block(None, 96, False) == 96
     assert bspmm_kernel._resolve_block((4, 64), 96, False) == 128
     assert bspmm_kernel._resolve_block((4, None), 96, False) == 96
     # packed paths keep their word-native width under a word-aligned block
     assert bspmm_kernel._resolve_block((4, 64), 96, True) == 96
+    # multi-row output blocks are supported now (2D grid)
+    assert bspmm_kernel._resolve_block((8, 64), 96, False) == 128
+    assert bspmm_kernel.block_probe((16, None), 96, True) is None
+    # the probe reports the violation AND the legal space in one message
+    reason = bspmm_kernel.block_probe((6, 64), 96, False)
+    assert reason is not None and "legal BSpMM block shapes" in reason
     with pytest.raises(ValueError):
-        bspmm_kernel._resolve_block((8, 64), 96, False)
+        bspmm_kernel._resolve_block((6, 64), 96, False)
     with pytest.raises(ValueError):
         bspmm_kernel._resolve_block((4, 48), 96, True)
     with pytest.raises(ValueError):
