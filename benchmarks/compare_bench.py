@@ -49,10 +49,12 @@ from typing import List, Optional, Tuple
 
 HIGHER_BETTER = {"qps", "qps_pipelined", "qps_fifo_serial",
                  "halo_bytes_saved_measured", "overlap_ratio",
-                 "cost_spearman_rho", "op_reduction", "dispatch_reduction"}
+                 "cost_spearman_rho", "op_reduction", "dispatch_reduction",
+                 "availability"}
 LOWER_BETTER = {"p50_ms", "p99_ms", "halo_bytes", "serve_x_bytes_halo_aware",
                 "ops_per_layer", "layer_latency_ms"}
-ZERO_TOLERANCE = {"steady_state_compiles", "launches_per_layer_fused"}
+ZERO_TOLERANCE = {"steady_state_compiles", "launches_per_layer_fused",
+                  "dropped_queries"}
 
 # baseline floors below which a leaf is too noisy to gate on
 MIN_LATENCY_MS = 0.05

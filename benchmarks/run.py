@@ -25,7 +25,8 @@ def main() -> None:
         xla_tuned()
 
     from . import (bench_fig4, bench_gnn_tables, bench_grad_compress,
-                   bench_memory, bench_serve_gnn, bench_sharded_serve)
+                   bench_memory, bench_replica, bench_serve_gnn,
+                   bench_sharded_serve)
     sections = [
         ("gnn_tables", bench_gnn_tables.run),     # Tables 3, 4, 5
         ("memory", bench_memory.run),             # Peak-Mem columns
@@ -33,6 +34,7 @@ def main() -> None:
         ("grad_compress", bench_grad_compress.run),
         ("serve_gnn", bench_serve_gnn.run),       # serving QPS/latency
         ("sharded_serve", bench_sharded_serve.run),  # partitioned serving
+        ("replica", bench_replica.run),           # fault-tolerant tier
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -27,19 +27,28 @@
 ``slo``          — per-tenant SLO policies: error-budget burn-rate
                    tracking, multi-window alerts, admission-depth
                    feedback.
+``replica``      — fault-tolerant replica tier: FrontDoor routing with
+                   global admission + feature-version pinning,
+                   health-checked failover, deterministic fault injection,
+                   live reshard (see ``repro.serve.replica``).
 """
 from .admission import (AdmissionController, AdmissionDecision,
                         DEFAULT_TENANT, TenantPolicy)
 from .cost import CostEstimate, CostEstimator, spearman_rho
 from .export import chrome_trace, prometheus_text, write_chrome_trace
-from .gnn_engine import GNNServeEngine, NodeQuery
+from .gnn_engine import (DrainReport, GNNServeEngine, NodeQuery,
+                         QueryFailure)
 from .slo import SLOPolicy, SLOTracker
 from .gnn_session import CompiledGraphSession, GraphStore, SessionPlan
 from .metrics import LatencyStats, ServeMetrics, TenantMetrics
+from .session_core import ArtifactError
 from .sharded import (ShardedGraphSession, ShardedServeEngine, ShardPlan,
                       ShardPlanner)
 from .trace import (BatchTrace, RecompileWatchdog, SpanTracer,
                     TransferWatchdog, WarningEvent)
+from .replica import (FaultInjector, FrontDoor, HealthMonitor,
+                      HealthPolicy, InjectedFault, ReplicaHandle,
+                      Resharder, ReshardReport, RoutedQuery, build_replica)
 
 __all__ = [
     "AdmissionController", "AdmissionDecision", "DEFAULT_TENANT",
@@ -51,4 +60,8 @@ __all__ = [
     "chrome_trace", "prometheus_text", "write_chrome_trace",
     "CostEstimate", "CostEstimator", "spearman_rho",
     "SLOPolicy", "SLOTracker",
+    "ArtifactError", "DrainReport", "QueryFailure",
+    "FaultInjector", "InjectedFault", "FrontDoor", "ReplicaHandle",
+    "RoutedQuery", "build_replica", "HealthMonitor", "HealthPolicy",
+    "Resharder", "ReshardReport",
 ]

@@ -217,6 +217,17 @@ class AdmissionController:
     def policy(self, tenant: str) -> TenantPolicy:
         return self._policies.get(tenant, self.default_policy)
 
+    def spawn(self) -> "AdmissionController":
+        """A fresh controller carrying the same policies/staleness bound but
+        none of the runtime state (buckets, backlogs, virtual clocks). The
+        replica tier uses this to give each engine generation — a resharded
+        replacement, a rebuilt replica — its own controller serialized under
+        its own ``_qlock`` while preserving the tenant contracts; sharing
+        one controller across two live engines would race their locks."""
+        return AdmissionController(policies=dict(self._policies),
+                                   default_policy=self.default_policy,
+                                   staleness_bound_s=self.staleness_bound_s)
+
     def set_policy(self, tenant: str, policy: TenantPolicy) -> None:
         """Install (or replace) a tenant's policy; its token buckets
         restart full at the new rates."""
@@ -450,3 +461,10 @@ class AdmissionController:
         tenant whose batches keep failing must not starve its neighbors by
         replaying at zero virtual cost."""
         self._backlog[tenant] = self._backlog.get(tenant, 0) + n
+
+    def on_dequeued(self, tenant: str, n: int) -> None:
+        """Queries left the queue WITHOUT being served here — evacuated to
+        another replica, shed at drain timeout, or (at the front door)
+        completed downstream. Backlog-only: no virtual-time charge, since
+        no service happened on this controller's engine."""
+        self._backlog[tenant] = max(0, self._backlog.get(tenant, 0) - n)

@@ -38,7 +38,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .admission import (DEFAULT_TENANT, AdmissionController,
+from .admission import (DEFAULT_TENANT, SHED, AdmissionController,
                         AdmissionDecision)
 from .cost import CostEstimate, CostEstimator
 from .gnn_session import CompiledGraphSession, GraphStore
@@ -46,6 +46,35 @@ from .metrics import ServeMetrics
 from .session_core import FAMILY_AGG_LAYERS, launch_prepared_many
 from .slo import SLOTracker
 from .trace import RecompileWatchdog, SpanTracer, TransferWatchdog
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryFailure:
+    """Typed terminal failure of one accepted query: the engine retried its
+    batch ``attempts`` times and gave up (``reason="max_retries"``), so the
+    query is dropped with this record attached instead of wedging the
+    pipeline forever. ``stage`` names the pipeline stage of the final
+    error, ``error`` its repr."""
+    reason: str
+    stage: str
+    attempts: int
+    error: str
+
+
+@dataclasses.dataclass
+class DrainReport:
+    """Outcome of one :meth:`GNNServeEngine.drain`: queries answered during
+    the drain window, accepted-but-unserved queries typed-shed at the
+    deadline, queries that exhausted their retries while draining, and
+    whether the deadline fired at all."""
+    answered: int
+    shed: int
+    failed: int
+    elapsed_s: float
+    timed_out: bool
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
 
 
 @dataclasses.dataclass
@@ -71,6 +100,10 @@ class NodeQuery:
     # trace context: submit() stamps qid/t_submit/admission above; when the
     # query is picked into a batch this links it to that batch's BatchTrace
     trace_id: int = -1
+    # bounded-retry state: service attempts this query's batches have
+    # burned, and the typed terminal failure once they exceed max_retries
+    attempts: int = 0
+    failure: Optional[QueryFailure] = None
 
     @property
     def latency_s(self) -> float:
@@ -83,6 +116,17 @@ class NodeQuery:
     @property
     def rejected(self) -> bool:
         return self.admission is not None and not self.admission.accepted
+
+    @property
+    def failed(self) -> bool:
+        """Accepted but terminally dropped (retries exhausted)."""
+        return self.failure is not None
+
+    @property
+    def settled(self) -> bool:
+        """Nothing more will happen to this query: answered, rejected at
+        admission, or terminally failed."""
+        return self.done or self.rejected or self.failed
 
 
 @dataclasses.dataclass
@@ -114,9 +158,13 @@ class GNNServeEngine:
                  tracer: Optional[SpanTracer] = None, trace: bool = True,
                  cost: Optional[CostEstimator] = None,
                  slo: Optional[SLOTracker] = None,
-                 multi_bucket: bool = False):
+                 multi_bucket: bool = False, faults=None,
+                 max_retries: int = 8, retry_backoff_s: float = 0.05,
+                 retry_backoff_max_s: float = 2.0):
         if mode not in ("auto", "full", "subgraph"):
             raise ValueError(mode)
+        if max_retries < 1:
+            raise ValueError(f"max_retries must be >= 1, got {max_retries}")
         self.store = store
         self.max_batch = max_batch or store.max_batch
         if self.max_batch > store.max_batch:
@@ -178,6 +226,24 @@ class GNNServeEngine:
         self.slo = slo
         if slo is not None and slo.tracer is None:
             slo.tracer = self.tracer
+        # chaos seam: a replica.FaultInjector (duck-typed: anything with
+        # check(op, scope=...)) consulted at the extract/launch/complete
+        # stage boundaries; None = no injection. fault_scope tags this
+        # engine's checks (the replica tier sets it to the replica name so
+        # per-replica fault rules match).
+        self.faults = faults
+        self.fault_scope: Optional[str] = None
+        # bounded retry: a requeued batch backs its queue off exponentially
+        # (+ deterministic jitter) and each member query burns one attempt;
+        # past max_retries the query is dropped with a typed QueryFailure
+        # instead of requeueing forever
+        self.max_retries = int(max_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.retry_backoff_max_s = float(retry_backoff_max_s)
+        self._retry_rng = np.random.default_rng(0)
+        self._backoff: Dict[tuple, float] = {}   # key -> pickable-again time
+        # drain/evacuate state: a draining engine typed-sheds new intake
+        self._draining = False
 
     # ------------------------------------------------------------ intake ----
     def submit(self, graph: str, model: str, node: int,
@@ -208,6 +274,13 @@ class GNNServeEngine:
         charge = q.cost.units if q.cost is not None else 1.0
         with self._qlock:
             q.t_submit = time.perf_counter()
+            if self._draining:
+                # intake is stopped (drain/evacuation): typed shed without
+                # burning the tenant's tokens — resume_intake() re-opens
+                q.admission = AdmissionDecision(
+                    SHED, tenant, reason="engine draining: intake stopped")
+                self.metrics.record_admission(tenant, SHED)
+                return q
             q.admission = self.admission.admit(tenant, q.t_submit,
                                                cost=charge)
             self.metrics.record_admission(
@@ -315,8 +388,42 @@ class GNNServeEngine:
         controller's weighted virtual-time pick — oldest head within a
         tenant, weighted fair across tenants, overdue heads (past the
         staleness bound) globally FIFO. With a single tenant this is
-        exactly the old lazy oldest-head heap pick."""
-        return self.admission.pick(self._queues)
+        exactly the old lazy oldest-head heap pick.
+
+        Queues inside a retry-backoff window are invisible to the pick (and
+        to the staleness preemption — the backoff must win, and it is
+        bounded by ``retry_backoff_max_s``); when a window expires its
+        queue's head is re-pushed, since the scheduler's lazy heaps may
+        have dropped it while the queue looked empty."""
+        queues = self._queues
+        if self._backoff:
+            now = time.perf_counter()
+            for k in [k for k, t in self._backoff.items() if t <= now]:
+                del self._backoff[k]
+                dq = self._queues.get(k)
+                if dq:
+                    self._heap_push(k, dq[0].t_submit)
+            if self._backoff:
+                queues = {k: dq for k, dq in self._queues.items()
+                          if k not in self._backoff}
+        return self.admission.pick(queues)
+
+    def _backoff_hold_s(self) -> Optional[float]:
+        """Seconds until the earliest backed-off queue with live work
+        becomes pickable — but only when backed-off queues are the ONLY
+        queued work (None otherwise): the drain loops sleep on this instead
+        of spinning against an all-backed-off queue set."""
+        with self._qlock:
+            if not self._backoff:
+                return None
+            if any(dq and k not in self._backoff
+                   for k, dq in self._queues.items()):
+                return None
+            held = [t for k, t in self._backoff.items()
+                    if self._queues.get(k)]
+            if not held:
+                return None
+            return max(0.0, min(held) - time.perf_counter())
 
     def _pop_batch(self, key: tuple, session) -> List[NodeQuery]:
         """Batch formation (caller holds ``_qlock``): FIFO pop of up to
@@ -326,15 +433,59 @@ class GNNServeEngine:
         dq = self._queues[key]
         return [dq.popleft() for _ in range(min(self.max_batch, len(dq)))]
 
-    def _requeue(self, key: tuple, batch: List[NodeQuery]) -> None:
+    def _requeue(self, key: tuple, batch: List[NodeQuery],
+                 stage: str = "", error: str = "") -> None:
         """Restore a popped-but-unserved batch to the FRONT of its queue
-        (extract/compute failure path: the queries must not be lost)."""
+        (extract/compute failure path: the queries must not be lost) —
+        under the BOUNDED retry discipline: each member query burns one
+        attempt; queries past ``max_retries`` are dropped with a typed
+        :class:`QueryFailure` (counted in ``metrics.retry_shed``) instead
+        of requeueing forever, and the survivors' queue backs off
+        exponentially with deterministic jitter before it becomes pickable
+        again — a poison batch can no longer wedge the pipeline or starve
+        its neighbors by hot-spinning the retry path."""
+        now = time.perf_counter()
+        survivors: List[NodeQuery] = []
+        exhausted: List[NodeQuery] = []
+        for q in batch:
+            q.attempts += 1
+            (exhausted if q.attempts > self.max_retries
+             else survivors).append(q)
         with self._qlock:
-            dq = self._queues.setdefault(key, deque())
-            for q in reversed(batch):
-                dq.appendleft(q)
-            self.admission.on_requeued(key[-1], len(batch))
-            self._heap_push(key, dq[0].t_submit)
+            self.metrics.requeues += 1
+            if survivors:
+                dq = self._queues.setdefault(key, deque())
+                for q in reversed(survivors):
+                    dq.appendleft(q)
+                self.admission.on_requeued(key[-1], len(survivors))
+                self._heap_push(key, dq[0].t_submit)
+                attempt = max(q.attempts for q in survivors)
+                delay = min(self.retry_backoff_max_s,
+                            self.retry_backoff_s * 2.0 ** (attempt - 1))
+                delay *= 1.0 + 0.5 * float(self._retry_rng.random())
+                self._backoff[key] = max(self._backoff.get(key, 0.0),
+                                         now + delay)
+            for q in exhausted:
+                q.failure = QueryFailure(reason="max_retries", stage=stage,
+                                         attempts=q.attempts, error=error)
+                q.t_done = now
+                self.metrics.retry_shed += 1
+                self._unanswered -= 1
+                self.finished.append(q)
+                if self.slo is not None:
+                    self.slo.observe(q.tenant, now, rejected=True)
+        if exhausted:
+            self.tracer.event(
+                "retry_exhausted", key=list(key), stage=stage, error=error,
+                qids=[q.qid for q in exhausted],
+                attempts=exhausted[0].attempts)
+
+    def _check_fault(self, op: str) -> None:
+        """Chaos seam: consult the injected FaultInjector (if any) at a
+        stage boundary — a matching rule raises InjectedFault, which flows
+        through the SAME requeue/retry path as a real stage failure."""
+        if self.faults is not None:
+            self.faults.check(op, scope=self.fault_scope)
 
     def _use_full_cache(self, session) -> bool:
         if self.mode == "full":
@@ -431,6 +582,7 @@ class GNNServeEngine:
                                    vtime=float(pick.get("vtime", 0.0)),
                                    overdue=bool(pick.get("overdue", False)))
         try:
+            self._check_fault("extract")
             halo_token = self._trace_halo_begin(session) \
                 if tr is not None else None
             seeds = np.asarray([q.node for q in batch], np.int64)
@@ -450,7 +602,7 @@ class GNNServeEngine:
                              seeds=seeds, prepared=prepared, result=result,
                              t_start=t0, extract_s=extract_s, trace=tr)
         except BaseException as e:
-            self._requeue(key, batch)
+            self._requeue(key, batch, stage="extract", error=repr(e))
             self.tracer.commit(tr, error=repr(e), requeued=True)
             raise
 
@@ -467,6 +619,7 @@ class GNNServeEngine:
         retries it, so the serve-path counters must only move in the
         (single) successful completion — counting here double-counted
         retried batches and drifted ``cache_hit_rate``."""
+        self._check_fault("launch")
         inf.t_launch = time.perf_counter()
         if inf.prepared is not None:
             inf.devs = inf.session.launch_batch(inf.prepared)
@@ -484,6 +637,7 @@ class GNNServeEngine:
         t0 = time.perf_counter()
         device_infs = [inf for inf in infs if inf.prepared is not None]
         try:
+            self._check_fault("launch")
             devs_lists = launch_prepared_many(
                 [inf.prepared for inf in device_infs])
         except BaseException as e:
@@ -492,7 +646,8 @@ class GNNServeEngine:
                     self._inflight.remove(inf)
                 except ValueError:
                     pass
-                self._requeue(inf.key, inf.batch)
+                self._requeue(inf.key, inf.batch, stage="launch",
+                              error=repr(e))
                 self.tracer.commit(inf.trace, error=repr(e), requeued=True)
                 inf.trace = None
             raise
@@ -514,6 +669,7 @@ class GNNServeEngine:
         completions are sequential, so in a saturated pipeline the span
         launch -> done would double-count the older batches' device time
         and inflate the overlap ratio."""
+        self._check_fault("complete")
         if inf.prepared is None:
             logits = inf.result
         else:
@@ -672,7 +828,9 @@ class GNNServeEngine:
                 return 0
             return self._complete_stage(inf)
         except BaseException as e:
-            self._requeue(inf.key, inf.batch)
+            stage = "complete" if complete_only or inf.t_launch_end \
+                else "launch"
+            self._requeue(inf.key, inf.batch, stage=stage, error=repr(e))
             self.tracer.commit(inf.trace, error=repr(e), requeued=True)
             inf.trace = None
             raise
@@ -702,7 +860,14 @@ class GNNServeEngine:
         while ticks < max_ticks and (
                 self.pending or self._inflight
                 or self._extract_future is not None):
-            self._step(block=True)
+            n = self._step(block=True)
+            if (n == 0 and not self._inflight
+                    and self._extract_future is None):
+                # all remaining work is behind retry-backoff windows:
+                # sleep toward the earliest expiry instead of spinning
+                hold = self._backoff_hold_s()
+                if hold:
+                    time.sleep(min(hold, 0.05))
             ticks += 1
         self.metrics.stop_clock()
         return list(self.finished)
@@ -713,6 +878,145 @@ class GNNServeEngine:
         if self._pool is not None:
             self._pool.shutdown(wait=True)
             self._pool = None
+
+    # ------------------------------------------------ drain / evacuation ----
+    def resume_intake(self) -> None:
+        """Re-open intake after a :meth:`drain` or :meth:`evacuate` (the
+        replica tier's recovery re-admission path)."""
+        with self._qlock:
+            self._draining = False
+
+    def _shed_queued(self, reason: str) -> List[NodeQuery]:
+        """Typed-shed every queued (not in-flight) query: each gets a SHED
+        AdmissionDecision naming ``reason``, is counted in
+        ``metrics.drain_shed``, and lands in ``finished`` so drain-style
+        callers still see it. Caller must NOT hold ``_qlock``."""
+        now = time.perf_counter()
+        shed: List[NodeQuery] = []
+        with self._qlock:
+            for key, dq in self._queues.items():
+                while dq:
+                    q = dq.popleft()
+                    q.admission = AdmissionDecision(
+                        SHED, q.tenant, reason=reason)
+                    q.t_done = now
+                    # NOT record_admission: the submission was already
+                    # counted as accepted — drain_shed is its own counter
+                    self.metrics.drain_shed += 1
+                    self._unanswered -= 1
+                    self.admission.on_dequeued(q.tenant, 1)
+                    self.finished.append(q)
+                    if self.slo is not None:
+                        self.slo.observe(q.tenant, now, rejected=True)
+                    shed.append(q)
+            self._backoff.clear()
+        return shed
+
+    def drain(self, timeout_s: float = 30.0) -> DrainReport:
+        """Graceful drain: stop intake (new submits typed-shed), serve the
+        backlog until empty or ``timeout_s``, then typed-shed whatever is
+        still queued and flush the in-flight pipeline batches. Always
+        terminates; never loses an accepted query silently — every query is
+        answered, typed-shed (``drain_shed``), or typed-failed
+        (``retry_shed``) by the time this returns. Intake stays stopped
+        (see :meth:`resume_intake`)."""
+        t0 = time.perf_counter()
+        answered0 = self.metrics.queries
+        failed0 = self.metrics.retry_shed
+        with self._qlock:
+            self._draining = True
+        deadline = t0 + float(timeout_s)
+        while (self.pending or self._inflight
+               or self._extract_future is not None):
+            if time.perf_counter() >= deadline:
+                break
+            try:
+                n = self._step(block=True)
+            except Exception:
+                # stage failures already requeued their batch; keep draining
+                n = 0
+            if (n == 0 and not self._inflight
+                    and self._extract_future is None):
+                hold = self._backoff_hold_s()
+                if hold:
+                    left = deadline - time.perf_counter()
+                    time.sleep(max(0.0, min(hold, 0.05, left)))
+        # deadline path: shed the queues FIRST so _step can't refill the
+        # pipeline, then flush launched/extracting batches; a flush failure
+        # requeues, so re-shed each iteration until nothing is in flight
+        shed: List[NodeQuery] = []
+        if (self.pending or self._inflight
+                or self._extract_future is not None):
+            reason = f"drain timeout after {timeout_s:g}s"
+            shed.extend(self._shed_queued(reason))
+            while self._inflight or self._extract_future is not None:
+                try:
+                    self._step(block=True)
+                except Exception:
+                    pass
+                shed.extend(self._shed_queued(reason))
+        self.metrics.stop_clock()
+        elapsed = time.perf_counter() - t0
+        report = DrainReport(
+            answered=self.metrics.queries - answered0, shed=len(shed),
+            failed=self.metrics.retry_shed - failed0,
+            elapsed_s=elapsed, timed_out=bool(shed))
+        self.tracer.event("drain", **report.to_json())
+        return report
+
+    def evacuate(self) -> List[NodeQuery]:
+        """Failover evacuation: stop intake, resolve the background
+        extraction, and hand back EVERY accepted-but-unanswered query (in
+        service order: in-flight batches oldest-first, then queued by
+        submit order) with pipeline state cleared — the front door resubmits
+        them to a surviving replica. Unlike :meth:`drain` this never runs
+        another compute step: a dead/dying replica cannot be trusted to
+        answer, only to surrender its queries."""
+        with self._qlock:
+            self._draining = True
+        fut, self._extract_future = self._extract_future, None
+        if fut is not None:
+            try:
+                inf = fut.result()
+                if inf is not None:
+                    self._inflight.append(inf)
+            except BaseException:
+                pass  # the stage already requeued its batch
+        self.close()
+        out: List[NodeQuery] = []
+        while self._inflight:
+            inf = self._inflight.popleft()
+            self.tracer.commit(inf.trace, error="evacuated", requeued=True)
+            inf.trace = None
+            out.extend(inf.batch)
+        with self._qlock:
+            queued: List[NodeQuery] = []
+            for key, dq in self._queues.items():
+                while dq:
+                    q = dq.popleft()
+                    self.admission.on_dequeued(q.tenant, 1)
+                    queued.append(q)
+            queued.sort(key=lambda q: (q.t_submit, q.qid))
+            out.extend(queued)
+            self._unanswered -= len(out)
+            self._backoff.clear()
+        return out
+
+    def engine_config(self) -> dict:
+        """Constructor kwargs that rebuild an engine equivalent to this one
+        (minus the store/topology args the caller supplies): the reshard
+        path uses this to spin the P' engine up with the same admission
+        policies, tracer ring, retry discipline, and chaos seam."""
+        return dict(
+            max_batch=self.max_batch, mode=self.mode,
+            full_cache_max_nodes=self.full_cache_max_nodes,
+            keep_finished=self.finished.maxlen,
+            pipeline_depth=self.pipeline_depth,
+            admission=self.admission.spawn(), tracer=self.tracer,
+            cost=self.cost, slo=self.slo, multi_bucket=self.multi_bucket,
+            faults=self.faults, max_retries=self.max_retries,
+            retry_backoff_s=self.retry_backoff_s,
+            retry_backoff_max_s=self.retry_backoff_max_s)
 
     # ------------------------------------------------------------ warmup ----
     def warmup(self, graph: str, model: str, probes: int = 16,

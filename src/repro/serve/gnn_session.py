@@ -393,16 +393,22 @@ class CompiledGraphSession:
         is skipped entirely — the FRDC arrays come from the checkpoint."""
         directory = Path(directory)
         sidecar_path = directory / "plan.json"
-        if not sidecar_path.exists():
+        sidecar = session_core.load_sidecar(
+            sidecar_path, required=("plan", "fingerprint", "khop",
+                                    "max_batch", "adj_dims"))
+        if sidecar is None:
             return None
-        sidecar = json.loads(sidecar_path.read_text())
         if khop is not None and sidecar["khop"] != khop:
             return None
         if max_batch is not None and sidecar["max_batch"] != max_batch:
             return None
         if _session_fingerprint(graph, model) != sidecar["fingerprint"]:
             return None
-        plan = SessionPlan.from_json(sidecar["plan"])
+        try:
+            plan = SessionPlan.from_json(sidecar["plan"])
+        except (KeyError, TypeError, ValueError) as e:
+            raise session_core.ArtifactError(sidecar_path, field="plan",
+                                             detail=repr(e))
         # the block shape is baked into the compiled executables (trace-time
         # choice): a store asking for a different one must recompile
         if bspmm_block != "unchanged" and plan.bspmm_block != bspmm_block:
@@ -413,9 +419,10 @@ class CompiledGraphSession:
         like = {"qparams": session_core.quantize_family(model.family,
                                                         model.params),
                 "adj": session_core.adj_like(model.family)}
-        try:
-            state = Checkpointer(directory, keep=1).restore(None, like)
-        except (FileNotFoundError, AssertionError):
+        # typed restore: missing/mismatched checkpoint -> None (recompile),
+        # truncated/corrupt npz or manifest -> ArtifactError naming the file
+        state = session_core.restore_artifact_state(directory, like)
+        if state is None:
             return None
         dims = sidecar["adj_dims"]
         adj_full = {k: session_core.frdc_rebuild(v, *dims[k])

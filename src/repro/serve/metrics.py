@@ -144,6 +144,13 @@ class ServeMetrics:
     extract_s: float = 0.0         # summed extract-stage seconds
     compute_s: float = 0.0         # summed compute-stage seconds
     serve_wall_s: float = 0.0      # wall seconds inside the serve loop
+    # failure-path accounting (the bounded-retry / drain machinery):
+    # batches bounced back to their queue, queries dropped with a typed
+    # per-query failure after max_retries, and accepted-but-unserved
+    # queries typed-shed by a drain timeout
+    requeues: int = 0
+    retry_shed: int = 0
+    drain_shed: int = 0
     started_at: Optional[float] = None
     finished_at: Optional[float] = None
     # wall time banked from previous start/stop waves (restart-safe clock)
@@ -249,6 +256,9 @@ class ServeMetrics:
                                  total=self.batch_latency.summary()),
             overlap_ratio=self.overlap_ratio,
             serve_wall_s=self.serve_wall_s,
+            requeues=self.requeues,
+            retry_shed=self.retry_shed,
+            drain_shed=self.drain_shed,
             tenants={name: tm.snapshot(self.elapsed_s)
                      for name, tm in sorted(self.tenants.items())},
         )

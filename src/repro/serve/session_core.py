@@ -284,6 +284,93 @@ def session_fingerprint(graph, model) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# Artifact robustness — typed corruption errors for both restore paths
+# ---------------------------------------------------------------------------
+
+class ArtifactError(RuntimeError):
+    """A serving artifact on disk is CORRUPT (truncated sidecar, unparsable
+    JSON, a half-written npz) — as opposed to merely missing or mismatched,
+    which the load paths report by returning None so the caller recompiles.
+    Corruption must not silently recompile (the artifact the operator
+    deployed is broken and someone should know) and must not surface as a
+    raw JSONDecodeError/BadZipFile traceback either; it names the file and
+    the field that failed."""
+
+    def __init__(self, path, field: str = "", detail: str = ""):
+        self.path = str(path)
+        self.field = field
+        self.detail = detail
+        msg = f"corrupt serving artifact {self.path}"
+        if field:
+            msg += f" (field {field!r})"
+        if detail:
+            msg += f": {detail}"
+        super().__init__(msg)
+
+
+def load_sidecar(path, required: Tuple[str, ...] = ()) -> Optional[dict]:
+    """Read an artifact sidecar (``plan.json`` / ``routing.json``). Missing
+    file -> None (no artifact: recompile). Unparsable JSON, a non-object
+    payload, or a missing required field -> :class:`ArtifactError` naming
+    the file and field."""
+    import json
+    import pathlib
+    path = pathlib.Path(path)
+    if not path.exists():
+        return None
+    try:
+        sidecar = json.loads(path.read_text())
+    except (ValueError, OSError) as e:
+        raise ArtifactError(path, field="json", detail=str(e))
+    if not isinstance(sidecar, dict):
+        raise ArtifactError(path, field="json",
+                            detail=f"expected an object, got "
+                                   f"{type(sidecar).__name__}")
+    for f in required:
+        if f not in sidecar:
+            raise ArtifactError(path, field=f, detail="missing field")
+    return sidecar
+
+
+def restore_artifact_state(directory, like):
+    """Checkpointer restore with typed corruption reporting: None when no
+    complete checkpoint exists or its pytree structure mismatches ``like``
+    (recompile), :class:`ArtifactError` when the manifest or npz payload is
+    present but unreadable (truncated write, bad zip, missing leaves)."""
+    import json
+    import pathlib
+    import zipfile
+    from repro.checkpoint.checkpointer import Checkpointer, _flatten
+    ckpt = Checkpointer(directory, keep=1)
+    step = ckpt.latest_step()
+    if step is None:
+        return None
+    out = pathlib.Path(directory) / f"step_{step:08d}"
+    man_path = out / "manifest.json"
+    try:
+        manifest = json.loads(man_path.read_text())
+    except (ValueError, OSError) as e:
+        raise ArtifactError(man_path, field="json", detail=str(e))
+    for f in ("keys", "n_leaves", "shards"):
+        if f not in manifest:
+            raise ArtifactError(man_path, field=f, detail="missing field")
+    keys, _, treedef = _flatten(like)
+    if keys != manifest["keys"]:
+        return None                    # structure mismatch: recompile
+    npz_path = out / manifest["shards"][0]
+    if not npz_path.exists():
+        raise ArtifactError(npz_path, field="shards",
+                            detail="manifest names a missing shard file")
+    try:
+        data = np.load(npz_path)
+        leaves = [jnp.asarray(data[f"a{i}"])
+                  for i in range(int(manifest["n_leaves"]))]
+    except (zipfile.BadZipFile, KeyError, ValueError, OSError) as e:
+        raise ArtifactError(npz_path, field="leaves", detail=str(e))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
 # Subgraph adjacency construction (full-graph factorization vectors)
 # ---------------------------------------------------------------------------
 

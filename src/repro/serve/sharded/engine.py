@@ -58,13 +58,18 @@ class ShardedServeEngine(GNNServeEngine):
                  staleness_s: float = 0.25,
                  halo_window: Optional[int] = None, admission=None,
                  tracer=None, trace: bool = True, cost=None, slo=None,
-                 multi_bucket: bool = False):
+                 multi_bucket: bool = False, faults=None,
+                 max_retries: int = 8, retry_backoff_s: float = 0.05,
+                 retry_backoff_max_s: float = 2.0):
         super().__init__(store, max_batch=max_batch, mode=mode,
                          full_cache_max_nodes=full_cache_max_nodes,
                          keep_finished=keep_finished,
                          pipeline_depth=pipeline_depth, admission=admission,
                          tracer=tracer, trace=trace, cost=cost, slo=slo,
-                         multi_bucket=multi_bucket)
+                         multi_bucket=multi_bucket, faults=faults,
+                         max_retries=max_retries,
+                         retry_backoff_s=retry_backoff_s,
+                         retry_backoff_max_s=retry_backoff_max_s)
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
         self.n_shards = n_shards
@@ -92,6 +97,17 @@ class ShardedServeEngine(GNNServeEngine):
                                           mesh=self.mesh,
                                           executor=self.executor,
                                           bn_mode=self.bn_mode)
+
+    def engine_config(self) -> dict:
+        """Rebuild kwargs incl. the sharded knobs — everything except the
+        store and ``n_shards``, which the reshard path supplies (that pair
+        IS the thing a reshard changes)."""
+        cfg = super().engine_config()
+        cfg.update(mesh=self.mesh, executor=self.executor,
+                   bn_mode=self.bn_mode, halo_aware=self.halo_aware,
+                   staleness_s=self.staleness_s,
+                   halo_window=self.halo_window)
+        return cfg
 
     def _queue_key(self, graph: str, model: str, node: int,
                    tenant: str = DEFAULT_TENANT) -> tuple:

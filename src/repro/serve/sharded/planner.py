@@ -227,3 +227,24 @@ class ShardPlanner:
                          n_nodes=n, n_edges=int(rows.size))
         plan.spmd_plan()            # record the uniform dims + halo schedule
         return plan
+
+
+def validate_reshard(old_routing: RoutingTable, new_routing: RoutingTable,
+                     n_nodes: int) -> None:
+    """Pre-swap consistency gate for a live reshard P -> P': both routing
+    tables must be well-formed contiguous covers of the SAME node id space
+    ``[0, n_nodes)`` — a reshard redistributes ownership, it never changes
+    the graph. Raises ValueError naming the violated invariant (the reshard
+    aborts before any traffic moves)."""
+    for name, rt in (("old", old_routing), ("new", new_routing)):
+        b = np.asarray(rt.bounds, np.int64)
+        if b.size < 2:
+            raise ValueError(f"reshard: {name} routing has {b.size} bounds "
+                             f"(need >= 2)")
+        if int(b[0]) != 0 or int(b[-1]) != n_nodes:
+            raise ValueError(
+                f"reshard: {name} routing covers [{int(b[0])}, "
+                f"{int(b[-1])}) but the graph has {n_nodes} nodes")
+        if np.any(np.diff(b) < 0):
+            raise ValueError(f"reshard: {name} routing bounds are not "
+                             f"monotone: {b.tolist()}")

@@ -481,14 +481,21 @@ class ShardedGraphSession:
         rebuild the uniform-dims plan from the restored parts."""
         directory = Path(directory)
         sidecar_path = directory / "routing.json"
-        if not sidecar_path.exists():
+        sidecar = session_core.load_sidecar(
+            sidecar_path, required=("plan", "fingerprint", "khop",
+                                    "max_batch", "n_shards", "routing",
+                                    "shards"))
+        if sidecar is None:
             return None
-        sidecar = json.loads(sidecar_path.read_text())
         if khop is not None and sidecar["khop"] != khop:
             return None
         if max_batch is not None and sidecar["max_batch"] != max_batch:
             return None
-        plan = SessionPlan.from_json(sidecar["plan"])
+        try:
+            plan = SessionPlan.from_json(sidecar["plan"])
+        except (KeyError, TypeError, ValueError) as e:
+            raise session_core.ArtifactError(sidecar_path, field="plan",
+                                             detail=repr(e))
         if session_core.session_fingerprint(graph, model) \
                 != sidecar["fingerprint"]:
             return None
@@ -521,12 +528,17 @@ class ShardedGraphSession:
             })
         like = {"qparams": session_core.quantize_family(fam, model.params),
                 "shards": like_shards}
-        try:
-            state = Checkpointer(directory, keep=1).restore(None, like)
-        except (FileNotFoundError, AssertionError):
+        # typed restore: missing/mismatched checkpoint -> None (recompile),
+        # truncated/corrupt npz or manifest -> ArtifactError naming the file
+        state = session_core.restore_artifact_state(directory, like)
+        if state is None:
             return None
 
-        routing = RoutingTable.from_json(sidecar["routing"])
+        try:
+            routing = RoutingTable.from_json(sidecar["routing"])
+        except (KeyError, TypeError, ValueError) as e:
+            raise session_core.ArtifactError(sidecar_path, field="routing",
+                                             detail=repr(e))
         parts = []
         for s, (sd, st) in enumerate(zip(sidecar["shards"],
                                          state["shards"])):

@@ -58,6 +58,13 @@ TRACE_SCHEMA_VERSION = 1
 # of the Chrome-trace export
 STAGES = ("queue_wait", "extract", "launch", "compute")
 
+# event names the replica tier emits through SpanTracer.event (always-kept
+# WarningEvent records, like the watchdog firings): replica health
+# transitions, failover requeues, reshard lifecycle phases, and the typed
+# per-query failure paths of the bounded-retry / drain machinery
+REPLICA_EVENTS = ("replica_unhealthy", "replica_recovered", "failover",
+                  "reshard", "retry_exhausted", "drain")
+
 
 @dataclasses.dataclass
 class SpanEvent:
@@ -259,6 +266,14 @@ class SpanTracer:
                 self._store(ev)
                 self.warnings_recorded += 1
         return ev
+
+    def event(self, name: str, **attrs) -> WarningEvent:
+        """Record an always-kept structured lifecycle event — the replica
+        tier's channel for health transitions, failovers and reshard phases
+        (see :data:`REPLICA_EVENTS`). Same record type and retention as
+        :meth:`warning`; the separate name keeps call sites honest about
+        whether they are reporting a problem or narrating a transition."""
+        return self.warning(name, **attrs)
 
     def _push_total(self, total_s: float) -> None:
         self._totals[self._n_totals % self._totals.size] = total_s

@@ -1,0 +1,179 @@
+"""Checkpoint-load robustness: truncated/corrupt serving artifacts raise a
+typed ``ArtifactError`` naming the damaged file (and field), while MISSING
+artifacts keep the silent recompile path (load returns None). Byte-level
+truncation is driven through the chaos seam's ``corrupt_artifact``.
+"""
+import json
+from pathlib import Path
+
+import numpy as np
+import jax
+import pytest
+
+from repro.graphs.datasets import make_dataset
+from repro.models import gnn
+from repro.serve import ArtifactError, FaultInjector, GraphStore
+from repro.serve import session_core
+
+jax.config.update("jax_platform_name", "cpu")
+
+BATCH = 8
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_dataset("cora", seed=0, scale=0.05)
+
+
+@pytest.fixture(scope="module")
+def gcn_params(data):
+    key = jax.random.PRNGKey(0)
+    return gnn.init_gcn(key, data.x.shape[1], 16, data.n_classes)
+
+
+def _store(data, gcn_params, cache_dir):
+    st = GraphStore(cache_dir=str(cache_dir), max_batch=BATCH)
+    st.register_graph("g", data)
+    st.register_model("gcn", "gcn", gcn_params)
+    return st
+
+
+def _saved_single(data, gcn_params, cache_dir) -> Path:
+    st = _store(data, gcn_params, cache_dir)
+    st.session("g", "gcn")
+    d = cache_dir / "g__gcn"
+    assert (d / "plan.json").exists()
+    return d
+
+def _saved_sharded(data, gcn_params, cache_dir) -> Path:
+    st = _store(data, gcn_params, cache_dir)
+    st.sharded_session("g", "gcn", 2)
+    d = cache_dir / "g__gcn__P2"
+    assert (d / "routing.json").exists()
+    return d
+
+
+# ------------------------------------------------------- sidecar loader -----
+
+def test_load_sidecar_missing_file_is_none(tmp_path):
+    assert session_core.load_sidecar(tmp_path / "nope.json") is None
+
+
+def test_load_sidecar_truncated_raises_typed(tmp_path):
+    p = tmp_path / "plan.json"
+    p.write_text(json.dumps(dict(plan={}, fingerprint={})))
+    FaultInjector().corrupt_artifact(p, keep_bytes=10)
+    with pytest.raises(ArtifactError) as ei:
+        session_core.load_sidecar(p, required=("plan",))
+    assert str(p) in str(ei.value)
+
+
+def test_load_sidecar_missing_field_names_it(tmp_path):
+    p = tmp_path / "plan.json"
+    p.write_text(json.dumps(dict(plan={})))
+    with pytest.raises(ArtifactError) as ei:
+        session_core.load_sidecar(p, required=("plan", "fingerprint"))
+    assert ei.value.field == "fingerprint"
+    assert "fingerprint" in str(ei.value)
+
+
+def test_load_sidecar_non_object_raises(tmp_path):
+    p = tmp_path / "plan.json"
+    p.write_text(json.dumps([1, 2, 3]))
+    with pytest.raises(ArtifactError):
+        session_core.load_sidecar(p)
+
+
+# ------------------------------------------------- single-host artifacts ----
+
+def test_truncated_plan_json_raises_typed(data, gcn_params, tmp_path):
+    d = _saved_single(data, gcn_params, tmp_path)
+    FaultInjector().corrupt_artifact(d / "plan.json", keep_bytes=20)
+    fresh = _store(data, gcn_params, tmp_path)
+    with pytest.raises(ArtifactError) as ei:
+        fresh.session("g", "gcn")
+    assert "plan.json" in str(ei.value)
+
+
+def test_truncated_weight_npz_raises_typed(data, gcn_params, tmp_path):
+    d = _saved_single(data, gcn_params, tmp_path)
+    npz = next(d.glob("step_*/shard_0.npz"))
+    FaultInjector().corrupt_artifact(npz)
+    fresh = _store(data, gcn_params, tmp_path)
+    with pytest.raises(ArtifactError) as ei:
+        fresh.session("g", "gcn")
+    assert "shard_0.npz" in str(ei.value)
+    assert ei.value.field == "leaves"
+
+
+def test_truncated_manifest_raises_typed(data, gcn_params, tmp_path):
+    d = _saved_single(data, gcn_params, tmp_path)
+    manifest = next(d.glob("step_*/manifest.json"))
+    FaultInjector().corrupt_artifact(manifest, keep_bytes=5)
+    fresh = _store(data, gcn_params, tmp_path)
+    with pytest.raises(ArtifactError) as ei:
+        fresh.session("g", "gcn")
+    assert "manifest.json" in str(ei.value)
+
+
+def test_missing_npz_named_by_manifest_raises(data, gcn_params, tmp_path):
+    d = _saved_single(data, gcn_params, tmp_path)
+    npz = next(d.glob("step_*/shard_0.npz"))
+    npz.unlink()
+    fresh = _store(data, gcn_params, tmp_path)
+    with pytest.raises(ArtifactError) as ei:
+        fresh.session("g", "gcn")
+    assert "shard_0.npz" in str(ei.value)
+
+
+def test_missing_artifacts_still_recompile(data, gcn_params, tmp_path):
+    """No artifacts at all stays the silent rebuild path (None, not an
+    error) — robustness must not break cold starts."""
+    st = _store(data, gcn_params, tmp_path / "empty")
+    sess = st.session("g", "gcn")
+    assert sess is not None
+
+
+def test_intact_roundtrip_unaffected(data, gcn_params, tmp_path):
+    """The typed loader changes nothing for healthy artifacts: a second
+    store restores without recompiling and serves identically."""
+    _saved_single(data, gcn_params, tmp_path)
+    fresh = _store(data, gcn_params, tmp_path)
+    sess = fresh.session("g", "gcn")
+    assert sess.compile_count == 0        # restored, not rebuilt
+    st0 = _store(data, gcn_params, tmp_path / "other")
+    want = st0.session("g", "gcn").serve_subgraph(np.arange(4))
+    np.testing.assert_array_equal(sess.serve_subgraph(np.arange(4)), want)
+
+
+# ---------------------------------------------------- sharded artifacts -----
+
+def test_truncated_routing_json_raises_typed(data, gcn_params, tmp_path):
+    d = _saved_sharded(data, gcn_params, tmp_path)
+    FaultInjector().corrupt_artifact(d / "routing.json", keep_bytes=30)
+    fresh = _store(data, gcn_params, tmp_path)
+    with pytest.raises(ArtifactError) as ei:
+        fresh.sharded_session("g", "gcn", 2)
+    assert "routing.json" in str(ei.value)
+
+
+def test_corrupt_routing_field_names_field(data, gcn_params, tmp_path):
+    d = _saved_sharded(data, gcn_params, tmp_path)
+    sidecar = json.loads((d / "routing.json").read_text())
+    sidecar["routing"] = {"wrong": 1}      # structurally broken table
+    (d / "routing.json").write_text(json.dumps(sidecar))
+    fresh = _store(data, gcn_params, tmp_path)
+    with pytest.raises(ArtifactError) as ei:
+        fresh.sharded_session("g", "gcn", 2)
+    assert ei.value.field == "routing"
+
+
+def test_truncated_shard_checkpoint_raises_typed(data, gcn_params,
+                                                 tmp_path):
+    d = _saved_sharded(data, gcn_params, tmp_path)
+    npz = next(d.glob("step_*/shard_0.npz"))
+    FaultInjector().corrupt_artifact(npz)
+    fresh = _store(data, gcn_params, tmp_path)
+    with pytest.raises(ArtifactError) as ei:
+        fresh.sharded_session("g", "gcn", 2)
+    assert "shard_0.npz" in str(ei.value)

@@ -1,0 +1,463 @@
+"""Replica-tier tests: fault injection, health protocol, bounded retry,
+graceful drain, front-door failover, and live reshard.
+
+The acceptance bars (chaos): kill a replica mid-wave at P=2 replicas x 2
+shards -> every accepted query completes on a survivor, the survivors'
+``batch_log`` replays bit-exact against the single-host session, and the
+survivors take zero steady-state recompiles. Live reshard P=2 -> P=4 under
+load -> zero dropped queries and bit-exact answers on both sides of the
+swap.
+"""
+import time
+
+import numpy as np
+import jax
+import pytest
+
+from repro.graphs.datasets import make_dataset
+from repro.models import gnn
+from repro.serve import (AdmissionController, FaultInjector, FrontDoor,
+                         GNNServeEngine, GraphStore, HealthMonitor,
+                         HealthPolicy, InjectedFault, Resharder,
+                         ShardedServeEngine, SpanTracer, TenantPolicy,
+                         build_replica)
+from repro.serve.sharded.planner import validate_reshard
+from repro.serve.sharded.routing import RoutingTable
+
+jax.config.update("jax_platform_name", "cpu")
+
+HIDDEN = 16
+BATCH = 8
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_dataset("cora", seed=0, scale=0.05)
+
+
+@pytest.fixture(scope="module")
+def gcn_params(data):
+    key = jax.random.PRNGKey(0)
+    return gnn.init_gcn(key, data.x.shape[1], HIDDEN, data.n_classes)
+
+
+@pytest.fixture(scope="module")
+def models(gcn_params):
+    return {"gcn": ("gcn", gcn_params)}
+
+
+@pytest.fixture(scope="module")
+def single_session(data, gcn_params):
+    st = GraphStore(max_batch=BATCH)
+    st.register_graph("g", data)
+    st.register_model("gcn", "gcn", gcn_params)
+    return st.session("g", "gcn")
+
+
+def _replay_bit_exact(engine, single):
+    """PR-4 replay oracle: every logged batch's composition re-served on
+    the single-host session must reproduce the answers bit-for-bit."""
+    assert engine.batch_log, "nothing served to replay"
+    for batch in engine.batch_log:
+        seeds = np.asarray([q.node for q in batch], np.int64)
+        want = np.asarray(single.serve_subgraph(seeds))
+        for i, q in enumerate(batch):
+            np.testing.assert_array_equal(np.asarray(q.logits), want[i])
+
+
+# --------------------------------------------------------- fault seam ------
+
+def test_fault_injector_counted_and_cleared():
+    f = FaultInjector(seed=0)
+    f.fail_next("launch", 2)
+    for _ in range(2):
+        with pytest.raises(InjectedFault):
+            f.check("launch")
+    f.check("launch")                       # disarmed after n fires
+    f.fail("extract", rate=1.0)
+    with pytest.raises(InjectedFault):
+        f.check("extract")
+    f.clear("extract")
+    f.check("extract")
+    assert f.snapshot()["fired"] == {"launch": 2, "extract": 1}
+
+
+def test_fault_injector_scoped_rules():
+    f = FaultInjector(seed=0)
+    f.fail_next("extract", 1, scope="r1")
+    f.check("extract", scope="r0")          # other replica: untouched
+    with pytest.raises(InjectedFault):
+        f.check("extract", scope="r1")
+
+
+def test_fault_injector_seeded_rates_reproducible():
+    outcomes = []
+    for _ in range(2):
+        f = FaultInjector(seed=7)
+        f.fail("complete", rate=0.5)
+        row = []
+        for _ in range(32):
+            try:
+                f.check("complete")
+                row.append(0)
+            except InjectedFault:
+                row.append(1)
+        outcomes.append(row)
+    assert outcomes[0] == outcomes[1]
+    assert 0 < sum(outcomes[0]) < 32
+
+
+def test_fault_injector_kill_and_heartbeat_drop():
+    f = FaultInjector(seed=0)
+    f.kill("r1")
+    assert f.is_killed("r1") and not f.is_killed("r0")
+    f.revive("r1")
+    assert not f.is_killed("r1")
+    f.drop_heartbeats("r0", 2)
+    assert f.take_heartbeat_drop("r0")
+    assert f.take_heartbeat_drop("r0")
+    assert not f.take_heartbeat_drop("r0")
+
+
+def test_corrupt_artifact_truncates(tmp_path):
+    p = tmp_path / "blob.bin"
+    p.write_bytes(b"x" * 100)
+    FaultInjector().corrupt_artifact(p)
+    assert p.read_bytes() == b"x" * 50
+
+
+# ----------------------------------------------------- health protocol ------
+
+def test_health_deadline_and_recovery_hysteresis():
+    hm = HealthMonitor(HealthPolicy(deadline_s=1.0, recovery_beats=2))
+    hm.register("r0", now=0.0)
+    assert hm.check(now=0.5) == []
+    assert hm.check(now=2.0) == ["r0"]      # missed the deadline
+    assert not hm.healthy("r0")
+    assert hm.check(now=3.0) == []          # already down: not "newly"
+    assert hm.beat("r0", ok=True, now=3.1) is None   # 1 good beat: not yet
+    assert hm.beat("r0", ok=True, now=3.2) == "up"   # hysteresis satisfied
+    assert hm.healthy("r0")
+
+
+def test_health_fault_threshold():
+    hm = HealthMonitor(HealthPolicy(fault_threshold=3))
+    hm.register("r0", now=0.0)
+    assert not hm.fault("r0", "boom", now=0.1)
+    assert not hm.fault("r0", "boom", now=0.2)
+    assert hm.fault("r0", "boom", now=0.3)   # threshold crossed
+    assert not hm.healthy("r0")
+    hm.register("r1", now=0.0)
+    hm.fault("r1", "boom", now=0.1)
+    hm.served("r1")                          # success resets the run
+    assert not hm.fault("r1", "boom", now=0.2)
+    assert not hm.fault("r1", "boom", now=0.3)
+
+
+# ------------------------------------------- bounded retry / poison query ---
+
+def _engine(data, gcn_params, **kw):
+    st = GraphStore(max_batch=BATCH)
+    st.register_graph("g", data)
+    st.register_model("gcn", "gcn", gcn_params)
+    return GNNServeEngine(st, mode="subgraph", **kw)
+
+
+def test_transient_fault_retries_to_success(data, gcn_params,
+                                            single_session):
+    faults = FaultInjector(seed=0)
+    eng = _engine(data, gcn_params, faults=faults, retry_backoff_s=0.001)
+    eng.warmup("g", "gcn")
+    faults.fail_next("extract", 1)
+    qs = eng.submit_many("g", "gcn", np.arange(6))
+    with pytest.raises(InjectedFault):
+        eng.tick()                           # the injected failure surfaces
+    eng.run_until_drained()
+    assert all(q.done for q in qs)
+    assert eng.metrics.requeues == 1 and eng.metrics.retry_shed == 0
+    assert all(q.attempts == 1 for q in qs)
+    _replay_bit_exact(eng, single_session)
+
+
+def test_poison_query_typed_shed_after_max_retries(data, gcn_params):
+    faults = FaultInjector(seed=0)
+    eng = _engine(data, gcn_params, faults=faults, max_retries=3,
+                  retry_backoff_s=0.001, retry_backoff_max_s=0.01)
+    eng.warmup("g", "gcn")
+    faults.fail("launch", rate=1.0)          # permanent: a poison batch
+    qs = eng.submit_many("g", "gcn", np.arange(4))
+    report = eng.drain(timeout_s=10.0)       # drain absorbs the failures
+    assert all(q.failed for q in qs)
+    for q in qs:
+        assert q.failure.reason == "max_retries"
+        assert q.failure.stage == "launch"
+        assert q.failure.attempts == 4       # max_retries exceeded by one
+        assert "InjectedFault" in q.failure.error
+        assert q.settled and not q.done
+    assert eng.metrics.retry_shed == 4
+    assert report.failed == 4 and report.answered == 0
+    # the engine is NOT wedged: clear the fault, serve again
+    faults.clear()
+    eng.resume_intake()
+    q2 = eng.submit("g", "gcn", 0)
+    eng.run_until_drained()
+    assert q2.done
+    ev = [w for w in eng.tracer.warning_events() if w.name == "retry_exhausted"]
+    assert ev and ev[0].attrs["stage"] == "launch"
+
+
+def test_backoff_does_not_starve_other_queues(data, gcn_params):
+    """A poison tenant's backoff window must leave other tenants' queues
+    servable in the meantime."""
+    faults = FaultInjector(seed=0)
+    adm = AdmissionController(policies={
+        "bad": TenantPolicy(), "good": TenantPolicy()})
+    eng = _engine(data, gcn_params, faults=faults, admission=adm,
+                  max_retries=5, retry_backoff_s=0.2,
+                  retry_backoff_max_s=0.5)
+    eng.warmup("g", "gcn")
+    faults.fail("extract", rate=1.0)
+    bad = eng.submit("g", "gcn", 1, tenant="bad")
+    with pytest.raises(InjectedFault):
+        eng.tick()                           # bad's queue enters backoff
+    faults.clear()
+    good = eng.submit_many("g", "gcn", np.arange(4), tenant="good")
+    eng.tick()                               # served DESPITE bad's backoff
+    assert all(q.done for q in good)
+    eng.run_until_drained()                  # backoff expires; bad recovers
+    assert bad.done
+
+
+# ------------------------------------------------------ graceful drain ------
+
+def test_drain_answers_backlog(data, gcn_params):
+    eng = _engine(data, gcn_params)
+    eng.warmup("g", "gcn")
+    qs = eng.submit_many("g", "gcn", np.arange(10))
+    report = eng.drain(timeout_s=30.0)
+    assert all(q.done for q in qs)
+    assert report.answered == 10 and report.shed == 0
+    assert not report.timed_out
+    # intake is stopped: a post-drain submit is typed-shed
+    late = eng.submit("g", "gcn", 0)
+    assert late.rejected and "draining" in late.admission.reason
+    eng.resume_intake()
+    q = eng.submit("g", "gcn", 0)
+    eng.run_until_drained()
+    assert q.done
+
+
+def test_drain_timeout_typed_sheds_queued(data, gcn_params):
+    faults = FaultInjector(seed=0)
+    eng = _engine(data, gcn_params, faults=faults, max_retries=1000,
+                  retry_backoff_s=0.05, retry_backoff_max_s=0.2)
+    eng.warmup("g", "gcn")
+    faults.fail("extract", rate=1.0)         # nothing can be served
+    qs = eng.submit_many("g", "gcn", np.arange(6))
+    t0 = time.perf_counter()
+    report = eng.drain(timeout_s=0.3)
+    assert time.perf_counter() - t0 < 5.0    # terminates promptly
+    assert report.timed_out and report.shed == 6 and report.answered == 0
+    assert eng.metrics.drain_shed == 6
+    for q in qs:
+        assert q.settled and not q.done
+        assert "drain timeout" in q.admission.reason
+    assert eng.pending == 0
+    ev = [w for w in eng.tracer.warning_events() if w.name == "drain"]
+    assert ev and ev[-1].attrs["timed_out"]
+
+
+# ----------------------------------------------------------- front door -----
+
+def _tier(data, models, n_replicas=2, n_shards=2, spread="query",
+          deadline_s=0.05, **engine_kw):
+    faults = FaultInjector(seed=0)
+    tracer = SpanTracer()
+    reps = [build_replica(f"r{i}", data, models, n_shards=n_shards,
+                          faults=faults, tracer=tracer, max_batch=BATCH,
+                          mode="subgraph", retry_backoff_s=0.001,
+                          **engine_kw)
+            for i in range(n_replicas)]
+    fd = FrontDoor(reps, faults=faults, tracer=tracer, spread=spread,
+                   policy=HealthPolicy(deadline_s=deadline_s))
+    for r in reps:
+        r.engine.warmup("g", "gcn")
+    return fd, reps, faults
+
+
+def test_front_door_owns_admission(data, models):
+    fd, reps, _ = _tier(data, models, n_shards=0)
+    fd.admission.set_policy("t0", TenantPolicy(max_queue_depth=2))
+    qs = [fd.submit("g", "gcn", i, tenant="t0") for i in range(5)]
+    rejected = [q for q in qs if q.rejected]
+    assert rejected, "front-door backlog cap never fired"
+    assert all(q.inner is None for q in rejected)   # never reached a replica
+    fd.run_until_drained()
+    assert all(q.done for q in qs if not q.rejected)
+    snap = fd.snapshot()["metrics"]["tenants"]["t0"]
+    assert snap["shed"] == len(rejected)
+
+
+def test_front_door_version_pinning(data, models):
+    fd, reps, _ = _tier(data, models, n_shards=0)
+    orig = data.x.copy()        # GraphData is shared module state: restore
+    try:
+        q0 = fd.submit("g", "gcn", 0)
+        v0 = q0.pinned_version
+        fd.run_until_drained()              # q0 answered pre-update
+        # negated features: sign-binarized models see every bit flip
+        fd.update_features("g", -data.x)
+        q1 = fd.submit("g", "gcn", 0)
+        assert q1.pinned_version == v0 + 1
+        assert all(r.graph_version("g") == q1.pinned_version
+                   for r in reps)
+        fd.run_until_drained()
+        assert q0.done and q1.done
+        # q1 served post-update: answers must differ from the stale pass
+        assert not np.array_equal(np.asarray(q0.logits),
+                                  np.asarray(q1.logits))
+    finally:
+        fd.update_features("g", orig)
+
+
+def test_front_door_tenant_spread_is_stable(data, models):
+    fd, reps, _ = _tier(data, models, n_shards=0, spread="tenant")
+    for tenant in ("alice", "bob", "carol"):
+        qs = [fd.submit("g", "gcn", i, tenant=tenant) for i in range(4)]
+        assert len({q.replica for q in qs}) == 1   # one replica per tenant
+    fd.run_until_drained()
+
+
+def test_chaos_kill_replica_mid_wave(data, models, single_session):
+    """THE acceptance chaos test: P=2 replicas x 2 shards, kill r1 while a
+    wave is in flight -> every accepted query completes on the survivor,
+    the replayed batch_log is bit-exact, and the survivor takes zero
+    steady-state recompiles."""
+    fd, reps, faults = _tier(data, models, n_replicas=2, n_shards=2,
+                             spread="query", deadline_s=0.05)
+    survivor = reps[0].engine
+    rng = np.random.default_rng(1)
+    qs = fd.submit_many("g", "gcn", rng.integers(0, data.n_nodes, size=48))
+    accepted = [q for q in qs if not q.rejected]
+    assert {q.replica for q in accepted} == {"r0", "r1"}
+    for _ in range(3):
+        fd.tick()                            # both replicas mid-wave
+    compiles_before = survivor.compile_count
+    faults.kill("r1")
+    time.sleep(0.06)                         # let the deadline lapse
+    fd.run_until_drained(max_ticks=20_000)
+    assert fd.pending == 0
+    assert all(q.done for q in accepted), "accepted queries lost in chaos"
+    assert fd.failovers == 1 and fd.failover_queries > 0
+    moved = [q for q in accepted if q.failovers > 0]
+    assert moved and all(q.replica == "r0" for q in moved)
+    # bit-exact replay of everything both replicas actually served
+    _replay_bit_exact(reps[0].engine, single_session)
+    _replay_bit_exact(reps[1].engine, single_session)
+    # zero steady-state recompiles on the survivor through the failover
+    assert survivor.compile_count == compiles_before
+    kinds = [w.name for w in fd.tracer.warning_events()]
+    assert "replica_unhealthy" in kinds and "failover" in kinds
+
+
+def test_replica_recovery_readmission(data, models):
+    fd, reps, faults = _tier(data, models, n_replicas=2, n_shards=0,
+                             spread="query", deadline_s=0.02)
+    qs = fd.submit_many("g", "gcn", np.arange(8))
+    faults.kill("r1")
+    time.sleep(0.03)
+    fd.run_until_drained(max_ticks=10_000)
+    assert all(q.done for q in qs if not q.rejected)
+    assert not fd.health.healthy("r1")
+    faults.revive("r1")
+    for _ in range(4):                       # recovery_beats good beats
+        fd.tick()
+    assert fd.health.healthy("r1")
+    assert fd.readmissions == 1
+    qs2 = fd.submit_many("g", "gcn", np.arange(16))
+    fd.run_until_drained(max_ticks=10_000)
+    assert all(q.done for q in qs2 if not q.rejected)
+    assert {q.replica for q in qs2 if q.done} == {"r0", "r1"}
+    assert "replica_recovered" in [w.name for w in fd.tracer.warning_events()]
+
+
+# ---------------------------------------------------------- live reshard ----
+
+def test_validate_reshard_rejects_bad_covers():
+    ok_old = RoutingTable(np.array([0, 5, 10], np.int64))
+    ok_new = RoutingTable(np.array([0, 2, 5, 8, 10], np.int64))
+    validate_reshard(ok_old, ok_new, 10)
+    with pytest.raises(ValueError, match="covers"):
+        validate_reshard(ok_old, RoutingTable(np.array([0, 5, 9],
+                                                       np.int64)), 10)
+    with pytest.raises(ValueError, match="monotone"):
+        validate_reshard(ok_old, RoutingTable(np.array([0, 7, 5, 10],
+                                                       np.int64)), 10)
+
+
+def test_live_reshard_under_load(data, models, single_session, tmp_path):
+    """Reshard P=2 -> P=4 while queries are in flight: zero drops, both
+    engines' batch logs bit-exact, and the swapped-in engine matches a
+    freshly built P=4 stack bit-for-bit."""
+    fd, reps, _ = _tier(data, models, n_replicas=1, n_shards=2,
+                        spread="query", deadline_s=10.0)
+    handle = reps[0]
+    old_engine = handle.engine
+    rng = np.random.default_rng(2)
+    # steady window first: the reshard blip baseline
+    warm = fd.submit_many("g", "gcn",
+                          rng.integers(0, data.n_nodes, size=24))
+    fd.run_until_drained(max_ticks=20_000)
+    assert all(q.done for q in warm if not q.rejected)
+    steady_p99 = float(np.percentile(
+        [q.latency_s for q in warm if q.done], 99))
+    pre = fd.submit_many("g", "gcn", rng.integers(0, data.n_nodes, size=24))
+    for _ in range(2):
+        fd.tick()                            # old engine mid-wave
+    rs = Resharder(handle, "g", "gcn", 4, artifact_dir=tmp_path,
+                   drain_timeout_s=30.0, tracer=fd.tracer)
+    rs.prepare(block=False)                  # P' builds in the background
+    while not rs.ready:
+        fd.tick()                            # old engine keeps serving
+    report = rs.swap()                       # old backlog drains on P=2
+    assert report.from_shards == 2 and report.to_shards == 4
+    assert report.drain.shed == 0            # zero dropped queries
+    assert handle.engine is not old_engine
+    assert handle.engine.n_shards == 4
+    post = fd.submit_many("g", "gcn",
+                          rng.integers(0, data.n_nodes, size=24))
+    fd.run_until_drained(max_ticks=20_000)
+    assert all(q.done for q in pre + post if not q.rejected)
+    assert fd.pending == 0
+    # p99 of the queries in flight across the swap stays inside the blip
+    # bound: < max(5x steady p99, 1s noise floor at smoke scale)
+    blip_p99 = float(np.percentile(
+        [q.latency_s for q in pre + post if q.done], 99))
+    assert blip_p99 < max(5.0 * steady_p99, 1.0)
+    # bit-exactness on BOTH sides of the swap, and vs a fresh P=4 build
+    _replay_bit_exact(old_engine, single_session)
+    _replay_bit_exact(handle.engine, single_session)
+    fresh = GraphStore(max_batch=BATCH)
+    fresh.register_graph("g", data)
+    fresh.register_model("gcn", "gcn", models["gcn"][1])
+    fresh_p4 = fresh.sharded_session("g", "gcn", 4)
+    for batch in handle.engine.batch_log:
+        seeds = np.asarray([q.node for q in batch], np.int64)
+        want = np.asarray(fresh_p4.serve_subgraph(seeds))
+        for i, q in enumerate(batch):
+            np.testing.assert_array_equal(np.asarray(q.logits), want[i])
+    # the reshard artifacts round-tripped through the consistency gate
+    assert (tmp_path / "g__gcn__P2" / "routing.json").exists()
+    phases = [w.attrs.get("phase") for w in fd.tracer.warning_events()
+              if w.name == "reshard"]
+    assert phases == ["prepared", "swap_begin", "swap_end"]
+
+
+def test_front_door_reshard_convenience(data, models):
+    fd, reps, _ = _tier(data, models, n_replicas=1, n_shards=2,
+                        spread="query", deadline_s=10.0)
+    qs = fd.submit_many("g", "gcn", np.arange(12))
+    report = fd.reshard("r0", "g", "gcn", 4)
+    assert report.to_shards == 4 and report.drain.shed == 0
+    fd.run_until_drained(max_ticks=10_000)
+    assert all(q.done for q in qs if not q.rejected)
