@@ -10,7 +10,8 @@ knows about under tolerance bands:
     ``op_reduction`` (the fused kernels' traced-op collapse) /
     ``dispatch_reduction`` (multi-bucket co-launch): a drop beyond the
     warn band is a warning, beyond the hard band a failure.
-  * **lower-is-better** — ``p50_ms`` / ``p99_ms`` / ``halo_bytes`` /
+  * **lower-is-better** — ``p50_ms`` / ``p99_ms`` / ``ttft_p50_ms`` /
+    ``ttft_p99_ms`` (token serving time-to-first-token) / ``halo_bytes`` /
     ``serve_x_bytes_halo_aware`` / ``ops_per_layer`` /
     ``layer_latency_ms``: a growth beyond the bands likewise.
   * **zero-tolerance** — ``steady_state_compiles`` (the
@@ -51,7 +52,8 @@ HIGHER_BETTER = {"qps", "qps_pipelined", "qps_fifo_serial",
                  "halo_bytes_saved_measured", "overlap_ratio",
                  "cost_spearman_rho", "op_reduction", "dispatch_reduction",
                  "availability"}
-LOWER_BETTER = {"p50_ms", "p99_ms", "halo_bytes", "serve_x_bytes_halo_aware",
+LOWER_BETTER = {"p50_ms", "p99_ms", "ttft_p50_ms", "ttft_p99_ms",
+                "halo_bytes", "serve_x_bytes_halo_aware",
                 "ops_per_layer", "layer_latency_ms"}
 ZERO_TOLERANCE = {"steady_state_compiles", "launches_per_layer_fused",
                   "dropped_queries"}
@@ -67,7 +69,7 @@ MIN_RHO = 0.5
 def _comparable(key: str, base: float, path: str = "") -> bool:
     if key == "layer_latency_ms":
         return base >= MIN_LATENCY_MS
-    if key in ("p50_ms", "p99_ms"):
+    if key in ("p50_ms", "p99_ms", "ttft_p50_ms", "ttft_p99_ms"):
         # per-stage breakdowns are max-of-a-handful-of-batches at smoke
         # scale — only gate them once they are macroscopic
         if "batch_breakdown" in path:

@@ -26,13 +26,14 @@ def main() -> None:
 
     from . import (bench_fig4, bench_gnn_tables, bench_grad_compress,
                    bench_memory, bench_replica, bench_serve_gnn,
-                   bench_sharded_serve)
+                   bench_serve_llm, bench_sharded_serve)
     sections = [
         ("gnn_tables", bench_gnn_tables.run),     # Tables 3, 4, 5
         ("memory", bench_memory.run),             # Peak-Mem columns
         ("fig4", bench_fig4.run),                 # kernel profile proxy
         ("grad_compress", bench_grad_compress.run),
         ("serve_gnn", bench_serve_gnn.run),       # serving QPS/latency
+        ("serve_llm", bench_serve_llm.run),       # token serving tier
         ("sharded_serve", bench_sharded_serve.run),  # partitioned serving
         ("replica", bench_replica.run),           # fault-tolerant tier
     ]

@@ -352,3 +352,29 @@ def decode_step(params, cfg: ModelConfig, cache: dict, tokens: jax.Array,
     new_cache = dict(cache)
     new_cache["layers"] = new_layers
     return logits, new_cache
+
+
+def decode_chunk(params, cfg: ModelConfig, cache: dict, tokens: jax.Array,
+                 pos0: jax.Array):
+    """``T`` single-token decode steps fused into one program: tokens
+    (B, T), pos0 the position of tokens[:, 0] -> (logits (B, T, V),
+    new_cache).
+
+    Bit-exact with a python loop of :func:`decode_step` by construction —
+    the scan body IS ``decode_step``, so every step runs the exact
+    single-token kernels (including the SSM blocks' exact recurrent branch,
+    not the O(T^2) chunked prefill path). One compile covers any decode
+    length that scans the same ``T``, which is what lets the token serving
+    tier hold steady-state recompiles at zero across varied prompt/decode
+    lengths."""
+
+    def body(c, xs):
+        tok, pos = xs
+        logits, c = decode_step(params, cfg, c, tok[:, None], pos)
+        return c, logits[:, 0]
+
+    t = tokens.shape[1]
+    positions = pos0 + jnp.arange(t, dtype=jnp.int32)
+    new_cache, logits = jax.lax.scan(body, cache,
+                                     (jnp.swapaxes(tokens, 0, 1), positions))
+    return jnp.swapaxes(logits, 0, 1), new_cache

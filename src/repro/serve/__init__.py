@@ -1,8 +1,16 @@
 """Serving subsystem.
 
-``engine``       — transformer continuous-batching serve loop (LLM path).
+``adapters``     — ModelFamilyAdapter seam: GNNAdapter + TokenAdapter
+                   implement quantize / traced serve body / bucket shaping
+                   / state extraction per family; the core stays generic.
 ``session_core`` — shared compile/calibrate/bucketed-serve machinery,
                    including the PreparedBatch extract-stage objects.
+``token_session``— TokenSession / TokenStore: chunked autoregressive
+                   decode over the serving core (binary transformer +
+                   SSM), pow2-bucketed cache lengths.
+``token_engine`` — TokenServeEngine: the LLM decode path on the same
+                   scheduler as the GNN engines (admission, cost, spans).
+``engine``       — DEPRECATED compatibility shim over ``token_session``.
 ``admission``    — multi-tenant admission control (TenantPolicy token
                    buckets, typed accept/throttle/shed decisions) + the
                    weighted virtual-time scheduler of the engines.
@@ -32,6 +40,7 @@
                    health-checked failover, deterministic fault injection,
                    live reshard (see ``repro.serve.replica``).
 """
+from .adapters import GNNAdapter, ModelFamilyAdapter, TokenAdapter
 from .admission import (AdmissionController, AdmissionDecision,
                         DEFAULT_TENANT, TenantPolicy)
 from .cost import CostEstimate, CostEstimator, spearman_rho
@@ -44,6 +53,8 @@ from .metrics import LatencyStats, ServeMetrics, TenantMetrics
 from .session_core import ArtifactError
 from .sharded import (ShardedGraphSession, ShardedServeEngine, ShardPlan,
                       ShardPlanner)
+from .token_engine import TokenQuery, TokenServeEngine
+from .token_session import TokenPreparedBatch, TokenSession, TokenStore
 from .trace import (BatchTrace, RecompileWatchdog, SpanTracer,
                     TransferWatchdog, WarningEvent)
 from .replica import (FaultInjector, FrontDoor, HealthMonitor,
@@ -61,6 +72,9 @@ __all__ = [
     "CostEstimate", "CostEstimator", "spearman_rho",
     "SLOPolicy", "SLOTracker",
     "ArtifactError", "DrainReport", "QueryFailure",
+    "ModelFamilyAdapter", "GNNAdapter", "TokenAdapter",
+    "TokenSession", "TokenStore", "TokenPreparedBatch",
+    "TokenServeEngine", "TokenQuery",
     "FaultInjector", "InjectedFault", "FrontDoor", "ReplicaHandle",
     "RoutedQuery", "build_replica", "HealthMonitor", "HealthPolicy",
     "Resharder", "ReshardReport",

@@ -187,6 +187,14 @@ class CostEstimator:
         self._note_estimate(est)
         return est
 
+    def estimate_flat(self, units: float) -> CostEstimate:
+        """Predict a query whose cost is already a unit count (the token
+        engine's prompt+decode length) — no topology features, but the
+        estimate still feeds the whale EWMA and calibration streams."""
+        est = CostEstimate(units=max(float(units), 1.0))
+        self._note_estimate(est)
+        return est
+
     def _note_estimate(self, est: CostEstimate) -> None:
         self.queries_estimated += 1
         a = self.ewma_alpha

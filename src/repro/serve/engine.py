@@ -1,23 +1,31 @@
-"""Batched serving engine: continuous-batching-style request scheduler over
-prefill + decode steps (the inference-side end-to-end driver).
+"""DEPRECATED — thin compatibility shim over the token serving tier.
 
-Requests join a waiting queue; free cache slots are claimed, the prompt is
-prefilled into the slot's KV/state, and every engine tick decodes ONE token
-for all live slots (decode is batched across requests — the decode_32k shape
-of the dry-run). Finished requests free their slots. Single-host here;
-the pjit shardings of serve_step make the same loop pod-scale.
+The original slot-based continuous-batching loop that lived here (prefill
+token-by-token into shared cache slots, one shared decode position per
+tick) predates the family-adapter serving core. Token serving now lives in
+:mod:`repro.serve.token_session` / :mod:`repro.serve.token_engine`: the
+same scheduler the GNN engines run (queues, admission, cost attribution,
+span tracing) over chunked exact-``decode_step`` launches with pow2
+bucketed cache shapes (zero steady-state recompiles).
+
+This module keeps the old names importable: :class:`Request` is unchanged,
+and :class:`ServeEngine` preserves the submit/tick/run_until_done surface
+by routing batches through a :class:`~repro.serve.token_session.
+TokenSession` — which also fixes the old loop's shared-position decode
+(every slot advanced at the batch-max position, misaligning heterogeneous
+prompt lengths). New code should use
+:class:`~repro.serve.token_engine.TokenServeEngine` directly.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+import warnings
+from typing import List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import transformer
+from repro.serve.token_session import TokenSession
 
 
 @dataclasses.dataclass
@@ -30,81 +38,48 @@ class Request:
 
 
 class ServeEngine:
+    """Compatibility wrapper: the old engine surface over a TokenSession."""
+
     def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
                  max_len: int = 512, eos_id: int = -1):
+        warnings.warn(
+            "repro.serve.engine.ServeEngine is deprecated; use "
+            "repro.serve.token_engine.TokenServeEngine (or TokenSession) "
+            "instead", DeprecationWarning, stacklevel=2)
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.eos_id = eos_id
-        self.cache = transformer.init_cache(cfg, max_batch, max_len)
-        self.slot_pos = np.zeros(max_batch, np.int32)
-        self.slot_live = np.zeros(max_batch, bool)
-        self.slot_req: List[Optional[Request]] = [None] * max_batch
         self.waiting: List[Request] = []
         self.finished: List[Request] = []
-
-        self._decode = jax.jit(
-            lambda p, c, t, pos: transformer.decode_step(p, cfg, c, t, pos))
+        self._session = TokenSession("compat", cfg, params,
+                                     max_batch=max_batch, max_len=max_len,
+                                     eos_id=eos_id)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
         req.out_tokens = []
         self.waiting.append(req)
 
-    def _admit(self):
-        for slot in range(self.max_batch):
-            if self.slot_live[slot] or not self.waiting:
-                continue
-            req = self.waiting.pop(0)
-            req.slot = slot
-            # prefill token-by-token into this slot's cache region (decode
-            # path reused; a chunked prefill step is the production variant)
-            for i, tok in enumerate(req.prompt):
-                t = jnp.zeros((self.max_batch, 1), jnp.int32
-                              ).at[slot, 0].set(int(tok))
-                _, self.cache = self._decode(self.params, self.cache, t,
-                                             jnp.int32(i))
-            self.slot_pos[slot] = len(req.prompt)
-            self.slot_live[slot] = True
-            self.slot_req[slot] = req
-
     def tick(self) -> int:
-        """One engine iteration: admit + batched single-token decode."""
-        self._admit()
-        if not self.slot_live.any():
+        """One engine iteration: serve the next FIFO batch of waiting
+        requests through the token session's chunked decode."""
+        if not self.waiting:
             return 0
-        last = np.zeros((self.max_batch, 1), np.int32)
-        for slot in range(self.max_batch):
-            req = self.slot_req[slot]
-            if req is None:
-                continue
-            last[slot, 0] = (req.out_tokens[-1] if req.out_tokens
-                             else req.prompt[-1])
-        pos = int(self.slot_pos.max()) - 1
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(last), jnp.int32(pos + 1))
-        nxt = np.asarray(jnp.argmax(logits[:, -1, : self.cfg.vocab], axis=-1))
-        n_active = 0
-        for slot in range(self.max_batch):
-            req = self.slot_req[slot]
-            if req is None:
-                continue
-            req.out_tokens.append(int(nxt[slot]))
-            self.slot_pos[slot] += 1
-            n_active += 1
-            done = (len(req.out_tokens) >= req.max_new_tokens
-                    or int(nxt[slot]) == self.eos_id
-                    or self.slot_pos[slot] >= self.max_len - 1)
-            if done:
-                self.slot_live[slot] = False
-                self.slot_req[slot] = None
-                self.finished.append(req)
-        return n_active
+        batch = [self.waiting.pop(0)
+                 for _ in range(min(self.max_batch, len(self.waiting)))]
+        outs = self._session.run(
+            [np.asarray(r.prompt, np.int32) for r in batch],
+            [r.max_new_tokens for r in batch])
+        for r, toks in zip(batch, outs):
+            r.out_tokens = [int(t) for t in toks]
+            self.finished.append(r)
+        return len(batch)
 
     def run_until_done(self, max_ticks: int = 10_000):
         ticks = 0
-        while (self.waiting or self.slot_live.any()) and ticks < max_ticks:
+        while self.waiting and ticks < max_ticks:
             self.tick()
             ticks += 1
         return self.finished

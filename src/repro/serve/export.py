@@ -112,9 +112,13 @@ class _Registry:
     before that series' samples — the Prometheus text-format contract
     (samples of one metric must be contiguous, headers precede them)."""
 
-    def __init__(self):
+    def __init__(self, default_labels: Optional[dict] = None):
         # name -> [help, type, [(labels, value), ...]] in first-seen order
         self._metrics: dict = {}
+        # merged under every sample's labels — the model-family namespace
+        # ("gnn" / "transformer" / "ssm") that keeps engines of different
+        # families exported from one process off each other's series
+        self.default_labels = dict(default_labels or {})
 
     def add(self, name: str, value, labels: Optional[dict] = None,
             help_: str = "", type_: str = "gauge") -> None:
@@ -123,7 +127,8 @@ class _Registry:
             ent = self._metrics[name] = [help_, type_, []]
         elif help_ and not ent[0]:
             ent[0] = help_
-        ent[2].append((dict(labels or {}), float(value)))
+        ent[2].append((dict(self.default_labels, **(labels or {})),
+                       float(value)))
 
     def render(self) -> str:
         out: List[str] = []
@@ -143,8 +148,11 @@ def prometheus_text(snapshot: dict, tracer: Optional[SpanTracer] = None,
     textfile collector can ship as-is. Every series carries its
     ``# HELP``/``# TYPE`` headers; cost-model and SLO series appear when
     the snapshot includes them (engine constructed with an estimator /
-    tracker)."""
-    reg = _Registry()
+    tracker). When the snapshot names its model family every series gets a
+    ``family`` label, so scrapes from a GNN engine and a token engine in
+    the same process never collide."""
+    family = snapshot.get("family")
+    reg = _Registry(dict(family=family) if family else None)
     m = snapshot
 
     reg.add(f"{prefix}_queries_total", m.get("queries", 0),

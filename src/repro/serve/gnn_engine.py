@@ -151,6 +151,12 @@ class _Inflight:
 class GNNServeEngine:
     """Micro-batching scheduler over a :class:`GraphStore`'s sessions."""
 
+    # model-family namespace: stamped on the metrics snapshot (and from
+    # there onto every Prometheus series) and on watchdog warning events,
+    # so a GNN engine and a token engine exported from one process never
+    # collide. Subclasses override (TokenServeEngine: per-store kind).
+    family = "gnn"
+
     def __init__(self, store: GraphStore, max_batch: Optional[int] = None,
                  mode: str = "auto", full_cache_max_nodes: int = 200_000,
                  keep_finished: int = 100_000, pipeline_depth: int = 0,
@@ -180,7 +186,7 @@ class GNNServeEngine:
         # bit-exact vs serial launches. Needs pipeline_depth >= 2 to ever
         # coalesce; no effect on the serial (depth 0) loop.
         self.multi_bucket = bool(multi_bucket)
-        self.metrics = ServeMetrics()
+        self.metrics = ServeMetrics(family=self.family)
         self._queues: Dict[tuple, Deque[NodeQuery]] = {}
         self._next_qid = 0
         # queue-structure guard: the pipelined extract stage (pick + pop)
@@ -212,8 +218,10 @@ class GNNServeEngine:
         # buffer across engines.
         self.tracer = tracer if tracer is not None \
             else SpanTracer(enabled=trace)
-        self.recompile_watchdog = RecompileWatchdog(self.tracer)
-        self.transfer_watchdog = TransferWatchdog(self.tracer)
+        self.recompile_watchdog = RecompileWatchdog(self.tracer,
+                                                    family=self.family)
+        self.transfer_watchdog = TransferWatchdog(self.tracer,
+                                                  family=self.family)
         self._wired_sessions: set = set()
         # closed-loop cost/SLO observability (both opt-in; None preserves
         # the cost-unaware engine exactly): the estimator predicts each
@@ -266,11 +274,19 @@ class GNNServeEngine:
             raise ValueError(f"node {node} out of range for graph "
                              f"{graph!r} with {n} nodes")
         q = NodeQuery(graph=graph, model=model, node=node, tenant=tenant)
-        q.qid, self._next_qid = self._next_qid, self._next_qid + 1
-        key = self._queue_key(graph, model, node, tenant)
         # cost prediction is pure host work over cached topology statics —
         # never under the lock (first touch of a node walks its closure)
         q.cost = self._estimate_cost(graph, model, node)
+        return self._admit_enqueue(q, self._queue_key(graph, model, node,
+                                                      tenant))
+
+    def _admit_enqueue(self, q, key: tuple):
+        """Family-neutral intake tail shared by every engine's ``submit``:
+        stamp the qid, run admission under the queue lock, and enqueue on
+        acceptance. ``q`` needs the query protocol fields (tenant, cost,
+        admission, t_submit) and ``q.cost`` already estimated."""
+        tenant = q.tenant
+        q.qid, self._next_qid = self._next_qid, self._next_qid + 1
         charge = q.cost.units if q.cost is not None else 1.0
         with self._qlock:
             q.t_submit = time.perf_counter()
@@ -585,11 +601,7 @@ class GNNServeEngine:
             self._check_fault("extract")
             halo_token = self._trace_halo_begin(session) \
                 if tr is not None else None
-            seeds = np.asarray([q.node for q in batch], np.int64)
-            if self._use_full_cache(session):
-                result, prepared = session.full_logits()[seeds], None
-            else:
-                result, prepared = None, session.prepare_batch(seeds)
+            seeds, result, prepared = self._prepare_stage(session, batch)
             extract_s = time.perf_counter() - t0
             if tr is not None:
                 tr.full_cache = prepared is None
@@ -611,6 +623,17 @@ class GNNServeEngine:
         batch formation needs per-request metadata (the sharded engine's
         halo signatures) warms its caches here so the locked pop does no
         session work."""
+
+    def _prepare_stage(self, session, batch):
+        """Family-specific EXTRACT body: turn a popped batch into either an
+        immediate result (full-cache gather) or a launch-ready
+        ``PreparedBatch``; returns ``(seeds, result, prepared)`` with
+        exactly one of result/prepared set. The token engine overrides
+        this to stage prompt chunks instead of k-hop subgraphs."""
+        seeds = np.asarray([q.node for q in batch], np.int64)
+        if self._use_full_cache(session):
+            return seeds, session.full_logits()[seeds], None
+        return seeds, None, session.prepare_batch(seeds)
 
     def _launch_stage(self, inf: _Inflight) -> None:
         """COMPUTE head: dispatch the jitted forward(s). Async under jax
@@ -725,10 +748,8 @@ class GNNServeEngine:
             inf.trace.t_end = t_done
             self.tracer.commit(inf.trace)
             inf.trace = None
-        preds = np.argmax(logits, axis=-1)
-        for q, lg, p in zip(inf.batch, logits, preds):
-            q.logits = np.asarray(lg)
-            q.pred = int(p)
+        self._deliver(inf, logits)
+        for q in inf.batch:
             q.t_done = t_done
             self.metrics.queries += 1
             self.metrics.latency.record(q.latency_s)
@@ -743,6 +764,17 @@ class GNNServeEngine:
                                      latency_s=q.latency_s)
                 self.slo.check(t_done, self.admission)
         return len(inf.batch)
+
+    def _deliver(self, inf: _Inflight, result) -> None:
+        """Family-specific answer delivery: write each member query's
+        answer fields from the batch result. Node queries get their logits
+        row + argmax class; the token engine writes generated-token arrays
+        instead. Timing/metrics/finished bookkeeping stays in
+        :meth:`_complete_stage` — this only fills the answers."""
+        preds = np.argmax(result, axis=-1)
+        for q, lg, p in zip(inf.batch, result, preds):
+            q.logits = np.asarray(lg)
+            q.pred = int(p)
 
     # ------------------------------------------------------------- serve ----
     def _worker(self) -> concurrent.futures.ThreadPoolExecutor:

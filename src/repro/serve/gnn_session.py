@@ -48,7 +48,7 @@ from repro.checkpoint.checkpointer import Checkpointer
 from repro.core import frdc
 from repro.graphs import sampling
 from repro.graphs.datasets import GraphData
-from repro.serve import session_core
+from repro.serve import adapters, session_core
 from repro.serve.session_core import (  # re-exported (stable import path)
     FAMILIES, FAMILY_AGG_LAYERS, ServeCore, SessionPlan, bucket_pow2)
 
@@ -168,8 +168,9 @@ class CompiledGraphSession:
                           else self._build_full_adjacencies())
         node_cap = self._adj_full[next(iter(self._adj_full))].n_tile_rows \
             * frdc.TILE
+        self.adapter = adapters.GNNAdapter(plan)
         self.core = ServeCore(plan, qparams, max_batch, node_cap,
-                              use_pallas=use_pallas)
+                              use_pallas=use_pallas, adapter=self.adapter)
         self._jit_full, self._jit_full_frozen = self._make_full_fns()
 
     # ------------------------------------------------------------ build ----
@@ -279,10 +280,9 @@ class CompiledGraphSession:
         """Host-side k-hop extraction + subgraph FRDC build (no device work
         — also used by warmup to probe steady-state shapes cheaply)."""
         ex = sampling.extract_khop(self.graph.csr, uniq_seeds, self.khop)
-        fam = self.plan.family
-        dinv = self.graph.dinv_for(fam)
-        mats = session_core.sub_adjacency(
-            fam, ex.sub_nodes.size, ex.sub_edges,
+        dinv = self.graph.dinv_for(self.plan.family)
+        mats = self.adapter.sub_operands(
+            ex.sub_nodes.size, ex.sub_edges,
             None if dinv is None else dinv[ex.sub_nodes])
         return ex.sub_nodes, mats, ex.seed_pos
 

@@ -130,6 +130,11 @@ class ServeMetrics:
     double-buffered pipeline fully hides extraction behind the in-flight
     device computation.
     """
+    # model-family namespace ("gnn", "transformer", "ssm", ...): carried in
+    # the snapshot and merged as a ``family`` label onto every Prometheus
+    # series, so engines of different families exported from one process
+    # never collide on a series name.
+    family: str = "gnn"
     latency: LatencyStats = dataclasses.field(default_factory=LatencyStats)
     batch_latency: LatencyStats = dataclasses.field(
         default_factory=LatencyStats)
@@ -244,6 +249,7 @@ class ServeMetrics:
 
     def snapshot(self, extra: Optional[dict] = None) -> dict:
         out = dict(
+            family=self.family,
             queries=self.queries, batches=self.batches, qps=self.qps,
             full_cache_hits=self.full_cache_hits,
             subgraph_queries=self.subgraph_queries,

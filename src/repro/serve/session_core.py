@@ -614,21 +614,34 @@ class LayerExecutor:
 # ---------------------------------------------------------------------------
 
 class ServeCore:
-    """One jitted bucketed subgraph forward + its high-water shape buckets.
+    """One jitted bucketed forward + its high-water shape buckets.
 
-    Node and FRDC group counts are padded up to pow2 marks that only ever
-    grow (capped at ``node_cap``), so the jitted forward converges to one
-    steady padded shape after a short warmup and never recompiles in steady
-    state. ``compile_count`` counts jit traces (python side effect on trace)
-    and IS the verification counter. Both the single-host session and every
-    shard of a sharded session own exactly one of these.
+    The core owns the family-AGNOSTIC serving machinery: the jit cache and
+    its trace counter, the high-water pow2 buckets, async launch/finish,
+    and multi-bucket co-launch. What a launch actually computes is the
+    ``adapter``'s business (:class:`repro.serve.adapters.ModelFamilyAdapter`
+    — quantize, traced body, operand padding, result crop); when no adapter
+    is given a :class:`~repro.serve.adapters.GNNAdapter` is built from the
+    plan, which keeps every pre-existing call site bitwise unchanged.
+
+    For the GNN adapter: node and FRDC group counts are padded up to pow2
+    marks that only ever grow (capped at ``node_cap``), so the jitted
+    forward converges to one steady padded shape after a short warmup and
+    never recompiles in steady state. ``compile_count`` counts jit traces
+    (python side effect on trace) and IS the verification counter. Both the
+    single-host session and every shard of a sharded session own exactly
+    one of these; a token session owns one running its chunked decode.
     """
 
     NODE_BUCKET_FLOOR = 64
     GROUP_BUCKET_FLOOR = 16
 
     def __init__(self, plan: SessionPlan, qparams, max_batch: int,
-                 node_cap: int, use_pallas: bool = False):
+                 node_cap: int, use_pallas: bool = False, adapter=None):
+        if adapter is None:
+            from .adapters import GNNAdapter
+            adapter = GNNAdapter(plan)
+        self.adapter = adapter
         self.plan = plan
         self.qparams = qparams
         self.max_batch = max_batch
@@ -659,11 +672,7 @@ class ServeCore:
         return self._serve_one(x, bn, adjs, seeds)
 
     def _serve_one(self, x, bn, adjs, seeds):
-        n_pad = x.shape[0]
-        mats = {k: frdc_rebuild(v, n_pad, n_pad) for k, v in adjs.items()}
-        out = family_forward(self.plan, self.qparams, x, mats,
-                             use_pallas=self.use_pallas, bn_stats=bn)
-        return out[seeds]
+        return self.adapter.serve_body(self, x, bn, adjs, seeds)
 
     def _serve_many(self, batches):
         """K bucketed forwards UNROLLED into one jitted program (one device
@@ -677,17 +686,7 @@ class ServeCore:
                      for (x, bn, adjs, seeds) in batches)
 
     def _pad_mats(self, mats: Dict[str, frdc.FRDCMatrix], n_sub: int):
-        n_pad = bucket_pow2(max(n_sub, self._n_water),
-                            self.NODE_BUCKET_FLOOR, self.node_cap)
-        self._n_water = n_pad
-        adjs = {}
-        for k, m in mats.items():
-            wkey = (n_pad, k)
-            g_pad = max(self._g_water.get(wkey, 0),
-                        bucket_pow2(m.n_groups, self.GROUP_BUCKET_FLOOR))
-            self._g_water[wkey] = g_pad
-            adjs[k] = frdc_arrays(frdc.pad_frdc(m, n_pad, n_groups=g_pad))
-        return n_pad, adjs
+        return self.adapter.pad_operands(self, mats, n_sub)
 
     def stage(self, x_sub: np.ndarray, mats: Dict[str, frdc.FRDCMatrix],
               seed_pos: np.ndarray) -> "StagedBatch":
@@ -714,10 +713,7 @@ class ServeCore:
         if self._n_traces > c0 and self.on_trace is not None:
             # a NEW trace: report the offending shape key (the padded dims
             # that define the jit cache entry)
-            self.on_trace(dict(
-                n_pad=int(staged.x_pad.shape[0]),
-                groups={str(k): int(a["group_row"].shape[0])
-                        for k, a in staged.adjs.items()}))
+            self.on_trace(self.adapter.trace_shape(staged))
         return out
 
     def launch_many(self, entries: List[Tuple["StagedBatch", tuple]]
@@ -739,17 +735,14 @@ class ServeCore:
             for s, bn in entries)
         outs = self._jit_serve_many(batches)
         if self._n_traces > c0 and self.on_trace is not None:
-            self.on_trace(dict(
-                multi=len(entries),
-                n_pad=[int(s.x_pad.shape[0]) for s, _ in entries],
-                groups=[{str(k): int(a["group_row"].shape[0])
-                         for k, a in s.adjs.items()} for s, _ in entries]))
+            self.on_trace(self.adapter.trace_shape_many(
+                [s for s, _ in entries]))
         return list(outs)
 
     def finish(self, out_dev: jax.Array, staged: "StagedBatch") -> np.ndarray:
-        """COMPUTE-stage tail: block on the device result and crop the seed
-        rows."""
-        return np.asarray(out_dev)[:staged.n_seeds]
+        """COMPUTE-stage tail: block on the device result and crop it back
+        to host answers (GNN: the seed rows)."""
+        return self.adapter.finish(out_dev, staged)
 
     def run(self, x_sub: np.ndarray, mats: Dict[str, frdc.FRDCMatrix],
             seed_pos: np.ndarray, bn: tuple) -> np.ndarray:

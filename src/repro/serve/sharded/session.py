@@ -64,7 +64,7 @@ from repro.checkpoint.checkpointer import Checkpointer
 from repro.core import frdc
 from repro.graphs import sampling
 from repro.launch.mesh import make_shard_mesh
-from repro.serve import session_core
+from repro.serve import adapters, session_core
 from repro.serve.session_core import ServeCore, SessionPlan
 from . import halo as halo_mod
 from .executor import HostLayerExecutor, SpmdLayerExecutor
@@ -115,11 +115,14 @@ class ShardedGraphSession:
         self._jit_calibrate = None
         self._executor_obj: Optional[session_core.LayerExecutor] = None
         self.program = session_core.build_layer_program(plan, qparams)
-        # one bucketed serve core per shard; a routed subgraph can span the
-        # whole graph, so every core's node cap is the full padded graph
+        # one bucketed serve core per shard (all composing ONE stateless
+        # family adapter — the water marks live per core); a routed subgraph
+        # can span the whole graph, so every core's node cap is the full
+        # padded graph
         node_cap = -(-shard_plan.n_nodes // frdc.TILE) * frdc.TILE
+        self.adapter = adapters.GNNAdapter(plan)
         self.cores = [ServeCore(plan, qparams, max_batch, node_cap,
-                                use_pallas=use_pallas)
+                                use_pallas=use_pallas, adapter=self.adapter)
                       for _ in range(shard_plan.n_shards)]
         # observability callback cb(label, shape_dict), fanned out to every
         # per-shard core and (on build) the layer executor
@@ -318,9 +321,8 @@ class ShardedGraphSession:
         if dinv_blocks is not None:
             dinv_sub = halo_mod.gather_rows(dinv_blocks, self.routing,
                                             ex.sub_nodes)
-        mats = session_core.sub_adjacency(self.plan.family,
-                                          ex.sub_nodes.size, ex.sub_edges,
-                                          dinv_sub)
+        mats = self.adapter.sub_operands(ex.sub_nodes.size, ex.sub_edges,
+                                         dinv_sub)
         return ex.sub_nodes, mats, ex.seed_pos
 
     def prepare_batch(self, seeds: np.ndarray) -> session_core.PreparedBatch:

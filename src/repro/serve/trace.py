@@ -338,8 +338,10 @@ class RecompileWatchdog:
     steady-state recompile: counted, logged, and emitted as a structured
     ``recompile`` warning event carrying the offending shape key."""
 
-    def __init__(self, tracer: Optional[SpanTracer] = None):
+    def __init__(self, tracer: Optional[SpanTracer] = None,
+                 family: str = "gnn"):
         self.tracer = tracer
+        self.family = family
         self.armed = False
         self.steady_recompiles = 0
         self.last: Optional[dict] = None
@@ -360,10 +362,11 @@ class RecompileWatchdog:
         self.last = dict(label=label, shape=shape)
         log.warning("steady-state recompile in %s: shape=%s", label, shape)
         if self.tracer is not None:
-            self.tracer.warning("recompile", label=label, shape=shape)
+            self.tracer.warning("recompile", family=self.family,
+                                label=label, shape=shape)
 
     def snapshot(self) -> dict:
-        return dict(armed=self.armed,
+        return dict(armed=self.armed, family=self.family,
                     steady_recompiles=self.steady_recompiles,
                     last=self.last)
 
@@ -382,8 +385,9 @@ class TransferWatchdog:
     ``transfer`` warning events."""
 
     def __init__(self, tracer: Optional[SpanTracer] = None,
-                 max_events: int = 16):
+                 max_events: int = 16, family: str = "gnn"):
         self.tracer = tracer
+        self.family = family
         self.max_events = max_events
         self.device_in_extract = 0     # staged arrays resident on device
         self.host_sync_in_launch = 0   # launch returned concrete host arrays
@@ -391,7 +395,8 @@ class TransferWatchdog:
     def _emit(self, count: int, kind: str, **attrs) -> None:
         log.warning("unexpected transfer (%s): %s", kind, attrs)
         if self.tracer is not None and count <= self.max_events:
-            self.tracer.warning("transfer", kind=kind, **attrs)
+            self.tracer.warning("transfer", family=self.family,
+                                kind=kind, **attrs)
 
     def check_prepared(self, prepared) -> None:
         """EXTRACT-purity check on a PreparedBatch about to launch."""
@@ -427,5 +432,6 @@ class TransferWatchdog:
             raise
 
     def snapshot(self) -> dict:
-        return dict(device_in_extract=self.device_in_extract,
+        return dict(family=self.family,
+                    device_in_extract=self.device_in_extract,
                     host_sync_in_launch=self.host_sync_in_launch)

@@ -124,6 +124,48 @@ def test_rwkv_wkv_chunked_matches_sequential(t):
                                rtol=5e-3, atol=5e-3)
 
 
+@pytest.mark.parametrize("name", ["zamba2-1.2b", "rwkv6-3b"])
+@pytest.mark.parametrize("quant", [False, True])
+def test_decode_chunk_bitexact_vs_stepwise(name, quant):
+    """Model-level chunked decode == stepwise decode, BITWISE.
+
+    ``transformer.decode_chunk`` (a lax.scan of the exact ``decode_step``
+    body — the program the token serving tier launches per chunk) must
+    reproduce a python loop of ``jit(decode_step)`` exactly: every logit
+    AND every cache leaf (KV rows, SSM state, conv tail), for the mamba
+    hybrid and the pure-rwkv stack, quantized and not. Any drift here
+    would break the serving tier's bit-exactness guarantee."""
+    from repro.models import transformer
+    from repro.quant.binary_linear import quantize_params
+
+    cfg = reduced_config(get_config(name)).resolve_for_mesh(tp=1)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    if quant:
+        params = quantize_params(params)
+    b, t, cache_len = 2, 9, 32
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, t), 0, cfg.vocab)
+
+    step = jax.jit(lambda c, tok, pos: transformer.decode_step(
+        params, cfg, c, tok, pos))
+    cache_s = transformer.init_cache(cfg, b, cache_len)
+    rows = []
+    for i in range(t):
+        lg, cache_s = step(cache_s, tokens[:, i:i + 1], jnp.int32(i))
+        rows.append(np.asarray(lg[:, 0]))
+    want = np.stack(rows, axis=1)
+
+    cache_c = transformer.init_cache(cfg, b, cache_len)
+    got, cache_c = transformer.decode_chunk(params, cfg, cache_c, tokens,
+                                            jnp.int32(0))
+    assert np.array_equal(np.asarray(got), want)
+
+    leaves_s = jax.tree_util.tree_leaves(cache_s)
+    leaves_c = jax.tree_util.tree_leaves(cache_c)
+    assert len(leaves_s) == len(leaves_c)
+    for ls, lc in zip(leaves_s, leaves_c):
+        assert np.array_equal(np.asarray(ls), np.asarray(lc))
+
+
 def test_mamba_decode_matches_chunked_prefix():
     """Decoding token-by-token reproduces the chunked forward's last output."""
     cfg = reduced_config(get_config("zamba2-1.2b")).resolve_for_mesh(tp=1)

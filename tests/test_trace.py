@@ -319,9 +319,12 @@ def test_prometheus_text(store, data):
     _serve(engine, data)
     txt = prometheus_text(engine.snapshot(), engine.tracer)
     assert txt.endswith("\n")
-    assert f"serve_queries_total 64" in txt
-    assert 'serve_latency_ms{group="query",quantile="p99"}' in txt
-    assert 'serve_tenant_accepted_total{tenant="default"} 64' in txt
+    # every series is namespaced by the engine's model family
+    assert 'serve_queries_total{family="gnn"} 64' in txt
+    assert 'serve_latency_ms{family="gnn",group="query",quantile="p99"}' \
+        in txt
+    assert 'serve_tenant_accepted_total{family="gnn",tenant="default"} 64' \
+        in txt
     assert "serve_trace_batches_seen_total" in txt
     # every sample line parses as <name>{labels} <float>
     for line in txt.splitlines():
